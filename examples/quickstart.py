@@ -1,0 +1,56 @@
+"""Quickstart: build the paper's switch-less Dragonfly, check the
+analytical model, run a small simulation, and price a training step on the
+wafer fabric.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import analytical as A
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.cost_model import roofline, switchless_wafer_fabric
+from repro.core.simulator import SimConfig, Simulator
+
+
+def main():
+    # 1. the paper's radix-16 evaluation network
+    params = T.paper_radix16_switchless()
+    print("== Switch-less Dragonfly (radix-16 eval config) ==")
+    for k, v in A.summarize(params).items():
+        print(f"  {k:10s} = {v}")
+
+    net = T.build_switchless(T.SwitchlessParams(a=1, b=1, m=2, n=6,
+                                                noc=2, g=1), "cgroup")
+    print(f"\n== intra-C-group simulation ({net.num_nodes} routers) ==")
+    sim = Simulator(net, SimConfig(warmup=300, measure=900,
+                                   vcs_per_class=4), TR.uniform(net))
+    for rate in (1.0, 2.0, 3.0):
+        r = sim.run(rate)
+        print(f"  offered {rate:.1f} flits/cyc/chip -> accepted "
+              f"{r.throughput_per_chip:.2f}, latency {r.avg_latency:.1f} cyc")
+    print("  (paper Fig. 10(a): saturation ~3.0)")
+
+    # 3. price a minicpm-2b training step on the wafer fabric
+    from benchmarks.roofline import analytic_cell
+    a = analytic_cell("minicpm-2b", "train_4k",
+                      {"data": 16, "model": 16})
+    rt = roofline(a["model_flops"], a["hbm_bytes"],
+                  {k: v * a["chips"] for k, v in
+                   a["coll_per_chip"].items()},
+                  chips=a["chips"], fabric=switchless_wafer_fabric(),
+                  model_flops=a["model_flops"])
+    print("\n== minicpm-2b train_4k on one 256-chip wafer pod ==")
+    print(f"  compute    {rt.compute_s * 1e3:8.2f} ms")
+    print(f"  memory     {rt.memory_s * 1e3:8.2f} ms")
+    print(f"  collective {rt.collective_s * 1e3:8.2f} ms (wafer fabric)")
+    print(f"  dominant   {rt.dominant};  roofline frac "
+          f"{rt.roofline_frac:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill + greedy decode with KV/state caches
+over batched requests (the serve_step the decode dry-run cells lower).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import transformer as TF
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch + "-smoke")
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S = args.batch, args.prompt_len
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_prefix, cfg.d_model)) * 0.02,
+            cfg.jdtype)
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)) * 0.02, cfg.jdtype)
+
+    max_len = S + args.gen + (cfg.num_prefix if cfg.frontend else 0)
+    cache = TF.init_cache(cfg, B, max_len=max_len)
+
+    @jax.jit
+    def prefill(params, batch, cache):
+        logits, cache, _ = TF.forward(params, cfg, batch, "prefill",
+                                      cache=cache, attn_impl="naive",
+                                      remat=False)
+        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
+
+    @jax.jit
+    def decode(params, tok, cache, extra):
+        b = {"tokens": tok, **extra}
+        logits, cache, _ = TF.forward(params, cfg, b, "decode",
+                                      cache=cache, attn_impl="naive",
+                                      remat=False)
+        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
+
+    extra = {}
+    if cfg.family == "encdec":
+        extra["src_embeds"] = batch["src_embeds"]
+
+    t0 = time.perf_counter()
+    tok, cache = prefill(params, batch, cache)
+    t_pref = time.perf_counter() - t0
+    out = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        tok, cache = decode(params, tok, cache, extra)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.perf_counter() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"arch={cfg.name}  batch={B}  prompt={S}  gen={args.gen}")
+    print(f"prefill: {t_pref * 1e3:.1f} ms   decode: "
+          f"{t_dec / max(args.gen - 1, 1) * 1e3:.1f} ms/token")
+    print("generated token ids (first request):",
+          np.asarray(gen[0])[:12], "...")
+    assert bool(jnp.isfinite(gen).all())
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

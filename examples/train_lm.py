@@ -1,0 +1,85 @@
+"""End-to-end training driver: train a ~100M-param MiniCPM-family model
+for a few hundred steps on the synthetic pipeline with checkpointing and
+fault tolerance enabled.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+On CPU this uses a width/depth-reduced config (~100M params at full vocab)
+and a host mesh; on a real pod the same driver takes --arch minicpm-2b
+with the production mesh.
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.checkpoint.checkpointing import Checkpointer
+from repro.configs.registry import get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.mesh import make_host_mesh
+from repro.optim.optimizer import OptConfig
+from repro.runtime.fault_tolerance import (FailureInjector,
+                                           FaultTolerantLoop,
+                                           StragglerMonitor)
+from repro.runtime.trainer import Trainer, TrainSetup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-train-ckpt")
+    ap.add_argument("--inject-failure-at", type=int, default=0)
+    args = ap.parse_args()
+
+    base = get_config(args.arch)
+    cfg = dataclasses.replace(
+        base, num_layers=args.layers, d_model=args.d_model,
+        num_heads=8, num_kv_heads=8 if base.num_kv_heads == base.num_heads
+        else 2, d_ff=args.d_model * 3 if base.d_ff else 0, head_dim=64)
+    print(f"model: {cfg.name} reduced to "
+          f"{cfg.num_params() / 1e6:.0f}M params "
+          f"({cfg.num_layers}L x {cfg.d_model}d, vocab {cfg.vocab_size})")
+
+    opt = OptConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps,
+                    schedule=cfg.schedule, weight_decay=0.01)
+    setup = TrainSetup(model=cfg, opt=opt, attn_impl="chunked", remat=False)
+    mesh = make_host_mesh(model=1)
+    data = SyntheticTokens(cfg.vocab_size, batch=args.batch,
+                           seq_len=args.seq, seed=0)
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    tr = Trainer(setup, mesh, data, checkpointer=ckpt, ckpt_every=50)
+    mon = StragglerMonitor()
+
+    if args.inject_failure_at:
+        loop = FaultTolerantLoop(
+            tr, FailureInjector(fail_at=(args.inject_failure_at,)), mon)
+        loop.run(args.steps)
+        print("fault-tolerance log:", loop.log)
+        hist = tr.history
+    else:
+        def on_step(step, metrics, dt):
+            mon.observe(step, dt)
+            if step % 20 == 0 or step == 1:
+                print(f"step {step:4d}  loss {metrics['loss']:.3f}  "
+                      f"nll {metrics['nll']:.3f}  lr {metrics['lr']:.2e}  "
+                      f"{dt * 1e3:.0f} ms")
+        hist = tr.run(args.steps, on_step=on_step)
+
+    first = sum(h["nll"] for h in hist[:10]) / 10
+    last = sum(h["nll"] for h in hist[-10:]) / 10
+    print(f"\nnll: {first:.3f} -> {last:.3f} over {len(hist)} steps "
+          f"({len(mon.events)} straggler events)")
+    assert last < first, "training must reduce loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Checkpointing: atomic on-disk snapshots of (params, opt_state, data
+state, step), async save thread, restore with resharding onto a possibly
+different mesh (elastic restart).
+
+Format: one .npz per snapshot with flattened "path -> array" keys + a
+small JSON manifest; writes go to a temp dir then rename (atomic), and a
+retention policy keeps the newest K snapshots.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+import jax
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(tree, arrays, shardings=None):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = arrays[key]
+        tdtype = np.dtype(leaf.dtype)
+        if arr.dtype != tdtype:
+            # np.savez stores ml_dtypes (bfloat16) as raw void bytes;
+            # reinterpret through the template dtype
+            if arr.dtype.itemsize == tdtype.itemsize:
+                arr = arr.view(tdtype)
+            else:
+                arr = arr.astype(tdtype)
+        leaves.append(arr)
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        restored = jax.device_put(restored, shardings)
+    return restored
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: dict, blocking: bool = True):
+        """state: pytree dict; fetched to host before the async write."""
+        host_state = jax.tree.map(np.asarray, state)  # device->host now
+        if blocking:
+            self._write(step, host_state)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state: dict):
+        tmp = os.path.join(self.dir, f".tmp-{step}-{os.getpid()}")
+        os.makedirs(tmp, exist_ok=True)
+        arrays = _flatten(host_state)
+        np.savez(os.path.join(tmp, "state.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "time": time.time(),
+                       "keys": sorted(arrays)}, f)
+        final = os.path.join(self.dir, f"step-{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        snaps = self.list_steps()
+        for s in snaps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step-{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def list_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step-"):
+                out.append(int(name.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: dict, step: int | None = None,
+                shardings=None) -> tuple[dict, int]:
+        """Restore into the structure of `template`, placing shards per
+        `shardings` (which may correspond to a different mesh than the one
+        the snapshot was written from — elastic restart)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step-{step:08d}", "state.npz")
+        with np.load(path) as z:
+            arrays = {k: z[k] for k in z.files}
+        return _unflatten_into(template, arrays, shardings), step

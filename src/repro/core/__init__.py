@@ -1,0 +1,19 @@
+"""Core library: the paper's contribution (switch-less Dragonfly on wafers).
+
+Topology construction, analytical models (Eqs. 1-7, Table II/III), routing
+(Alg. 1 + VC reduction), the flit-level JAX network simulator, traffic
+patterns, topology-aware collectives, and the fabric cost model used by the
+training-stack roofline.
+"""
+from . import analytical, collectives, cost_model, routing, simulator
+from . import topology, traffic
+from .topology import (Network, SwitchDragonflyParams, SwitchlessParams,
+                       build_switch_dragonfly, build_switchless)
+from .simulator import SimConfig, SimResult, Simulator
+
+__all__ = [
+    "analytical", "collectives", "cost_model", "routing", "simulator",
+    "topology", "traffic", "Network", "SwitchDragonflyParams",
+    "SwitchlessParams", "build_switch_dragonfly", "build_switchless",
+    "SimConfig", "SimResult", "Simulator",
+]

@@ -1,0 +1,468 @@
+"""Routing for the switch-less Dragonfly (paper Sec. IV) and the
+switch-based baseline.
+
+Route functions are pure, vectorizable jnp functions usable both inside the
+jitted simulator and (via numpy inputs) by the offline path tracer that
+builds the channel-dependency graph for the deadlock-freedom tests.
+
+Packet routing state ("meta" int32 bitfield):
+  bits 0..2  cg_count  number of inter-C-group channels traversed so far
+  bits 3..4  g_count   number of global channels traversed so far
+  bit  5     via_ext   entered the current C-group through an external port
+
+VC schemes (Sec. IV-A/B):
+  baseline : VC = cg_count; 4 VCs minimal / 6 VCs non-minimal.
+  reduced  : up*/down* labeling (Properties 1-2).  VC0 source C-group,
+             VC1 intermediate C-group of the source W-group, VC2 anywhere in
+             the destination W-group, VC3 intermediate (misroute) W-group.
+             3 VCs when misroutes are restricted to lower W-groups
+             ("reduced_restricted"), 4 otherwise ("reduced").
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .topology import (EJECT, GLOBAL, INJECT, LOCAL, MESH, Network)
+
+# --- meta bitfield helpers ---------------------------------------------------
+
+def meta_cg_count(meta):
+    return meta & 0x7
+
+
+def meta_g_count(meta):
+    return (meta >> 3) & 0x3
+
+
+def meta_via_ext(meta):
+    return (meta >> 5) & 0x1
+
+
+def meta_update(meta, ch_type):
+    """Packet meta after traversing a channel of the given type."""
+    is_ext = (ch_type == LOCAL) | (ch_type == GLOBAL)
+    cg = jnp.minimum(meta_cg_count(meta) + is_ext, 7)
+    g = jnp.minimum(meta_g_count(meta) + (ch_type == GLOBAL), 3)
+    via = is_ext.astype(meta.dtype)
+    keep_mesh = (ch_type == MESH)
+    via = jnp.where(keep_mesh, meta_via_ext(meta), via)
+    # INJECT resets everything (fresh packet): handled by sim (meta=0).
+    return (cg | (g << 3) | (via << 5)).astype(meta.dtype)
+
+
+def num_vcs(kind: str, vc_mode: str, nonminimal: bool) -> int:
+    if kind == "switchless":
+        if vc_mode == "baseline":
+            return 6 if nonminimal else 4
+        if vc_mode == "updown":
+            # W-group-wide up*/down* (Autonet-style): one VC per W-group
+            # visited.  2 VCs minimal, 3 non-minimal.
+            return 3 if nonminimal else 2
+        if vc_mode == "updown_merged":
+            # misroutes restricted to W-groups below the destination merge
+            # the intermediate and destination W-group VCs: 2 VCs total.
+            return 2
+        raise ValueError(vc_mode)
+    if kind == "dragonfly":
+        return 6 if nonminimal else 4  # per-hop increment scheme
+    raise ValueError(kind)
+
+
+# --- switch-less Dragonfly route function -----------------------------------
+
+def make_switchless_route_fn(net: Network, vc_mode: str = "baseline"):
+    """Returns route(cur_node, dest_term, mis_wg, meta) -> (out_ch, req_vc).
+
+    mis_wg == -1 means no (remaining) misroute; the simulator clears it when
+    the packet enters the intermediate W-group.  `out_ch` is a channel id
+    (MESH / LOCAL / GLOBAL / EJECT).  `req_vc` is the VC of the downstream
+    buffer the packet will occupy.
+    """
+    if vc_mode == "baseline":
+        return _make_switchless_baseline(net)
+    if vc_mode in ("updown", "updown_merged"):
+        return _make_switchless_updown(net, vc_mode)
+    raise ValueError(vc_mode)
+
+
+def _make_switchless_baseline(net: Network):
+    """Alg. 1 with XY in-C-group routing; VC = #C-groups entered (4/6 VCs)."""
+    t = net.tables
+    node_wg = jnp.asarray(t["node_wg"])
+    node_cg = jnp.asarray(t["node_cg"])
+    node_cgg = jnp.asarray(t["node_cg_global"])
+    node_x = jnp.asarray(t["node_x"])
+    node_y = jnp.asarray(t["node_y"])
+    node_mesh_ch = jnp.asarray(t["node_mesh_ch"])
+    eject_ch = jnp.asarray(t["eject_ch"])
+    ext_out = jnp.asarray(t["ext_out"])
+    local_port = jnp.asarray(t["local_port"])
+    glob_route_cg = jnp.asarray(t["glob_route_cg"])
+    glob_route_port = jnp.asarray(t["glob_route_port"])
+    glob_npar = jnp.asarray(t["glob_npar"])
+    port_node_local = jnp.asarray(t["port_node_local"])
+    term_node = jnp.asarray(t["term_node"])
+    ch_type = jnp.asarray(net.ch_type)
+    R = net.meta["R"]
+    nodes_per_cg = net.meta["nodes_per_cg"]
+
+    def route_vc(cur, dest_term, mis_wg, meta):
+        dest_node = term_node[dest_term]
+        wg_c = node_wg[cur]
+        wg_d = node_wg[dest_node]
+        mis_active = mis_wg >= 0
+        tgt_wg = jnp.where(mis_active, mis_wg, wg_d)
+        cg_c = node_cg[cur]
+        cgg_c = node_cgg[cur]
+        cgg_d = node_cgg[dest_node]
+        cg_d = node_cg[dest_node]
+
+        in_tgt_wg = wg_c == tgt_wg          # mis cleared on entry => == wg_d
+        at_dest_cg = (cgg_c == cgg_d) & (~mis_active)
+
+        # exit port selection (Alg. 1 steps); parallel global links per
+        # W-group pair are spread across flows by destination hash
+        par = dest_term % glob_npar[wg_c, tgt_wg]
+        cg_gl = glob_route_cg[wg_c, tgt_wg, par]     # owner of global channel
+        port_gl = glob_route_port[wg_c, tgt_wg, par]
+        at_global_cg = cg_c == cg_gl
+        peer_cg = jnp.where(in_tgt_wg, cg_d, cg_gl)
+        port_lc = local_port[cg_c, peer_cg]
+        use_global = (~in_tgt_wg) & at_global_cg
+        port = jnp.where(use_global, port_gl, port_lc)
+        to_terminal = at_dest_cg
+
+        tgt_local = jnp.where(to_terminal,
+                              dest_node % nodes_per_cg,
+                              port_node_local[port])
+        cur_local = cur % nodes_per_cg
+        at_target = cur_local == tgt_local
+        out_at_target = jnp.where(to_terminal, eject_ch[cur],
+                                  ext_out[cgg_c, port])
+
+        # XY (dimension-order): x first, then y.  DIRS = (N, E, S, W).
+        tx = tgt_local % R
+        ty = tgt_local // R
+        x = node_x[cur]
+        y = node_y[cur]
+        dir_xy = jnp.where(
+            x != tx, jnp.where(tx > x, 1, 3), jnp.where(ty > y, 2, 0))
+        out_mesh = node_mesh_ch[cur, dir_xy]
+
+        out_ch = jnp.where(at_target, out_at_target, out_mesh)
+        new_meta = meta_update(meta, ch_type[out_ch])
+        is_ej = ch_type[out_ch] == 4
+        req_vc = jnp.where(is_ej, 0, meta_cg_count(new_meta))
+        return out_ch, req_vc.astype(jnp.int32), new_meta
+
+    return route_vc
+
+
+def build_updown_tables(net: Network, local_weight: int = 4):
+    """All-pairs up*/down* next-hop tables over one W-group graph.
+
+    Autonet-style: rank routers by BFS (depth, id) from router 0; a channel
+    u->w is *up* iff rank(w) < rank(u).  Legal paths take all up hops before
+    any down hop, which makes the channel dependency graph acyclic for ANY
+    topology — this is the provable fix for the paper's under-specified
+    Property 1 labeling on mesh C-groups (see DESIGN.md Deviations).
+
+    Returns (rank [NW], nh [NW, NW, 2]) where nh[u, v, phase] is the next
+    wg-local router towards v (phase 1 = a down hop was already taken).
+    """
+    meta = net.meta
+    ab, npc, R = meta["ab"], meta["nodes_per_cg"], meta["R"]
+    NW = ab * npc
+    t = net.tables
+    nbrs = [[] for _ in range(NW)]
+    for u in range(NW):
+        cg, loc = divmod(u, npc)
+        x, y = loc % R, loc // R
+        for dx, dy in ((0, -1), (1, 0), (0, 1), (-1, 0)):
+            nx, ny = x + dx, y + dy
+            if 0 <= nx < R and 0 <= ny < R:
+                nbrs[u].append((cg * npc + ny * R + nx, 1))
+    lp, pnl = t["local_port"], t["port_node_local"]
+    for c1 in range(ab):
+        for c2 in range(ab):
+            if c1 == c2:
+                continue
+            u = int(c1 * npc + pnl[lp[c1, c2]])
+            w = int(c2 * npc + pnl[lp[c2, c1]])
+            nbrs[u].append((w, local_weight))
+    # BFS rank from router 0
+    depth = np.full(NW, -1)
+    depth[0] = 0
+    q = [0]
+    while q:
+        u = q.pop(0)
+        for w, _ in nbrs[u]:
+            if depth[w] < 0:
+                depth[w] = depth[u] + 1
+                q.append(w)
+    assert (depth >= 0).all(), "W-group graph must be connected"
+    rank = np.argsort(np.argsort(depth * NW + np.arange(NW)))
+
+    INF = 10**9
+    f1 = np.full((NW, NW), INF, dtype=np.int64)   # down-phase distance
+    nh1 = np.full((NW, NW), -1, dtype=np.int32)
+    np.fill_diagonal(f1, 0)
+    order_desc = np.argsort(-rank)
+    for u in order_desc:
+        for w, wt in nbrs[u]:
+            if rank[w] > rank[u]:  # down edge
+                cand = wt + f1[w]
+                upd = cand < f1[u]
+                f1[u][upd] = cand[upd]
+                nh1[u][upd] = w
+    f0 = f1.copy()
+    nh0 = nh1.copy()
+    order_asc = np.argsort(rank)
+    for u in order_asc:
+        for w, wt in nbrs[u]:
+            if rank[w] < rank[u]:  # up edge
+                cand = wt + f0[w]
+                upd = cand < f0[u]
+                f0[u][upd] = cand[upd]
+                nh0[u][upd] = w
+    assert (f0[~np.eye(NW, dtype=bool)] < INF).all(), "up*/down* must connect"
+    nh = np.stack([nh0, nh1], axis=-1)
+    return rank.astype(np.int32), nh
+
+
+def _make_switchless_updown(net: Network, vc_mode: str):
+    """W-group-wide up*/down* routing: 2 VCs minimal / 3 non-minimal
+    ("updown"), or 2 VCs with misroutes restricted to W-groups below the
+    destination ("updown_merged")."""
+    rank_np, nh_np = build_updown_tables(net)
+    rank = jnp.asarray(rank_np)
+    nh = jnp.asarray(nh_np)
+    t = net.tables
+    node_wg = jnp.asarray(t["node_wg"])
+    node_mesh_ch = jnp.asarray(t["node_mesh_ch"])
+    eject_ch = jnp.asarray(t["eject_ch"])
+    ext_out = jnp.asarray(t["ext_out"])
+    local_port = jnp.asarray(t["local_port"])
+    glob_route_cg = jnp.asarray(t["glob_route_cg"])
+    glob_route_port = jnp.asarray(t["glob_route_port"])
+    glob_npar = jnp.asarray(t["glob_npar"])
+    port_node_local = jnp.asarray(t["port_node_local"])
+    term_node = jnp.asarray(t["term_node"])
+    ch_type = jnp.asarray(net.ch_type)
+    R = net.meta["R"]
+    npc = net.meta["nodes_per_cg"]
+    ab = net.meta["ab"]
+    NW = ab * npc
+    merged = vc_mode == "updown_merged"
+    PHASE = 1 << 6
+
+    def route_vc(cur, dest_term, mis_wg, meta):
+        dest_node = term_node[dest_term]
+        wg_c = node_wg[cur]
+        wg_d = node_wg[dest_node]
+        mis_active = mis_wg >= 0
+        tgt_wg = jnp.where(mis_active, mis_wg, wg_d)
+        in_final = (wg_c == wg_d) & (~mis_active)
+        u = cur % NW
+
+        par = dest_term % glob_npar[wg_c, tgt_wg]
+        cg_gl = glob_route_cg[wg_c, tgt_wg, par]
+        port_gl = glob_route_port[wg_c, tgt_wg, par]
+        v_exit = cg_gl * npc + port_node_local[port_gl]
+        v = jnp.where(in_final, dest_node % NW, v_exit)
+        arrived = u == v
+        out_arr = jnp.where(in_final, eject_ch[cur],
+                            ext_out[wg_c * ab + cg_gl, port_gl])
+
+        phase = (meta >> 6) & 1
+        w = nh[u, v, phase]
+        same_cg = (u // npc) == (w // npc)
+        ux, uy = (u % npc) % R, (u % npc) // R
+        wx, wy = (w % npc) % R, (w % npc) // R
+        dir_idx = jnp.where(wy < uy, 0, jnp.where(wx > ux, 1,
+                  jnp.where(wy > uy, 2, 3)))
+        out_mesh = node_mesh_ch[cur, dir_idx]
+        out_local = ext_out[wg_c * ab + u // npc,
+                            local_port[u // npc, w // npc]]
+        out_step = jnp.where(same_cg, out_mesh, out_local)
+        out_ch = jnp.where(arrived, out_arr, out_step)
+
+        new_meta = meta_update(meta, ch_type[out_ch])
+        went_down = phase | (rank[w] > rank[u])
+        is_glob = ch_type[out_ch] == 2  # GLOBAL resets the phase
+        new_phase = jnp.where(is_glob, 0,
+                              jnp.where(arrived, phase, went_down))
+        new_meta = (new_meta & ~PHASE) | (new_phase.astype(jnp.int32) << 6)
+
+        g = meta_g_count(new_meta)
+        req_vc = jnp.minimum(g, 1) if merged else jnp.minimum(g, 2)
+        is_ej = ch_type[out_ch] == 4
+        req_vc = jnp.where(is_ej, 0, req_vc)
+        return out_ch, req_vc.astype(jnp.int32), new_meta
+
+    return route_vc
+
+
+# --- switch-based Dragonfly route function ----------------------------------
+
+def make_dragonfly_route_fn(net: Network, vc_mode: str = "baseline"):
+    t = net.tables
+    node_grp = jnp.asarray(t["node_grp"])
+    node_idx = jnp.asarray(t["node_idx"])
+    local_ch = jnp.asarray(t["local_ch"])
+    glob_route_sw = jnp.asarray(t["glob_route_sw"])
+    glob_out_ch = jnp.asarray(t["glob_out_ch"])
+    eject_sw_term = jnp.asarray(t["eject_sw_term"])
+    term_node = jnp.asarray(t["term_node"])
+    term_slot = jnp.asarray(t["term_slot"])
+    ch_type = jnp.asarray(net.ch_type)
+
+    glob_npar = jnp.asarray(t["glob_npar"])
+
+    def route_vc(cur, dest_term, mis_wg, meta):
+        dest_sw = term_node[dest_term]
+        grp_c = node_grp[cur]
+        grp_d = node_grp[dest_sw]
+        mis_active = mis_wg >= 0
+        tgt_grp = jnp.where(mis_active, mis_wg, grp_d)
+
+        at_dest_sw = (cur == dest_sw) & (~mis_active)
+        par = dest_term % glob_npar[grp_c, tgt_grp]
+        sw_gl = glob_route_sw[grp_c, tgt_grp, par]
+        in_tgt = grp_c == tgt_grp
+        peer_sw = jnp.where(in_tgt, dest_sw, sw_gl)
+        use_global = (~in_tgt) & (cur == sw_gl)
+
+        out_ch = jnp.where(
+            at_dest_sw, eject_sw_term[cur, term_slot[dest_term]],
+            jnp.where(use_global, glob_out_ch[grp_c, tgt_grp, par],
+                      local_ch[cur, node_idx[peer_sw]]))
+        new_meta = meta_update(meta, ch_type[out_ch])
+        req_vc = meta_cg_count(new_meta)  # per-hop increment scheme
+        is_ej = ch_type[out_ch] == 4
+        req_vc = jnp.where(is_ej, 0, req_vc)
+        return out_ch, req_vc.astype(jnp.int32), new_meta
+
+    return route_vc
+
+
+def make_route_fn(net: Network, vc_mode: str = "baseline"):
+    if net.meta["kind"] == "switchless":
+        return make_switchless_route_fn(net, vc_mode)
+    return make_dragonfly_route_fn(net, vc_mode)
+
+
+# --- offline path tracing + channel dependency graph ------------------------
+
+def trace_paths(net: Network, route_fn, src_terms: np.ndarray,
+                dst_terms: np.ndarray, mis_wgs: np.ndarray,
+                max_hops: int | None = None):
+    """Walk packets hop-by-hop with no contention.
+
+    Returns (channels [B, H], vcs [B, H], lengths [B]) with -1 padding.
+    """
+    import jax
+    B = len(src_terms)
+    if max_hops is None:
+        R = net.meta.get("R", 2)
+        max_hops = 8 * (4 * R + 4) + 16
+    term_node = net.term_node
+    node_wg_tbl = net.tables.get("node_wg", net.tables.get("node_grp"))
+    ch_dst = net.ch_dst
+    ch_typ = net.ch_type
+
+    step = jax.jit(lambda cur, dst, mis, meta: route_fn(cur, dst, mis, meta))
+
+    cur = term_node[src_terms].copy()
+    meta = np.zeros(B, dtype=np.int32)
+    mis = mis_wgs.astype(np.int32).copy()
+    # misroute is pointless/undefined if src and dst share the W-group
+    same = node_wg_tbl[term_node[src_terms]] == node_wg_tbl[term_node[dst_terms]]
+    mis = np.where(same, -1, mis)
+    done = np.zeros(B, dtype=bool)
+    chans = np.full((B, max_hops), -1, dtype=np.int64)
+    vcs = np.full((B, max_hops), -1, dtype=np.int32)
+    for hstep in range(max_hops):
+        if done.all():
+            break
+        out_ch, vc, new_meta = map(np.asarray, step(
+            jnp.asarray(cur), jnp.asarray(dst_terms), jnp.asarray(mis),
+            jnp.asarray(meta)))
+        act = ~done
+        chans[act, hstep] = out_ch[act]
+        vcs[act, hstep] = vc[act]
+        nxt = ch_dst[out_ch]
+        is_eject = ch_typ[out_ch] == EJECT
+        # clear mis on entering the intermediate W-group
+        entered_mis = (mis >= 0) & (node_wg_tbl[np.clip(nxt, 0, net.num_nodes - 1)] == mis) \
+            & ~is_eject
+        mis = np.where(act & entered_mis, -1, mis)
+        meta = np.where(act, new_meta, meta)
+        cur = np.where(act & ~is_eject, nxt, cur)
+        done = done | (act & is_eject)
+    if not done.all():
+        bad = np.where(~done)[0][:5]
+        raise RuntimeError(
+            f"paths did not terminate within {max_hops} hops; e.g. "
+            f"src={src_terms[bad]}, dst={dst_terms[bad]}, mis={mis_wgs[bad]}")
+    lengths = (chans >= 0).sum(axis=1)
+    return chans, vcs, lengths
+
+
+def build_cdg(chans: np.ndarray, vcs: np.ndarray):
+    """Channel-dependency graph over (channel, vc) pairs from traced paths."""
+    import networkx as nx
+    B, H = chans.shape
+    g = nx.DiGraph()
+    c0, v0 = chans[:, :-1], vcs[:, :-1]
+    c1, v1 = chans[:, 1:], vcs[:, 1:]
+    valid = (c0 >= 0) & (c1 >= 0)
+    a = np.stack([c0[valid], v0[valid], c1[valid], v1[valid]], axis=1)
+    a = np.unique(a, axis=0)
+    g.add_edges_from(((int(r[0]), int(r[1])), (int(r[2]), int(r[3])))
+                     for r in a)
+    return g
+
+
+def assert_deadlock_free(net: Network, vc_mode: str, nonminimal: bool,
+                         rng: np.random.Generator, n_pairs: int = 4000,
+                         exhaustive_limit: int = 250_000) -> int:
+    """Trace flows and assert the CDG is acyclic.  Returns #edges checked."""
+    import networkx as nx
+    route_fn = make_route_fn(net, vc_mode)
+    T = net.num_terminals
+    if T * T <= exhaustive_limit and not nonminimal:
+        s, d = np.divmod(np.arange(T * T), T)
+        keep = s != d
+        s, d = s[keep], d[keep]
+    else:
+        s = rng.integers(0, T, size=n_pairs)
+        d = rng.integers(0, T, size=n_pairs)
+        keep = s != d
+        s, d = s[keep], d[keep]
+    if nonminimal:
+        wg_tbl = net.tables.get("node_wg", net.tables.get("node_grp"))
+        g = int(wg_tbl.max()) + 1
+        wg_s = wg_tbl[net.term_node[s]]
+        wg_d = wg_tbl[net.term_node[d]]
+        if vc_mode == "updown_merged":
+            # misroute only to W-groups strictly below the destination
+            hi = np.maximum(wg_d, 1)
+            mis = rng.integers(0, hi)
+            bad = (mis == wg_s) | (mis == wg_d) | (wg_d == 0)
+            mis = np.where(bad, -1, mis)
+        else:
+            mis = rng.integers(0, g, size=len(s))
+            bad = (mis == wg_s) | (mis == wg_d)
+            mis = np.where(bad, -1, mis)
+    else:
+        mis = np.full(len(s), -1, dtype=np.int64)
+    chans, vcs, _ = trace_paths(net, route_fn, s, d, mis)
+    cdg = build_cdg(chans, vcs)
+    if not nx.is_directed_acyclic_graph(cdg):
+        cyc = nx.find_cycle(cdg)
+        raise AssertionError(
+            f"CDG cycle for {net.name} vc_mode={vc_mode} "
+            f"nonmin={nonminimal}: {cyc[:12]}")
+    return cdg.number_of_edges()

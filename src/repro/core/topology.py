@@ -1,0 +1,551 @@
+"""Switch-less Dragonfly on Wafers: topology construction.
+
+Implements the 5-level hierarchy of the paper (chiplet -> C-group -> wafer ->
+W-group -> system) as a concrete router/channel graph, plus the traditional
+switch-based Dragonfly baseline the paper compares against.
+
+Construction is numpy; the simulator converts to jnp.  All channels are
+directed.  Channel types:
+
+  MESH   on-wafer short-reach hop inside a C-group (H_sr)
+  LOCAL  intra-W-group C-group-to-C-group link (H_l, long-reach)
+  GLOBAL inter-W-group link (H_g, long-reach)
+  INJECT terminal -> router
+  EJECT  router -> terminal
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import numpy as np
+
+MESH, LOCAL, GLOBAL, INJECT, EJECT = 0, 1, 2, 3, 4
+CH_TYPE_NAMES = ("mesh", "local", "global", "inject", "eject")
+NUM_CH_TYPES = 5
+
+
+@dataclass
+class Network:
+    """A directed channel graph with terminals, consumed by the simulator."""
+
+    name: str
+    num_nodes: int
+    num_terminals: int
+    num_chips: int
+    term_node: np.ndarray      # [T] router node hosting terminal t
+    term_chip: np.ndarray      # [T] chip id of terminal t (for /chip rates)
+    ch_src: np.ndarray         # [E]
+    ch_dst: np.ndarray         # [E]
+    ch_bw: np.ndarray          # [E] flits/cycle
+    ch_lat: np.ndarray         # [E] cycles of pipeline latency
+    ch_type: np.ndarray        # [E] MESH/LOCAL/GLOBAL/INJECT/EJECT
+    inject_ch: np.ndarray      # [T] channel id terminal->router
+    eject_ch: np.ndarray       # [V] channel id router->terminal (-1 if none)
+    tables: dict = field(default_factory=dict)  # routing tables (np arrays)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def num_channels(self) -> int:
+        return int(len(self.ch_src))
+
+    def validate(self) -> None:
+        E = self.num_channels
+        assert self.ch_dst.shape == (E,) and self.ch_type.shape == (E,)
+        assert (self.ch_bw > 0).all() and (self.ch_lat >= 1).all()
+        assert self.term_node.shape == (self.num_terminals,)
+        # every terminal has an inject channel pointing at its router
+        assert (self.ch_dst[self.inject_ch] == self.term_node).all()
+        assert (self.ch_type[self.inject_ch] == INJECT).all()
+
+
+# ---------------------------------------------------------------------------
+# Switch-less Dragonfly on wafers
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SwitchlessParams:
+    """Paper notation (Sec. III).
+
+    a   C-groups per wafer
+    b   wafers per W-group
+    m   chiplets per C-group edge (C-group is m x m chiplets)
+    n   interconnection interfaces per chiplet (n/4 per edge)
+    noc on-chiplet network edge size (eval uses 2 -> 2x2 routers per chiplet)
+    g   number of W-groups; None -> maximum ab*h+1
+    cg_bw_mult  intra-C-group (on-wafer) bandwidth multiplier ("2B/4B" runs)
+    """
+
+    a: int
+    b: int
+    m: int
+    n: int
+    noc: int = 2
+    g: int | None = None
+    cg_bw_mult: int = 1
+    lr_latency: int = 8
+    sr_latency: int = 1
+    # routers per chip override: by default a chip is a noc x noc router tile;
+    # set e.g. 2 to model chips owning 2 routers (radix-32 equivalence where
+    # the C-group hosts 8 chips on a 4x4 router grid).
+    chip_routers: int | None = None
+
+    @property
+    def k(self) -> int:
+        """External ports of a C-group (Sec. III-A2: k = n*m)."""
+        return self.n * self.m
+
+    @property
+    def ab(self) -> int:
+        return self.a * self.b
+
+    @property
+    def h(self) -> int:
+        """Global ports per C-group: h = k - ab + 1 (Sec. III-A4)."""
+        return self.k - self.ab + 1
+
+    @property
+    def g_max(self) -> int:
+        """Max W-groups: g = ab*h + 1 (Sec. III-A4)."""
+        return self.ab * self.h + 1
+
+    @property
+    def num_wgroups(self) -> int:
+        g = self.g_max if self.g is None else self.g
+        if not (1 <= g <= self.g_max):
+            raise ValueError(f"g={g} outside [1,{self.g_max}]")
+        return g
+
+    @property
+    def R(self) -> int:
+        """Router-grid edge size of a C-group."""
+        return self.m * self.noc
+
+    @property
+    def routers_per_chip(self) -> int:
+        if self.chip_routers is not None:
+            return self.chip_routers
+        return self.noc * self.noc
+
+    @property
+    def chips_per_cgroup(self) -> int:
+        rr = self.R * self.R
+        assert rr % self.routers_per_chip == 0
+        return rr // self.routers_per_chip
+
+    @property
+    def num_chips(self) -> int:
+        return self.chips_per_cgroup * self.ab * self.num_wgroups
+
+    @property
+    def N_eq1(self) -> int:
+        """Eq. (1): N = a*b*m^2 * g with g at maximum."""
+        return self.ab * self.m * self.m * self.g_max
+
+
+def _perimeter_walk(R: int) -> list[tuple[int, int]]:
+    """Clockwise walk of the R x R grid perimeter starting at (0, 0).
+
+    Returns 4*(R-1) (x, y) positions (x = column, y = row, row 0 at top).
+    This is the polar-system labeling of Fig. 8(c): ports are ordered along
+    this walk, which makes port-to-port ring routing monotone in the label.
+    """
+    if R == 1:
+        return [(0, 0)]
+    walk = []
+    for x in range(R - 1):
+        walk.append((x, 0))          # top edge, left->right
+    for y in range(R - 1):
+        walk.append((R - 1, y))      # right edge, top->bottom
+    for x in range(R - 1, 0, -1):
+        walk.append((x, R - 1))      # bottom edge, right->left
+    for y in range(R - 1, 0, -1):
+        walk.append((0, y))          # left edge, bottom->top
+    return walk
+
+
+def build_switchless(p: SwitchlessParams, name: str = "switchless") -> Network:
+    """Build the switch-less Dragonfly router/channel graph + routing tables."""
+    R = p.R
+    ab, k, g = p.ab, p.k, p.num_wgroups
+    if p.h < 1:
+        raise ValueError(f"h={p.h} < 1: k={p.k} too small for ab={ab}")
+    n_local = ab - 1
+    perim = _perimeter_walk(R)
+    P = len(perim)
+    # Distribute the k ports evenly along the perimeter walk (polar labels).
+    # k may exceed P (several ports per perimeter router, cf. Fig. 9 where a
+    # chiplet edge carries multiple channels); floor keeps labels monotone
+    # along the walk so the polar up*/down* ordering is preserved.
+    port_pos = np.floor(np.arange(k) * P / k).astype(np.int64)
+    port_xy = np.array([perim[i] for i in port_pos], dtype=np.int64)  # [k,2]
+
+    num_cg = ab * g
+    nodes_per_cg = R * R
+    V = num_cg * nodes_per_cg
+    T = V  # one terminal per router (chiplet core)
+
+    def node_id(wg: int, cg: int, x: int, y: int) -> int:
+        return ((wg * ab + cg) * nodes_per_cg) + y * R + x
+
+    # --- node / terminal metadata -------------------------------------
+    idx = np.arange(V)
+    node_cg_global = idx // nodes_per_cg
+    node_wg = node_cg_global // ab
+    node_cg = node_cg_global % ab
+    node_local = idx % nodes_per_cg
+    node_x = node_local % R
+    node_y = node_local // R
+    if p.chip_routers is None:
+        # chip id: chiplets are noc x noc router tiles
+        chip_x = node_x // p.noc
+        chip_y = node_y // p.noc
+        node_chip = node_cg_global * p.chips_per_cgroup + chip_y * p.m + chip_x
+    else:
+        node_chip = node_cg_global * p.chips_per_cgroup + \
+            node_local // p.chip_routers
+    term_node = idx.copy()
+    term_chip = node_chip.copy()
+
+    # --- channels ------------------------------------------------------
+    src, dst, bw, lat, typ = [], [], [], [], []
+
+    def add(s, d, b, l, t):
+        src.append(s); dst.append(d); bw.append(b); lat.append(l); typ.append(t)
+        return len(src) - 1
+
+    # mesh channels, per C-group: node -> 4 neighbours (N,E,S,W order)
+    DIRS = ((0, -1), (1, 0), (0, 1), (-1, 0))  # N, E, S, W in (dx, dy)
+    node_mesh_ch = np.full((V, 4), -1, dtype=np.int64)
+    for cgg in range(num_cg):
+        wg, cg = divmod(cgg, ab)
+        for y in range(R):
+            for x in range(R):
+                s = node_id(wg, cg, x, y)
+                for di, (dx, dy) in enumerate(DIRS):
+                    nx, ny = x + dx, y + dy
+                    if 0 <= nx < R and 0 <= ny < R:
+                        c = add(s, node_id(wg, cg, nx, ny),
+                                p.cg_bw_mult, p.sr_latency, MESH)
+                        node_mesh_ch[s, di] = c
+
+    # inject / eject channels
+    inject_ch = np.zeros(T, dtype=np.int64)
+    eject_ch = np.full(V, -1, dtype=np.int64)
+    for t in range(T):
+        inject_ch[t] = add(V + t, term_node[t], 1, 1, INJECT)  # src id unused
+        eject_ch[t] = add(term_node[t], V + t, 1, 1, EJECT)
+
+    # port labeling and the local/global split (Fig. 6):
+    # ports 0..n_local-1 are LOCAL (to the other ab-1 C-groups of the W-group),
+    # ports n_local..k-1 are GLOBAL.  Property 2 ordering: within the polar
+    # walk the local ports to lower C-groups come first, then globals, then
+    # local ports to higher C-groups.  We realize it by mapping: local port j
+    # of C-group c connects to C-group (c + 1 + j) mod ab ... see below; and
+    # placing globals in the middle of the label range.
+    # Concretely we order port labels:
+    #   labels [0, cg)             -> local ports to C-groups 0..cg-1 (down)
+    #   labels [cg, cg + h)        -> global ports
+    #   labels [cg + h, k)         -> local ports to C-groups cg+1..ab-1 (up)
+    # which satisfies Property 2 exactly.
+    local_port = np.full((ab, ab), -1, dtype=np.int64)   # [cg, peer_cg] -> port
+    global_ports = np.zeros((ab, p.h), dtype=np.int64)   # [cg, j] -> port label
+    for cg in range(ab):
+        for peer in range(ab):
+            if peer < cg:
+                local_port[cg, peer] = peer
+            elif peer > cg:
+                local_port[cg, peer] = p.h + peer - 1
+        for j in range(p.h):
+            global_ports[cg, j] = cg + j  # labels cg..cg+h-1 are global
+    # NOTE: with this scheme label ranges depend on cg; all labels < k.
+
+    # external channel endpoints: ext_out[cgg, port] = channel id
+    ext_out = np.full((num_cg, k), -1, dtype=np.int64)
+
+    # local links: within each W-group, C-groups fully connected
+    for wg in range(g):
+        for c1 in range(ab):
+            for c2 in range(ab):
+                if c1 == c2:
+                    continue
+                p1 = local_port[c1, c2]
+                s = node_id(wg, c1, *port_xy[p1])
+                d_port = local_port[c2, c1]
+                d = node_id(wg, c2, *port_xy[d_port])
+                ch = add(s, d, 1, p.lr_latency, LOCAL)
+                ext_out[wg * ab + c1, p1] = ch
+
+    # global links: W-groups fully connected (Sec. III-A4).  Port q of
+    # W-group w (q = cg*h + j in [0, ab*h)) connects toward W-group
+    # (w + q + 1) mod g.  When g < g_max the surplus ports wrap around and
+    # give PARALLEL links per W-group pair; all of them are wired (routing
+    # spreads flows across them by destination hash).
+    npar = max(1, (ab * p.h) // max(g - 1, 1)) if g > 1 else 1
+    glob_route_cg = np.full((g, g, npar), -1, dtype=np.int64)
+    glob_route_port = np.full((g, g, npar), -1, dtype=np.int64)
+    glob_npar = np.ones((g, g), dtype=np.int64)
+    if g > 1:
+        for wg in range(g):
+            cnt = np.zeros(g, dtype=np.int64)
+            for q in range(ab * p.h):
+                peer = (wg + q + 1) % g
+                if peer == wg or cnt[peer] >= npar:
+                    continue
+                cg, j = divmod(q, p.h)
+                glob_route_cg[wg, peer, cnt[peer]] = cg
+                glob_route_port[wg, peer, cnt[peer]] = global_ports[cg, j]
+                cnt[peer] += 1
+            glob_npar[wg] = np.maximum(cnt, 1)
+        # parallel index r of (wg, peer) pairs with r-th link of (peer, wg)
+        for wg in range(g):
+            for peer in range(g):
+                if peer == wg:
+                    continue
+                for r in range(npar):
+                    cg = glob_route_cg[wg, peer, r]
+                    if cg < 0 or glob_route_cg[peer, wg, r] < 0:
+                        continue
+                    port = glob_route_port[wg, peer, r]
+                    s = node_id(wg, cg, *port_xy[port])
+                    pcg = glob_route_cg[peer, wg, r]
+                    pport = glob_route_port[peer, wg, r]
+                    d = node_id(peer, pcg, *port_xy[pport])
+                    ch = add(s, d, 1, p.lr_latency, GLOBAL)
+                    ext_out[wg * ab + cg, port] = ch
+        # routable parallel count = links wired in BOTH directions
+        glob_npar = np.minimum(glob_npar, glob_npar.T)
+        np.fill_diagonal(glob_npar, 1)
+
+    # --- routing tables --------------------------------------------------
+    # perimeter position of each node (-1 if interior) for ring routing
+    perim_pos = np.full(V, -1, dtype=np.int64)
+    pos_of_xy = {xy: i for i, xy in enumerate(perim)}
+    for v in range(V):
+        xy = (int(node_x[v]), int(node_y[v]))
+        if xy in pos_of_xy:
+            perim_pos[v] = pos_of_xy[xy]
+    # ring next/prev direction index (into DIRS) for each perimeter position
+    ring_next_dir = np.zeros(P, dtype=np.int64)
+    ring_prev_dir = np.zeros(P, dtype=np.int64)
+    for i in range(P):
+        x0, y0 = perim[i]
+        x1, y1 = perim[(i + 1) % P]
+        ring_next_dir[i] = DIRS.index((int(np.sign(x1 - x0)), int(np.sign(y1 - y0))))
+        ring_prev_dir[(i + 1) % P] = DIRS.index((int(np.sign(x0 - x1)), int(np.sign(y0 - y1))))
+    # port -> (node-local x, y), port -> perimeter pos
+    port_node_local = port_xy[:, 1] * R + port_xy[:, 0]
+    port_perim_pos = port_pos.copy()
+
+    # snake (boustrophedon) order of chips for ring embeddings: consecutive
+    # chips in the ring are physically adjacent on the wafer
+    if p.chip_routers is None:
+        cm = p.m  # chip grid is m x m
+        snake_local = []
+        for cy in range(cm):
+            xs = range(cm) if cy % 2 == 0 else range(cm - 1, -1, -1)
+            snake_local.extend(cy * cm + cx for cx in xs)
+    else:
+        snake_local = list(range(p.chips_per_cgroup))
+    cpc = p.chips_per_cgroup
+    chip_ring_order = np.concatenate([
+        cgg * cpc + np.asarray(snake_local) for cgg in range(num_cg)])
+
+    tables = dict(
+        node_wg=node_wg, node_cg=node_cg, node_cg_global=node_cg_global,
+        node_x=node_x, node_y=node_y,
+        node_mesh_ch=node_mesh_ch, eject_ch=eject_ch,
+        ext_out=ext_out, local_port=local_port,
+        glob_route_cg=glob_route_cg, glob_route_port=glob_route_port,
+        glob_npar=glob_npar,
+        port_node_local=port_node_local, port_perim_pos=port_perim_pos,
+        perim_pos=perim_pos, ring_next_dir=ring_next_dir,
+        ring_prev_dir=ring_prev_dir,
+        term_node=term_node,
+        chip_ring_order=chip_ring_order,
+        wg_term_base=np.arange(g) * ab * nodes_per_cg,
+    )
+    meta = dict(kind="switchless", params=dataclasses.asdict(p), R=R, ab=ab,
+                k=k, h=p.h, g=g, nodes_per_cg=nodes_per_cg,
+                terms_per_wg=ab * nodes_per_cg,
+                terms_per_chip=p.routers_per_chip,
+                num_cgroups=num_cg)
+
+    net = Network(
+        name=name, num_nodes=V, num_terminals=T, num_chips=int(p.num_chips),
+        term_node=term_node, term_chip=term_chip,
+        ch_src=np.array(src), ch_dst=np.array(dst),
+        ch_bw=np.array(bw, dtype=np.int64), ch_lat=np.array(lat, dtype=np.int64),
+        ch_type=np.array(typ, dtype=np.int64),
+        inject_ch=inject_ch, eject_ch=eject_ch, tables=tables, meta=meta)
+    net.validate()
+    return net
+
+
+# ---------------------------------------------------------------------------
+# Traditional switch-based Dragonfly (baseline, Kim et al. 2008)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SwitchDragonflyParams:
+    """Standard Dragonfly: radix = t + l + gl per switch.
+
+    t terminals/switch, l local ports (group has l+1 switches), gl global
+    ports/switch.  Groups: g <= (l+1)*gl + 1.
+    """
+
+    t: int
+    l: int
+    gl: int
+    g: int | None = None
+    lr_latency: int = 8
+
+    @property
+    def radix(self) -> int:
+        return self.t + self.l + self.gl
+
+    @property
+    def switches_per_group(self) -> int:
+        return self.l + 1
+
+    @property
+    def g_max(self) -> int:
+        return self.switches_per_group * self.gl + 1
+
+    @property
+    def num_groups(self) -> int:
+        g = self.g_max if self.g is None else self.g
+        if not (1 <= g <= self.g_max):
+            raise ValueError(f"g={g} outside [1,{self.g_max}]")
+        return g
+
+    @property
+    def num_chips(self) -> int:
+        return self.t * self.switches_per_group * self.num_groups
+
+
+def build_switch_dragonfly(p: SwitchDragonflyParams,
+                           name: str = "dragonfly") -> Network:
+    """Ideal-router switch-based Dragonfly (paper's baseline)."""
+    g = p.num_groups
+    spg = p.switches_per_group
+    V = g * spg                      # switch nodes
+    T = V * p.t                      # terminals
+
+    term_node = np.repeat(np.arange(V), p.t)
+    term_chip = np.arange(T)         # every terminal is a chip
+
+    src, dst, bw, lat, typ = [], [], [], [], []
+
+    def add(s, d, b, l, t):
+        src.append(s); dst.append(d); bw.append(b); lat.append(l); typ.append(t)
+        return len(src) - 1
+
+    inject_ch = np.zeros(T, dtype=np.int64)
+    eject_sw_term = np.full((V, p.t), -1, dtype=np.int64)  # per-terminal eject
+    for t_ in range(T):
+        sw = term_node[t_]
+        inject_ch[t_] = add(V + t_, sw, 1, 1, INJECT)
+        eject_sw_term[sw, t_ % p.t] = add(sw, V + t_, 1, 1, EJECT)
+
+    # local links: full mesh within each group
+    local_ch = np.full((V, spg), -1, dtype=np.int64)  # [switch, peer_idx]
+    for grp in range(g):
+        base = grp * spg
+        for i in range(spg):
+            for j in range(spg):
+                if i == j:
+                    continue
+                local_ch[base + i, j] = add(base + i, base + j, 1,
+                                            p.lr_latency, LOCAL)
+
+    # global links: group w port q -> group (w + q + 1) mod g; port q lives
+    # on switch q // gl.  Surplus ports when g < g_max wrap into parallel
+    # links per group pair, all wired.
+    npar = max(1, (spg * p.gl) // max(g - 1, 1)) if g > 1 else 1
+    glob_route_sw = np.full((g, g, npar), -1, dtype=np.int64)
+    glob_out_ch = np.full((g, g, npar), -1, dtype=np.int64)
+    glob_npar = np.ones((g, g), dtype=np.int64)
+    if g > 1:
+        for grp in range(g):
+            cnt = np.zeros(g, dtype=np.int64)
+            for q in range(spg * p.gl):
+                peer = (grp + q + 1) % g
+                if peer == grp or cnt[peer] >= npar:
+                    continue
+                glob_route_sw[grp, peer, cnt[peer]] = grp * spg + q // p.gl
+                cnt[peer] += 1
+            glob_npar[grp] = np.maximum(cnt, 1)
+        for grp in range(g):
+            for peer in range(g):
+                if peer == grp:
+                    continue
+                for r in range(npar):
+                    sw = glob_route_sw[grp, peer, r]
+                    psw = glob_route_sw[peer, grp, r]
+                    if sw < 0 or psw < 0:
+                        continue
+                    glob_out_ch[grp, peer, r] = add(sw, psw, 1,
+                                                    p.lr_latency, GLOBAL)
+        glob_npar = np.minimum(glob_npar, glob_npar.T)
+        np.fill_diagonal(glob_npar, 1)
+
+    eject_ch = np.full(V, -1, dtype=np.int64)  # first eject per switch (unused)
+    tables = dict(
+        node_grp=np.arange(V) // spg, node_idx=np.arange(V) % spg,
+        local_ch=local_ch, glob_route_sw=glob_route_sw,
+        glob_out_ch=glob_out_ch, glob_npar=glob_npar,
+        eject_sw_term=eject_sw_term,
+        term_node=term_node, term_slot=np.arange(T) % p.t,
+        chip_ring_order=np.arange(T),
+        grp_term_base=np.arange(g) * spg * p.t,
+    )
+    meta = dict(kind="dragonfly", params=dataclasses.asdict(p), g=g, spg=spg,
+                terms_per_grp=spg * p.t, terms_per_chip=1)
+    net = Network(
+        name=name, num_nodes=V, num_terminals=T, num_chips=T,
+        term_node=term_node, term_chip=term_chip,
+        ch_src=np.array(src), ch_dst=np.array(dst),
+        ch_bw=np.array(bw, dtype=np.int64), ch_lat=np.array(lat, dtype=np.int64),
+        ch_type=np.array(typ, dtype=np.int64),
+        inject_ch=inject_ch, eject_ch=eject_ch, tables=tables, meta=meta)
+    net.validate()
+    return net
+
+
+# --- canonical evaluation configurations (Sec. V-A4) -----------------------
+
+def paper_radix16_switchless(g: int | None = None, cg_bw_mult: int = 1,
+                             noc: int = 2) -> SwitchlessParams:
+    """2x2 chiplets with 2x2 on-chiplet NoC; 12 external ports (7 local +
+    5 global); 8 C-groups per W-group; 41 W-groups, 1312 chips."""
+    return SwitchlessParams(a=2, b=4, m=2, n=6, noc=noc, g=g,
+                            cg_bw_mult=cg_bw_mult)
+
+
+def paper_radix16_dragonfly(g: int | None = None) -> SwitchDragonflyParams:
+    """Radix-16 switch split 4:7:5 -> (41 groups, 1312 chips)."""
+    return SwitchDragonflyParams(t=4, l=7, gl=5, g=g)
+
+
+def paper_radix32_switchless(g: int | None = None, cg_bw_mult: int = 1
+                             ) -> SwitchlessParams:
+    """Radix-32-equivalent: 24 external ports (15 local + 9 global),
+    16 C-groups per W-group, 8 chips per C-group -> 145 groups, 18560 chips.
+
+    ab=16, k=nm=24 -> h=9, g_max=145.  The 4x4 router grid (m=2 chiplets with
+    2x2 NoCs) hosts 8 chips of 2 routers each (chip_routers=2), matching the
+    paper's 8 terminals per radix-32 switch: N = 8*16*145 = 18560.
+    """
+    return SwitchlessParams(a=4, b=4, m=2, n=12, noc=2, g=g,
+                            cg_bw_mult=cg_bw_mult, chip_routers=2)
+
+
+def paper_radix32_dragonfly(g: int | None = None) -> SwitchDragonflyParams:
+    """Radix-32 switch split 8:15:9 -> (145 groups, 18560 chips)."""
+    return SwitchDragonflyParams(t=8, l=15, gl=9, g=g)
+
+
+def paper_table3_switchless() -> SwitchlessParams:
+    """Sec. III-C case study: n=12, m=4, a=4, b=8 -> N=279040."""
+    return SwitchlessParams(a=4, b=8, m=4, n=12, noc=1)

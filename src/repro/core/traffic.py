@@ -1,0 +1,178 @@
+"""Traffic patterns for the network simulator (paper Sec. V-A3).
+
+A pattern is a closure `sample(key, t) -> dest[T]` giving, for every source
+terminal, the destination terminal it would use for a packet generated this
+cycle.  Permutation patterns ignore the key.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .topology import Network
+
+
+def _bits(n: int) -> int:
+    return max(1, int(np.ceil(np.log2(max(n, 2)))))
+
+
+def _guard(dest: np.ndarray, T: int) -> np.ndarray:
+    """Out-of-range destinations (non-power-of-two T) map to self; the
+    simulator treats dest == src as "don't inject" (permutation fixed
+    points are silent)."""
+    src = np.arange(len(dest))
+    return np.where(dest >= T, src, dest)
+
+
+def uniform(net: Network):
+    T = net.num_terminals
+
+    def sample(key, t):
+        src = jnp.arange(T)
+        d = jax.random.randint(key, (T,), 0, T - 1)
+        return jnp.where(d >= src, d + 1, d)  # uniform over T-1 others
+
+    return sample
+
+
+def _perm_pattern(dest_np: np.ndarray):
+    dest = jnp.asarray(dest_np)
+
+    def sample(key, t):
+        return dest
+
+    return sample
+
+
+def bit_reverse(net: Network):
+    T = net.num_terminals
+    b = _bits(T)
+    src = np.arange(T)
+    d = np.zeros(T, dtype=np.int64)
+    for i in range(b):
+        d |= (((src >> i) & 1) << (b - 1 - i))
+    return _perm_pattern(_guard(d, T))
+
+
+def bit_shuffle(net: Network):
+    """Rotate address bits left by one."""
+    T = net.num_terminals
+    b = _bits(T)
+    src = np.arange(T)
+    d = ((src << 1) | (src >> (b - 1))) & ((1 << b) - 1)
+    return _perm_pattern(_guard(d, T))
+
+
+def bit_transpose(net: Network):
+    """Swap upper/lower halves of the address bits."""
+    T = net.num_terminals
+    b = _bits(T)
+    h = b // 2
+    src = np.arange(T)
+    lo = src & ((1 << h) - 1)
+    hi = src >> h
+    d = (lo << (b - h)) | hi
+    return _perm_pattern(_guard(d, T))
+
+
+def _terms_per_group(net: Network) -> int:
+    return net.meta.get("terms_per_wg", net.meta.get("terms_per_grp"))
+
+
+def _num_groups(net: Network) -> int:
+    return net.meta["g"]
+
+
+def hotspot(net: Network, num_hot: int = 4, seed: int = 0):
+    """Communication confined to `num_hot` of the W-groups (Sec. V-A3b):
+    sources in hot groups send to random terminals of the other hot groups."""
+    g = _num_groups(net)
+    tpg = _terms_per_group(net)
+    rng = np.random.default_rng(seed)
+    hot = np.sort(rng.choice(g, size=min(num_hot, g), replace=False))
+    hot_j = jnp.asarray(hot)
+    T = net.num_terminals
+    src_wg = np.arange(T) // tpg
+    is_hot = jnp.asarray(np.isin(src_wg, hot))
+
+    def sample(key, t):
+        k1, k2 = jax.random.split(key)
+        wsel = jax.random.randint(k1, (T,), 0, len(hot))
+        off = jax.random.randint(k2, (T,), 0, tpg)
+        dest = hot_j[wsel] * tpg + off
+        # non-hot sources still draw a hot destination (they won't inject if
+        # the benchmark masks them; keeping them hot-bound matches "conducts
+        # communications within four of all W-groups").
+        return dest
+
+    return sample, np.asarray(is_hot)
+
+
+def worst_case(net: Network):
+    """Adversarial WC: node in W-group i sends to random node of W-group
+    i+1 (Sec. V-A3b / Kim et al.)."""
+    g = _num_groups(net)
+    tpg = _terms_per_group(net)
+    T = net.num_terminals
+    src_wg = jnp.asarray(np.arange(T) // tpg)
+
+    def sample(key, t):
+        off = jax.random.randint(key, (T,), 0, tpg)
+        return ((src_wg + 1) % g) * tpg + off
+
+    return sample
+
+
+def ring_allreduce(net: Network, bidirectional: bool = False):
+    """Ring AllReduce traffic (Sec. V-A3c): chip i sends to chip (i+1) mod C
+    (uni) or alternates between (i-1) and (i+1) (bi).
+
+    The ring follows the snake (boustrophedon) order of chips on the wafer,
+    so consecutive chips are physically adjacent.  Terminal-level embedding:
+    terminal j of chip i targets terminal j of the neighbouring chip, which
+    exercises all parallel chip-to-chip paths the wafer provides (the
+    paper's "four injection/ejection ports per chip").
+    """
+    T = net.num_terminals
+    C = net.num_chips
+    tpc = net.meta.get("terms_per_chip", 1)
+    assert T == C * tpc
+    order = net.tables.get("chip_ring_order", np.arange(C))
+    ring_pos = np.empty(C, dtype=np.int64)
+    ring_pos[order] = np.arange(C)  # chip -> position in ring
+    # terminals of each chip (ids are NOT contiguous per chip: they follow
+    # the router raster); slot j of a chip is its j-th terminal by id
+    chip = net.term_chip
+    chip_terms = np.full((C, tpc), -1, dtype=np.int64)
+    fill = np.zeros(C, dtype=np.int64)
+    slot = np.zeros(T, dtype=np.int64)
+    for t_ in range(T):
+        c = chip[t_]
+        slot[t_] = fill[c]
+        chip_terms[c, fill[c]] = t_
+        fill[c] += 1
+    nxt_chip = order[(ring_pos[chip] + 1) % C]
+    prv_chip = order[(ring_pos[chip] - 1) % C]
+    nxt = chip_terms[nxt_chip, slot]
+    prv = chip_terms[prv_chip, slot]
+    nxt_j, prv_j = jnp.asarray(nxt), jnp.asarray(prv)
+
+    if not bidirectional:
+        def sample(key, t):
+            return nxt_j
+    else:
+        def sample(key, t):
+            coin = jax.random.bernoulli(key, 0.5, (T,))
+            return jnp.where(coin, nxt_j, prv_j)
+
+    return sample
+
+
+PATTERNS = {
+    "uniform": uniform,
+    "bit_reverse": bit_reverse,
+    "bit_shuffle": bit_shuffle,
+    "bit_transpose": bit_transpose,
+    "worst_case": worst_case,
+}

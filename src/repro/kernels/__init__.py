@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot spots of the assigned
+architectures: flash attention (GQA + sliding window), Mamba-2 SSD chunked
+scan, RG-LRU linear recurrence.  Each kernel ships kernel.py (pallas_call +
+BlockSpec VMEM tiling), ops.py (jit wrapper), ref.py (pure-jnp oracle).
+The paper itself has no kernel-level compute contribution (its hot loop is
+the network simulator, which is pure vectorized JAX); these kernels serve
+the training/serving substrate the interconnect feeds.
+"""

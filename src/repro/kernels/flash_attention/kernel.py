@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (causal GQA, optional sliding window).
+
+Grid: (batch, q_heads, num_q_blocks, num_k_blocks) with the K dimension
+innermost and sequential ("arbitrary"); the online-softmax state (m, l,
+acc) lives in VMEM scratch and persists across the K iterations of one
+(b, h, q) cell — the canonical TPU flash pattern.  KV blocks for GQA are
+indexed by qh // group so grouped heads share the same KV tiles.
+
+Block shapes are MXU-aligned: q/k tiles (block_q x head_dim) with
+head_dim padded to a multiple of 128 by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, block_q, block_k, num_k_blocks, seq_k):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # skip fully-masked tiles (upper triangle / outside the window)
+    run = k_start < seq_k
+    if causal:
+        run &= k_start <= q_start + block_q - 1
+        if window is not None:
+            run &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)     # [bq, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # [bk, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=None,
+                           block_q=128, block_k=128, interpret=True):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd].  hd multiple of 128 and
+    Sq/Sk multiples of the block sizes are the caller's responsibility
+    (ops.py pads)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    nq = Sq // block_q
+    nk = Sk // block_k
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_k_blocks=nk, seq_k=Sk)
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h // groups, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h // groups, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),     # l (running sum)
+            pltpu.VMEM((block_q, hd), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(q, k, v)
+    return out

@@ -1,0 +1,42 @@
+"""jit'd public wrapper: pads head_dim to a lane multiple and sequence
+lengths to block multiples, dispatches to the Pallas kernel (interpret
+mode automatically on non-TPU backends)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, causal=True, window=None, block_q=128,
+                    block_k=128, interpret=None):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd] -> [B, Sq, H, hd]."""
+    if interpret is None:
+        interpret = _should_interpret()
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Sk))
+    hd_pad = (-hd) % 128
+    sq_pad = (-Sq) % bq
+    sk_pad = (-Sk) % bk
+
+    def pad(x, s_pad):
+        return jnp.pad(x, ((0, 0), (0, s_pad), (0, 0), (0, hd_pad)))
+
+    qp, kp, vp = pad(q, sq_pad), pad(k, sk_pad), pad(v, sk_pad)
+    if hd_pad:
+        # keep softmax scale consistent with the true head_dim
+        qp = qp * jnp.sqrt((hd + hd_pad) / hd).astype(qp.dtype)
+    o = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=interpret)
+    return o[:, :Sq, :, :hd]

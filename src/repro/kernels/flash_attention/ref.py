@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel: materialized scores,
+fp32 softmax, GQA by explicit repeat.  Deliberately independent of the
+chunked/online implementation in models/layers.py."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True, window=None):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    k = jnp.repeat(k, groups, axis=2)
+    v = jnp.repeat(v, groups, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

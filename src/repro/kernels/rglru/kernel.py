@@ -1,0 +1,59 @@
+"""Pallas TPU kernel for the RG-LRU diagonal linear recurrence
+(Griffin, arXiv:2402.19427):  h_t = a_t * h_{t-1} + b_t.
+
+The gate/input projections run outside on the MXU; this kernel is the
+memory-bound recurrent scan the Griffin paper writes a custom kernel for.
+Grid: (batch, channel_blocks, chunks) with chunks sequential and the
+hidden state persisted in VMEM scratch; channels are tiled to the lane
+width so the scan runs as VPU vector ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, h_ref, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(l, h):
+        a = a_ref[0, l, :]
+        b = b_ref[0, l, :]
+        h = a * h + b
+        o_ref[0, l, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[0, :])
+    h_ref[0, :] = h
+
+
+def rglru_scan_pallas(a, b, *, chunk=256, block_r=512, interpret=True):
+    """a, b: [B, S, R] fp32 -> h: [B, S, R].  S % chunk == 0 and
+    R % block_r == 0 are the wrapper's responsibility."""
+    B, S, R = a.shape
+    nc = S // chunk
+    nr = R // block_r
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nr, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_r), lambda b_, r, c: (b_, c, r)),
+            pl.BlockSpec((1, chunk, block_r), lambda b_, r, c: (b_, c, r)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_r),
+                               lambda b_, r, c: (b_, c, r)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_r), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(a, b)

@@ -1,0 +1,27 @@
+"""jit'd wrapper: pads (a=1, b=0 are identity steps) and dispatches."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_r",
+                                             "interpret"))
+def rglru_scan(a, b, chunk=256, block_r=512, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, R = a.shape
+    c = min(chunk, S)
+    br = min(block_r, R)
+    s_pad = (-S) % c
+    r_pad = (-R) % br
+    if s_pad or r_pad:
+        a = jnp.pad(a, ((0, 0), (0, s_pad), (0, r_pad)),
+                    constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, s_pad), (0, r_pad)))
+    h = rglru_scan_pallas(a, b, chunk=c, block_r=br, interpret=interpret)
+    return h[:, :S, :R]

@@ -1,0 +1,17 @@
+"""Sequential oracle for the diagonal linear recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t.  a, b: [B, S, R]."""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    a_t = a.transpose(1, 0, 2)
+    b_t = b.transpose(1, 0, 2)
+    h0 = jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (arXiv:2405.21060).
+
+Grid: (batch, heads, num_chunks) with the chunk dimension innermost and
+sequential; the inter-chunk SSM state [head_dim, d_state] persists in VMEM
+scratch.  Within a chunk the intra-chunk term is two MXU matmuls
+([L,N]x[N,L] decay-masked, then [L,L]x[L,P]), exactly the "state-space
+duality" formulation the paper tiles for tensor cores — re-tiled here for
+the MXU with fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+            chunk, seq_len):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    L = chunk
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [L]
+    A = a_ref[0].astype(jnp.float32)                 # scalar decay rate
+    Bm = b_ref[0].astype(jnp.float32)                # [L, N]
+    Cm = c_ref[0].astype(jnp.float32)                # [L, N]
+
+    # zero padded steps (dt = 0 -> identity transition, no contribution)
+    pos = ci * L + jax.lax.iota(jnp.int32, L)
+    dt = jnp.where(pos < seq_len, dt, 0.0)
+
+    la = -A * dt                                     # per-step log decay
+    cum = jnp.cumsum(la)                             # [L]
+
+    # intra-chunk: y_i = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    att = jnp.exp(jnp.where(jj <= ii, seg, -1e30))  # mask before exp
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, L]
+    w = cb * att * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [L, P]
+
+    # inter-chunk: y_i += exp(cum_i) * C_i . S_prev^T
+    s_prev = state_ref[...]                          # [P, N]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, s_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [L, P]
+
+    # state update: S = exp(cum_L) S_prev + x^T (exp(cum_L - cum_j) dt_j B_j)
+    decay_tail = jnp.exp(cum[-1] - cum) * dt         # [L]
+    state_ref[...] = jnp.exp(cum[-1]) * s_prev + jax.lax.dot_general(
+        x, decay_tail[:, None] * Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [P, N]
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, A, Bm, Cm, *, chunk=128, interpret=True):
+    """x: [B, S, H, P]; dt: [B, S, H] (post-softplus); A: [H] (positive);
+    Bm/Cm: [B, S, N].  S must be a multiple of `chunk` (ops.py pads)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    kern = functools.partial(_kernel, chunk=chunk, seq_len=S)
+    grid = (B, H, nc)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,25 @@
+"""jit'd wrapper: pads S to the chunk multiple and dispatches."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, chunk=128, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, P = x.shape
+    c = min(chunk, S) if S >= 8 else S
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=c, interpret=interpret)
+    return y[:, :S]

@@ -1,0 +1,29 @@
+"""Sequential (step-by-step) SSD oracle — independent of any chunking."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """x: [B, S, H, P]; dt: [B, S, H]; A: [H]; Bm/Cm: [B, S, N].
+
+    s_t = exp(-A dt_t) s_{t-1} + dt_t * (x_t outer B_t);  y_t = C_t . s_t
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp        # [B,H,P], [B,H], [B,N], [B,N]
+        a = jnp.exp(-A[None, :] * dtt)                       # [B,H]
+        upd = dtt[..., None, None] * (xt[..., :, None] *
+                                      bt[:, None, None, :])  # [B,H,P,N]
+        s = s * a[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), s_final

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first initialization.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+
+import numpy as np   # noqa: E402
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import LM_SHAPES, shape_by_name  # noqa: E402
+from repro.configs.registry import (ARCHS, cell_applicable,  # noqa: E402
+                                    get_config, input_specs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as TF  # noqa: E402
+from repro.optim.optimizer import OptConfig  # noqa: E402
+from repro.runtime import sharding as SH  # noqa: E402
+from repro.runtime.hlo_analysis import collective_bytes  # noqa: E402
+from repro.runtime.trainer import (TrainSetup, make_decode_step,  # noqa: E402
+                                   make_prefill_step, make_train_step)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def _axis_sizes(mesh):
+    return {name: int(size) for name, size in
+            zip(mesh.axis_names, mesh.devices.shape)}
+
+
+def _eval_shapes(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               save_hlo: bool = False, mesh_shape: tuple | None = None,
+               tag: str | None = None, moe_dispatch: str = "bf16",
+               microbatch: int = 1):
+    """Lower + compile one (arch x shape x mesh) cell; returns the artifact
+    dict (raises on real failures).
+
+    mesh_shape: optional (data, model) override at 256 chips (perf
+    iteration: TP-degree tuning).  moe_dispatch: "bf16" | "int8" selects
+    quantized expert dispatch (perf iteration)."""
+    import jax as _jax
+    cfg = get_config(arch)
+    if moe_dispatch != "bf16" and cfg.moe is not None:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe,
+                                               dispatch=moe_dispatch))
+    shape = shape_by_name(shape_name)
+    mesh_tag = tag or ("multi" if multi_pod else "single")
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": "skipped", "reason": why}
+    if mesh_shape is not None:
+        mesh = _jax.make_mesh(mesh_shape, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    axis_sizes = _axis_sizes(mesh)
+    setup = TrainSetup(model=cfg, opt=OptConfig(), attn_impl="chunked",
+                       microbatch=microbatch)
+
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_sds = _eval_shapes(partial(TF.init_params, cfg=cfg), key_sds)
+    pspecs = SH.tree_param_specs(params_sds, mesh)
+    batch_sds = input_specs(cfg, shape)
+    bspecs = SH.batch_specs(batch_sds, mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        from repro.optim.optimizer import init_opt_state
+        opt_sds = _eval_shapes(init_opt_state, params_sds)
+        ospecs = {
+            "master": SH.opt_state_specs(pspecs, params_sds, mesh),
+            "m": SH.opt_state_specs(pspecs, params_sds, mesh),
+            "v": SH.opt_state_specs(pspecs, params_sds, mesh),
+            "step": P(),
+        }
+        fn = make_train_step(setup, mesh)
+        jfn = jax.jit(fn,
+                      in_shardings=(SH.shardings(pspecs, mesh),
+                                    SH.shardings(ospecs, mesh),
+                                    SH.shardings(bspecs, mesh)),
+                      donate_argnums=(0, 1))
+        lowered = jfn.lower(params_sds, opt_sds, batch_sds)
+    else:
+        B = shape.global_batch
+        cache_len = shape.seq_len
+        cache_sds = _eval_shapes(
+            partial(TF.init_cache, cfg, B, cache_len))
+        cspecs = SH.cache_specs(cache_sds, mesh)
+        if shape.kind == "prefill":
+            fn = make_prefill_step(setup, mesh)
+        else:
+            fn = make_decode_step(setup, mesh)
+        jfn = jax.jit(fn,
+                      in_shardings=(SH.shardings(pspecs, mesh),
+                                    SH.shardings(bspecs, mesh),
+                                    SH.shardings(cspecs, mesh)),
+                      donate_argnums=(2,))
+        lowered = jfn.lower(params_sds, batch_sds, cache_sds)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # loop trip counts for scaling collectives found inside scan bodies:
+    # outermost = the layer-group scan, inner = chunk scans (SSD/attention)
+    from repro.models.transformer import _segments
+    _, groups, _, _ = _segments(cfg)
+    inner = 1
+    if cfg.ssm is not None and shape.kind != "decode":
+        inner = max(inner, shape.seq_len // cfg.ssm.chunk)
+    elif shape.kind != "decode":
+        inner = max(inner, shape.seq_len // 512)  # chunked attention q-map
+    coll = collective_bytes(hlo, axis_sizes,
+                            loop_trips=(max(groups, 1), inner))
+
+    mem_d = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_d[k] = int(getattr(mem, k, 0))
+    # per-device totals (all sizes reported by XLA are per device on CPU
+    # with SPMD partitioning)
+    art = {
+        "arch": arch, "shape": shape_name,
+        "mesh": mesh_tag,
+        "status": "ok",
+        "axis_sizes": axis_sizes,
+        "chips": int(np.prod(mesh.devices.shape)),
+        "kind": shape.kind,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "cost_analysis_keys": sorted(cost)[:40],
+        "memory": mem_d,
+        "collectives": {"by_op": coll["by_op"], "by_axis": coll["by_axis"],
+                        "num_ops": len(coll["ops"])},
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "params": cfg.num_params(),
+        "active_params": cfg.active_params(),
+    }
+    if save_hlo:
+        art["hlo_len"] = len(hlo)
+    return art
+
+
+def cell_path(arch, shape_name, multi_pod):
+    tag = "multi" if multi_pod else "single"
+    return os.path.join(ART_DIR, f"{arch}__{shape_name}__{tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in LM_SHAPES] if args.shape == "all" \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                path = cell_path(arch, shape_name, multi_pod)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip-cached] {os.path.basename(path)}")
+                    continue
+                tag = "multi" if multi_pod else "single"
+                print(f"[lower] {arch} x {shape_name} x {tag} ...",
+                      flush=True)
+                try:
+                    art = lower_cell(arch, shape_name, multi_pod)
+                except Exception as e:
+                    failures += 1
+                    art = {"arch": arch, "shape": shape_name, "mesh": tag,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-3000:]}
+                    print(f"  ERROR: {e!r}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1)
+                if art["status"] == "ok":
+                    print(f"  ok: flops={art['flops']:.3e} "
+                          f"coll={art['collectives']['by_axis']} "
+                          f"compile={art['t_compile_s']}s", flush=True)
+                elif art["status"] == "skipped":
+                    print(f"  skipped: {art['reason']}", flush=True)
+    print(f"done; failures={failures}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

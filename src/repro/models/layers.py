@@ -1,0 +1,286 @@
+"""Functional layer library (no flax): params are nested dicts of jnp
+arrays; every layer is an (init, apply) pair.
+
+Attention supports three implementations selected by `attn_impl`:
+  naive   - materialized scores (reference / tiny smoke shapes)
+  chunked - online-softmax over KV blocks in pure jnp (lowers on any
+            backend with flash-attention-like memory; used by the dry-run)
+  kernel  - Pallas TPU flash attention (src/repro/kernels), interpret=True
+            on CPU for tests
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, dtype, scale):
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, use_bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": truncated_normal(key, (d_in, d_out), dtype, scale)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+# --- rotary embeddings -------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, rot_dim: int | None = None):
+    rot = rot_dim or head_dim
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2) / rot))
+    return jnp.asarray(inv, jnp.float32)
+
+
+def apply_rope(x, positions, inv_freq, rot_dim: int | None = None):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq].
+
+    rot_dim < head_dim rotates only the first rot_dim dims (ChatGLM-style
+    2D/partial RoPE)."""
+    hd = x.shape[-1]
+    rot = rot_dim or hd
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # [..., S, rot/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1) if rot < hd \
+        else out.astype(x.dtype)
+
+
+# --- attention ---------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    use_bias: bool = False
+    rope_theta: float = 1e4
+    rope_frac: float = 1.0        # fraction of head_dim rotated
+    causal: bool = True
+    window: int | None = None     # local attention window
+    attn_impl: str = "chunked"
+    chunk_q: int = 512
+    chunk_k: int = 1024
+
+
+def attention_init(key, cfg: AttnConfig, dtype):
+    ks = jax.random.split(key, 4)
+    H, KV, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "q": dense_init(ks[0], d, H * hd, dtype, cfg.use_bias),
+        "k": dense_init(ks[1], d, KV * hd, dtype, cfg.use_bias),
+        "v": dense_init(ks[2], d, KV * hd, dtype, cfg.use_bias),
+        "o": dense_init(ks[3], H * hd, d, dtype, cfg.use_bias,
+                        scale=1.0 / math.sqrt(H * hd)),
+    }
+
+
+def _repeat_kv(k, groups):
+    # k: [B, S, KV, hd] -> [B, S, KV*groups, hd]
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def naive_attention(q, k, v, causal=True, window=None, q_offset=0):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, H, hd] (already GQA-expanded)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def chunked_attention(q, k, v, causal=True, window=None, q_offset=0,
+                      chunk_q=512, chunk_k=1024):
+    """Online-softmax flash attention in pure jnp: O(Sq*hd) memory."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    pad_q = (-Sq) % cq
+    pad_k = (-Sk) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+    qs = q.reshape(B, nq, cq, H, hd).transpose(1, 0, 3, 2, 4)  # [nq,B,H,cq,hd]
+    ks = k.reshape(B, nk, ck, H, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, nk, ck, H, hd).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_block(qi, qb):
+        qpos = qi * cq + jnp.arange(cq) + q_offset
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp
+            kpos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb).astype(jnp.float32) \
+                * scale
+            msk = (kpos[None, :] < Sk)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(msk[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # [B,H,cq,hd]
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, nq * cq, H, hd)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def attention_apply(p, cfg: AttnConfig, x, positions, inv_freq, cache=None,
+                    mesh_axes=None, kv_memory=None):
+    """x: [B, S, D].  cache: dict(k, v, idx) for decode.  kv_memory: [B, Sm, D]
+    for cross-attention (encoder memory); RoPE is skipped for cross-attn."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(p["q"], x).reshape(B, S, H, hd)
+    src = kv_memory if kv_memory is not None else x
+    Sk = src.shape[1]
+    k = dense(p["k"], src).reshape(B, Sk, KV, hd)
+    v = dense(p["v"], src).reshape(B, Sk, KV, hd)
+    cross = kv_memory is not None
+
+    if not cross:
+        rot = int(hd * cfg.rope_frac)
+        if rot > 0:
+            q = apply_rope(q, positions, inv_freq, rot)
+            kpos = positions if cache is None else positions
+            k = apply_rope(k, kpos, inv_freq, rot)
+
+    q_offset = 0
+    decode = cache is not None and not cross and S == 1
+    prefill_cache = cache is not None and not cross and S > 1
+    if decode:
+        # append one token to the (possibly rolling) cache
+        idx = cache["idx"]          # absolute position of the new token
+        base = cache.get("base", jnp.zeros((), jnp.int32))
+        W = cache["k"].shape[1]
+        pos = (idx - base) % W if cfg.window is not None else idx
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        k, v = ck, cv
+        new_cache = {"k": ck, "v": cv, "idx": idx + 1, "base": base}
+        q_offset = idx
+    elif prefill_cache:
+        # populate the cache with the (last W) computed k/v; attention
+        # below runs on the local k/v, not the buffer
+        W = cache["k"].shape[1]
+        kw = k[:, -W:] if W < Sk else k
+        vw = v[:, -W:] if W < Sk else v
+        pad = W - kw.shape[1]
+        if pad > 0:
+            kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        base = jnp.asarray(max(0, Sk - W), jnp.int32)
+        new_cache = {"k": kw.astype(cache["k"].dtype),
+                     "v": vw.astype(cache["v"].dtype),
+                     "idx": jnp.asarray(Sk, jnp.int32), "base": base}
+    else:
+        new_cache = None
+
+    groups = H // KV
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+
+    if decode:
+        # decode attention: mask out unwritten cache slots
+        W = k.shape[1]
+        kpos = jnp.arange(W)
+        valid = kpos < jnp.minimum(q_offset + 1, W)
+        scale = 1.0 / math.sqrt(hd)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) \
+            * scale
+        logits = jnp.where(valid[None, None, None], logits, -1e30)
+        pr = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(v.dtype), v)
+    elif cfg.attn_impl == "naive" or cross:
+        o = naive_attention(q, k, v, causal=cfg.causal and not cross,
+                            window=cfg.window)
+    elif cfg.attn_impl == "chunked":
+        o = chunked_attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                              chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+    elif cfg.attn_impl == "kernel":
+        from repro.kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(q, k, v, causal=cfg.causal,
+                                   window=cfg.window)
+    else:
+        raise ValueError(cfg.attn_impl)
+    out = dense(p["o"], o.reshape(B, S, H * hd))
+    return out, new_cache
+
+
+# --- FFN ---------------------------------------------------------------------
+
+def swiglu_init(key, d_model, d_ff, dtype, use_bias=False):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype, use_bias),
+        "wg": dense_init(ks[1], d_model, d_ff, dtype, use_bias),
+        "wo": dense_init(ks[2], d_ff, d_model, dtype, use_bias,
+                         scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["wo"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x))

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN with sort-free capacity dispatch (EP-shardable).
+
+Dispatch is scatter/gather based (not the dense GShard one-hot einsum):
+tokens are routed to per-expert capacity buffers via a cumulative-position
+scatter; experts run as a batched einsum over the stacked expert weights
+(sharded over the "model" axis = expert parallelism); results are gathered
+back and combined with the top-k gates.  Overflowing tokens are dropped
+(standard capacity-factor semantics), which keeps every shape static for
+XLA.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from .layers import dense_init, truncated_normal
+
+
+def moe_init(key, d_model: int, mcfg: MoEConfig, dtype):
+    ks = jax.random.split(key, 5)
+    E, F = mcfg.num_experts, mcfg.d_expert
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(F)
+    p = {
+        "router": truncated_normal(ks[0], (d_model, E), jnp.float32,
+                                   scale_in),
+        "wi": truncated_normal(ks[1], (E, d_model, F), dtype, scale_in),
+        "wg": truncated_normal(ks[2], (E, d_model, F), dtype, scale_in),
+        "wo": truncated_normal(ks[3], (E, F, d_model), dtype, scale_out),
+    }
+    if mcfg.num_shared:
+        from .layers import swiglu_init
+        p["shared"] = swiglu_init(ks[4], d_model,
+                                  mcfg.num_shared * F, dtype)
+    return p
+
+
+def moe_apply(p, x, mcfg: MoEConfig):
+    """x: [B, S, D] -> (y, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = mcfg.num_experts, mcfg.top_k
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                      # [T, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    pe = probs.mean(axis=0)
+    fe = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(fe * pe) * mcfg.router_aux_weight
+
+    # capacity position of every (token, slot) within its expert; the
+    # floor keeps tiny (decode) batches drop-free
+    C = max(int(math.ceil(T * K * mcfg.capacity_factor / E)),
+            min(T * K, 16))
+    flat_e = eidx.reshape(-1)                                  # [T*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                       # [T*K, E]
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+
+    tok = jnp.repeat(jnp.arange(T), K)
+    e_safe = jnp.where(keep, flat_e, E)                        # E -> dropped
+    slot = jnp.minimum(pos, C - 1)
+
+    if mcfg.dispatch == "int8":
+        # quantized all-to-all payload: each capacity slot holds exactly
+        # one token, so scatter-add acts as scatter-set and int8 is exact
+        # w.r.t. its own rounding.  Per-token scales ride along (4/D
+        # relative overhead).
+        amax = jnp.maximum(jnp.abs(xt.astype(jnp.float32)).max(-1), 1e-6)
+        scl = amax / 127.0                                     # [T]
+        xq = jnp.clip(jnp.round(xt.astype(jnp.float32) / scl[:, None]),
+                      -127, 127).astype(jnp.int8)
+        buf = jnp.zeros((E + 1, C, D), jnp.int8).at[e_safe, slot].add(
+            xq[tok], mode="drop")
+        sbuf = jnp.zeros((E + 1, C), jnp.float32).at[e_safe, slot].add(
+            scl[tok], mode="drop")
+        xe = (buf[:E].astype(jnp.float32)
+              * sbuf[:E][..., None]).astype(x.dtype)
+    else:
+        buf = jnp.zeros((E + 1, C, D), x.dtype)
+        buf = buf.at[e_safe, slot].add(xt[tok])
+        xe = buf[:E]                                           # [E, C, D]
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])                # [E, C, D]
+
+    if mcfg.dispatch == "int8":
+        ymax = jnp.maximum(jnp.abs(ye.astype(jnp.float32)).max(-1), 1e-6)
+        yscl = ymax / 127.0                                    # [E, C]
+        yq = jnp.clip(jnp.round(ye.astype(jnp.float32) / yscl[..., None]),
+                      -127, 127).astype(jnp.int8)
+        yk = (yq[jnp.minimum(e_safe, E - 1), slot].astype(jnp.float32)
+              * yscl[jnp.minimum(e_safe, E - 1), slot][:, None]
+              ).astype(x.dtype)
+    else:
+        yk = ye[jnp.minimum(e_safe, E - 1), slot]
+    yk = jnp.where(keep[:, None], yk, 0.0)
+    y = (yk.reshape(T, K, D) * gates[..., None].astype(x.dtype)).sum(axis=1)
+
+    if "shared" in p:
+        from .layers import swiglu
+        y = y + swiglu(p["shared"], xt)
+    return y.reshape(B, S, D), aux

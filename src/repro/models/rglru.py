@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+r_t = sigmoid(W_a x_t); i_t = sigmoid(W_x x_t)
+a_t = a^(c * r_t)  with  a = sigmoid(Lambda)  (per-channel)
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Sequence mode uses an associative scan (log-depth on TPU); decode mode is
+the exact single-step recurrence.  The block wraps the LRU with the
+Griffin recurrent-block structure: linear -> (branch x | branch gate),
+causal conv1d on x, RG-LRU, gated output projection.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from .layers import dense_init, dense, truncated_normal
+from .ssm import _causal_conv
+
+
+def rglru_init(key, d_model: int, rcfg: RGLRUConfig, dtype):
+    ks = jax.random.split(key, 6)
+    r = rcfg.d_rnn or d_model
+    return {
+        "in_x": dense_init(ks[0], d_model, r, dtype),
+        "in_gate": dense_init(ks[1], d_model, r, dtype),
+        "conv_w": truncated_normal(ks[2], (rcfg.d_conv, r), dtype,
+                                   1.0 / math.sqrt(rcfg.d_conv)),
+        "conv_b": jnp.zeros((r,), dtype),
+        "w_a": dense_init(ks[3], r, r, dtype),
+        "w_x": dense_init(ks[4], r, r, dtype),
+        # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999]
+        "lam": jnp.asarray(
+            jnp.log(jnp.linspace(0.9, 0.999, r) /
+                    (1 - jnp.linspace(0.9, 0.999, r))), jnp.float32),
+        "out": dense_init(ks[5], r, d_model, dtype,
+                          scale=1.0 / math.sqrt(r)),
+    }
+
+
+def _lru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t via associative scan.  a, b: [B, S, R]."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_core(p, x, rcfg: RGLRUConfig, h0=None):
+    """x: [B, S, R] (post-conv).  Returns h: [B, S, R]."""
+    r = jax.nn.sigmoid(dense(p["w_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_x"], x).astype(jnp.float32))
+    log_a = -rcfg.c * jax.nn.softplus(-p["lam"]) * r   # log(a^(c r)), a=sig
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * x.astype(jnp.float32))
+    h = _lru_scan(a, gated, h0)
+    return h
+
+
+def rglru_apply(p, x, rcfg: RGLRUConfig, cache=None):
+    """Full Griffin recurrent block.  cache: dict(conv, h)."""
+    B, S, D = x.shape
+    xb = dense(p["in_x"], x)
+    gate = dense(p["in_gate"], x)
+    xc, new_conv = _causal_conv(
+        xb, p["conv_w"], p["conv_b"],
+        None if cache is None else cache["conv"])
+    xc = jax.nn.silu(xc)
+    if cache is None:
+        h = rglru_core(p, xc, rcfg)
+        new_cache = None
+    else:
+        h = rglru_core(p, xc, rcfg, h0=cache["h"])
+        new_cache = {"conv": new_conv, "h": h[:, -1]}
+    y = h.astype(x.dtype) * jax.nn.gelu(gate)
+    out = dense(p["out"], y)
+    return out, new_cache
+
+
+def rglru_cache_init(batch, d_model, rcfg: RGLRUConfig, dtype):
+    r = rcfg.d_rnn or d_model
+    return {
+        "conv": jnp.zeros((batch, rcfg.d_conv - 1, r), dtype),
+        "h": jnp.zeros((batch, r), jnp.float32),
+    }

@@ -1,0 +1,187 @@
+"""Mamba-2 SSD (state-space duality) sequence-mixing block.
+
+Chunked algorithm of Dao & Gu (arXiv:2405.21060): intra-chunk quadratic
+attention-like term + inter-chunk state recurrence.  The chunked form is
+what the Pallas kernel (src/repro/kernels/ssd_scan) tiles for the MXU;
+this module is the pure-jnp implementation used for training/serving and
+as the kernel oracle.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from .layers import dense_init, dense, truncated_normal, rmsnorm_init, rmsnorm
+
+
+def ssm_init(key, d_model: int, scfg: SSMConfig, dtype):
+    ks = jax.random.split(key, 6)
+    di = scfg.d_inner(d_model)
+    H = scfg.num_heads(d_model)
+    N = scfg.d_state
+    conv_dim = di + 2 * N
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": dense_init(ks[0], d_model,
+                              2 * di + 2 * N + H, dtype),
+        "conv_w": truncated_normal(ks[1], (scfg.d_conv, conv_dim), dtype,
+                                   1.0 / math.sqrt(scfg.d_conv)),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "out_proj": dense_init(ks[2], di, d_model, dtype,
+                               scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [K, C]."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_cache = xp[:, -(K - 1):] if K > 1 else None
+    else:
+        xp = jnp.concatenate([cache, x], axis=1)
+        new_cache = xp[:, -(K - 1):]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return out, new_cache
+
+
+def _split_proj(proj, di, N, H):
+    z = proj[..., :di]
+    x = proj[..., di:2 * di]
+    Bm = proj[..., 2 * di:2 * di + N]
+    Cm = proj[..., 2 * di + N:2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, head_group: int = 8):
+    """SSD over chunks, scanning chunk-by-chunk (the state pass) and
+    processing heads in groups so the [B, L, L, Hg] decay tensor stays
+    small (this is the memory layout the Pallas kernel tiles per-head).
+
+    xh: [B, S, H, P]; dt: [B, S, H] (post-softplus); A: [H] (positive decay
+    rate); Bm, Cm: [B, S, N].  Returns y: [B, S, H, P] and the final state
+    [B, H, P, N].
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // L
+    Hg = min(head_group, H)
+    while H % Hg:
+        Hg -= 1
+    ng = H // Hg
+    f32 = jnp.float32
+    # [nc, B, L, ...] chunk-major for the scan
+    xc = xh.reshape(Bsz, nc, L, ng, Hg, P).transpose(1, 0, 3, 2, 4, 5)
+    dtc = dt.reshape(Bsz, nc, L, ng, Hg).transpose(1, 0, 3, 2, 4)
+    Bc = Bm.reshape(Bsz, nc, L, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(Bsz, nc, L, N).transpose(1, 0, 2, 3)
+    Ag = A.reshape(ng, Hg)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(s_prev, inp):
+        # s_prev: [B, ng, Hg, P, N]
+        xck, dck, bck, cck = inp      # [B,ng,L,Hg,P], [B,ng,L,Hg], [B,L,N]x2
+        la = (-Ag[None, :, None, :] * dck).astype(f32)        # [B,ng,L,Hg]
+        cum = jnp.cumsum(la, axis=2)
+        cb = jnp.einsum("bin,bjn->bij", cck.astype(f32),
+                        bck.astype(f32))                      # [B,L,L]
+        seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,ng,i,j,Hg]
+        # mask BEFORE exp: upper-triangle seg is large-positive and would
+        # overflow, poisoning gradients through the where (inf * 0 = nan)
+        seg = jnp.where(mask[None, None, :, :, None], seg, -1e30)
+        att = jnp.exp(seg)
+        w = cb[:, None, :, :, None] * att * dck[:, :, None, :, :]
+        y = jnp.einsum("bgijh,bgjhp->bgihp", w, xck.astype(f32))
+        # inter-chunk: y_i += exp(cum_i) * C_i . S_prev
+        y += jnp.einsum("bin,bghpn,bgih->bgihp", cck.astype(f32),
+                        s_prev, jnp.exp(cum))
+        # state update
+        decay_tail = jnp.exp(cum[:, :, -1:, :] - cum) * dck   # [B,ng,L,Hg]
+        s_new = s_prev * jnp.exp(cum[:, :, -1])[..., None, None] \
+            + jnp.einsum("bgjh,bjn,bgjhp->bghpn", decay_tail,
+                         bck.astype(f32), xck.astype(f32))
+        return s_new, y
+
+    s0 = jnp.zeros((Bsz, ng, Hg, P, N), f32)
+    s_final, ys = jax.lax.scan(chunk_step, s0, (xc, dtc, Bc, Cc))
+    # ys: [nc, B, ng, L, Hg, P] -> [B, S, H, P]
+    y = ys.transpose(1, 0, 3, 2, 4, 5).reshape(Bsz, nc * L, H, P)
+    return y[:, :S].astype(xh.dtype), \
+        s_final.reshape(Bsz, H, P, N)
+
+
+def ssm_apply(p, x, scfg: SSMConfig, d_model: int, cache=None):
+    """Full mamba2 block.  cache: dict(conv, state, ...) for decode."""
+    B, S, D = x.shape
+    di = scfg.d_inner(d_model)
+    H = scfg.num_heads(d_model)
+    N = scfg.d_state
+    P = scfg.head_dim
+    proj = dense(p["in_proj"], x)
+    z, xs, Bm, Cm, dt = _split_proj(proj, di, N, H)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        None if cache is None else cache["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :di]
+    Bm = conv_out[..., di:di + N]
+    Cm = conv_out[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, P)
+
+    if cache is None:
+        y, state = ssd_chunked(xh, dt, A, Bm, Cm, scfg.chunk)
+        new_cache = None
+    elif S > 1:
+        # prefill: chunked scan over the prompt, keep the final state
+        y, state = ssd_chunked(xh, dt, A, Bm, Cm, scfg.chunk)
+        new_cache = {"conv": new_conv, "state": state}
+    else:
+        # decode: exact single-step recurrence (S == 1)
+        s_prev = cache["state"]                               # [B,H,P,N]
+        a = jnp.exp(-A[None, :] * dt[:, 0])                   # [B,H]
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        state = s_prev * a[:, :, None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       state)[:, None].reshape(B, 1, H, P)
+        y = y.astype(x.dtype)
+        new_cache = {"conv": new_conv, "state": state}
+
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    out = dense(p["out_proj"], y)
+    if cache is None:
+        return out, None
+    return out, new_cache
+
+
+def ssm_cache_init(batch, d_model, scfg: SSMConfig, dtype):
+    di = scfg.d_inner(d_model)
+    H = scfg.num_heads(d_model)
+    conv_dim = di + 2 * scfg.d_state
+    return {
+        "conv": jnp.zeros((batch, scfg.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, H, scfg.head_dim, scfg.d_state),
+                           jnp.float32),
+    }

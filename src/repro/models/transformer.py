@@ -1,0 +1,321 @@
+"""Unified LM stack covering all assigned families.
+
+Layers are grouped into repeating "pattern" super-blocks (e.g. recurrent-
+gemma's (rglru, rglru, attn)) and stacked with `lax.scan` so compile time
+stays flat in depth (94-layer qwen3 compiles as one block).  Heterogeneous
+preludes (DeepSeekMoE's first dense layer) stay unscanned.
+
+Modes:
+  train    - full sequence, loss-ready logits
+  prefill  - full sequence + returns populated KV/state caches
+  decode   - single token step against caches
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .layers import AttnConfig
+from .moe import moe_init, moe_apply
+from .rglru import rglru_apply, rglru_cache_init, rglru_init
+from .ssm import ssm_apply, ssm_cache_init, ssm_init
+
+
+def _attn_cfg(cfg: ModelConfig, impl: str, kind: str) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+        use_bias=cfg.use_bias, rope_theta=cfg.rope_theta,
+        rope_frac=cfg.rope_frac, causal=(kind != "enc"),
+        window=(cfg.local_window or None) if kind == "local" else None,
+        attn_impl=impl)
+
+
+def _layer_kind(cfg: ModelConfig, i: int) -> str:
+    return cfg.block_pattern[i % len(cfg.block_pattern)]
+
+
+def _ffn_kind(cfg: ModelConfig, i: int) -> str:
+    if cfg.moe is not None and i >= cfg.first_dense:
+        return "moe"
+    return "dense" if cfg.d_ff else "none"
+
+
+# --- single sub-block --------------------------------------------------------
+
+def _sub_init(key, cfg: ModelConfig, kind: str, ffn: str, dtype,
+              cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": L.rmsnorm_init(cfg.d_model)}
+    if kind in ("attn", "local", "enc"):
+        p["mix"] = L.attention_init(ks[0], _attn_cfg(cfg, "naive", kind),
+                                    dtype)
+    elif kind == "rglru":
+        p["mix"] = rglru_init(ks[0], cfg.d_model, cfg.rglru, dtype)
+    elif kind == "ssm":
+        p["mix"] = ssm_init(ks[0], cfg.d_model, cfg.ssm, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_x"] = L.rmsnorm_init(cfg.d_model)
+        p["cross"] = L.attention_init(ks[1], _attn_cfg(cfg, "naive", "enc"),
+                                      dtype)
+    if ffn == "dense":
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+        p["ffn"] = L.swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                                 cfg.use_bias)
+    elif ffn == "moe":
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+        p["ffn"] = moe_init(ks[2], cfg.d_model, cfg.moe, dtype)
+    return p
+
+
+def _sub_apply(p, cfg: ModelConfig, kind: str, ffn: str, impl: str,
+               x, positions, inv_freq, cache, memory=None):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    acfg = _attn_cfg(cfg, impl, kind)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local", "enc"):
+        mixed, new_cache = L.attention_apply(p["mix"], acfg, h, positions,
+                                             inv_freq, cache)
+    elif kind == "rglru":
+        mixed, new_cache = rglru_apply(p["mix"], h, cfg.rglru, cache)
+    elif kind == "ssm":
+        mixed, new_cache = ssm_apply(p["mix"], h, cfg.ssm, cfg.d_model,
+                                     cache)
+    x = x + mixed
+    if "cross" in p and memory is not None:
+        hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        xa, _ = L.attention_apply(p["cross"], acfg, hx, positions, inv_freq,
+                                  None, kv_memory=memory)
+        x = x + xa
+    if ffn == "dense":
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.swiglu(p["ffn"], h2)
+    elif ffn == "moe":
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, aux = moe_apply(p["ffn"], h2, cfg.moe)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _sub_cache_init(cfg: ModelConfig, kind: str, batch, max_len, dtype):
+    if kind in ("attn", "local"):
+        W = min(cfg.local_window, max_len) if kind == "local" \
+            and cfg.local_window else max_len
+        return {"k": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.hd), dtype),
+                "idx": jnp.zeros((), jnp.int32),
+                "base": jnp.zeros((), jnp.int32)}
+    if kind == "rglru":
+        return rglru_cache_init(batch, cfg.d_model, cfg.rglru, dtype)
+    if kind == "ssm":
+        return ssm_cache_init(batch, cfg.d_model, cfg.ssm, dtype)
+    raise ValueError(kind)
+
+
+# --- model -------------------------------------------------------------------
+
+def _segments(cfg: ModelConfig):
+    """(prelude_idx, scanned group count, pattern len, postlude_idx)."""
+    P = len(cfg.block_pattern)
+    pre = list(range(cfg.first_dense))
+    rest = cfg.num_layers - cfg.first_dense
+    groups = rest // P
+    post = list(range(cfg.first_dense + groups * P, cfg.num_layers))
+    return pre, groups, P, post
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = cfg.jdtype
+    ks = jax.random.split(key, 8)
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    params = {"embed": L.truncated_normal(
+        ks[0], (cfg.vocab_size, cfg.d_model), dtype, 1.0)}
+    pre, groups, P, post = _segments(cfg)
+    cross = cfg.encoder_layers > 0
+
+    def block_init(k, i):
+        return _sub_init(k, cfg, _layer_kind(cfg, i), _ffn_kind(cfg, i),
+                         dtype, cross=cross)
+
+    params["prelude"] = [block_init(k, i) for i, k in
+                         zip(pre, jax.random.split(ks[1], max(len(pre), 1)))]
+    if groups:
+        def group_init(k):
+            kk = jax.random.split(k, P)
+            return {f"sub{j}": block_init(kk[j], cfg.first_dense + j)
+                    for j in range(P)}
+        gkeys = jax.random.split(ks[2], groups)
+        params["blocks"] = jax.vmap(group_init)(gkeys)
+    params["postlude"] = [block_init(k, i) for i, k in
+                          zip(post, jax.random.split(ks[3], max(len(post), 1)))]
+    if cfg.encoder_layers:
+        def enc_init(k):
+            return _sub_init(k, cfg, "enc", "dense", dtype)
+        ekeys = jax.random.split(ks[4], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(enc_init)(ekeys)
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncated_normal(
+            ks[5], (cfg.d_model, cfg.vocab_size), dtype, scale)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = cfg.jdtype
+    pre, groups, P, post = _segments(cfg)
+    cache = {}
+    cache["prelude"] = [
+        _sub_cache_init(cfg, _layer_kind(cfg, i), batch, max_len, dtype)
+        for i in pre]
+    if groups:
+        def one(j):
+            return _sub_cache_init(cfg, _layer_kind(cfg, cfg.first_dense + j),
+                                   batch, max_len, dtype)
+        cache["blocks"] = {
+            f"sub{j}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (groups,) + x.shape), one(j))
+            for j in range(P)}
+    cache["postlude"] = [
+        _sub_cache_init(cfg, _layer_kind(cfg, i), batch, max_len, dtype)
+        for i in post]
+    return cache
+
+
+def forward(params, cfg: ModelConfig, batch: dict, mode: str = "train",
+            cache=None, attn_impl: str = "chunked", remat: bool = True,
+            constrain=None):
+    """batch: tokens [B, S] (+ prefix_embeds / src_embeds).  Returns
+    (logits, new_cache, aux_loss)."""
+    dtype = cfg.jdtype
+    constrain = constrain or (lambda x, kind="resid": x)
+    tokens = batch["tokens"]
+    B, S_tok = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.frontend and "prefix_embeds" in batch:
+        x = jnp.concatenate([batch["prefix_embeds"].astype(dtype), x],
+                            axis=1)
+    x = constrain(x)
+    B, S, D = x.shape
+    if mode == "decode":
+        # positions from the first attention cache idx (all layers agree)
+        idx = _first_idx(cache)
+        positions = idx + jnp.arange(S)[None, :].repeat(B, 0)
+    else:
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+    inv_freq = L.rope_freqs(cfg.hd, cfg.rope_theta,
+                            rot_dim=int(cfg.hd * cfg.rope_frac))
+
+    memory = batch.get("memory")
+    if cfg.encoder_layers and memory is None and "src_embeds" in batch:
+        src = batch["src_embeds"].astype(dtype)
+        mpos = jnp.arange(src.shape[1])[None, :].repeat(B, 0)
+
+        def enc_one(h, p):
+            h2, _, _ = _sub_apply(p, cfg, "enc", "dense", attn_impl, h,
+                                  mpos, inv_freq, None)
+            return constrain(h2), None
+        memory, _ = jax.lax.scan(enc_one, src, params["encoder"])
+
+    pre, groups, P, post = _segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {"prelude": [], "postlude": []} if cache is not None else None
+    use_cache = cache is not None
+
+    def run_sub(p, i, x, c):
+        kind = _layer_kind(cfg, i)
+        ffn = _ffn_kind(cfg, i)
+        return _sub_apply(p, cfg, kind, ffn, attn_impl, x, positions,
+                          inv_freq, c, memory)
+
+    for j, i in enumerate(pre):
+        c = cache["prelude"][j] if use_cache else None
+        x, nc, aux = run_sub(params["prelude"][j], i, x, c)
+        x = constrain(x)
+        aux_total += aux
+        if use_cache:
+            new_cache["prelude"].append(nc)
+
+    if groups:
+        def group_fn(carry, inp):
+            x, aux_acc = carry
+            gp = inp["params"]
+            gc = inp.get("cache")
+            ncs = {}
+            for j in range(P):
+                i = cfg.first_dense + j
+                c = gc[f"sub{j}"] if use_cache else None
+                x, nc, aux = run_sub(gp[f"sub{j}"], i, x, c)
+                x = constrain(x)
+                aux_acc = aux_acc + aux
+                if use_cache:
+                    ncs[f"sub{j}"] = nc
+            return (x, aux_acc), ncs if use_cache else None
+
+        fn = group_fn
+        if remat and mode == "train":
+            fn = jax.checkpoint(group_fn, prevent_cse=False)
+        xs = {"params": params["blocks"]}
+        if use_cache:
+            xs["cache"] = cache["blocks"]
+        (x, aux_total), blk_caches = jax.lax.scan(fn, (x, aux_total), xs)
+        if use_cache:
+            new_cache["blocks"] = blk_caches
+
+    for j, i in enumerate(post):
+        c = cache["postlude"][j] if use_cache else None
+        x, nc, aux = run_sub(params["postlude"][j], i, x, c)
+        x = constrain(x)
+        aux_total += aux
+        if use_cache:
+            new_cache["postlude"].append(nc)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.frontend and "prefix_embeds" in batch and mode != "decode":
+        x = x[:, -S_tok:]  # loss/logits only over the token positions
+    x = constrain(x, "gather")  # un-shard seq before the vocab matmul
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = constrain(logits, "logits")
+    return logits, new_cache, aux_total
+
+
+def _first_idx(cache):
+    for part in ("prelude", "postlude"):
+        for c in cache[part]:
+            if "idx" in c:
+                return c["idx"]
+    if "blocks" in cache:
+        for j in range(16):
+            sub = cache["blocks"].get(f"sub{j}")
+            if sub is None:
+                break
+            if "idx" in sub:
+                return sub["idx"][0]
+    return jnp.zeros((), jnp.int32)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict, attn_impl="chunked",
+            remat=True, constrain=None):
+    """Cross entropy over vocab-sharded logits (P(dp, None, "model"));
+    the fp32 exp/sum fuses into the reduction so the only materialized
+    [B, S, V] tensor is the bf16 logits, sharded dp x model."""
+    logits, _, aux = forward(params, cfg, batch, "train",
+                             attn_impl=attn_impl, remat=remat,
+                             constrain=constrain)
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    m = lg.max(axis=-1, keepdims=True)
+    lse = jnp.log(jnp.exp(lg - m).sum(axis=-1)) + m[..., 0]
+    ll = jnp.take_along_axis(lg, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + aux, {"nll": nll, "aux": aux}

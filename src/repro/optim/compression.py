@@ -1,0 +1,75 @@
+"""Gradient compression with error feedback for the scarce cross-pod tier.
+
+The switch-less Dragonfly's global (inter-W-group) links are the lowest
+bandwidth tier (Sec. III: off-wafer << on-wafer); when gradients must
+cross pods we quantize them to int8 with a per-tensor scale and carry the
+quantization error into the next step (EF-SGD style), which keeps
+convergence while cutting cross-pod bytes 4x vs fp32 / 2x vs bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(x):
+    """fp -> (int8, scale).  Symmetric per-tensor quantization."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(xf).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, err):
+    """Apply error feedback then quantize every leaf.
+
+    Returns (quantized tree of (q, scale), new error tree)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress(corrected)
+        back = decompress(q, s)
+        return (q, s), corrected - back
+
+    out = jax.tree.map(one, grads, err)
+    qt = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple)
+                      and len(x) == 2 and not isinstance(x[0], dict))
+    ne = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple)
+                      and len(x) == 2 and not isinstance(x[0], dict))
+    return qt, ne
+
+
+def decompress_tree(qt):
+    return jax.tree.map(
+        lambda t: decompress(*t),
+        qt, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def pod_compressed_psum(grads, err, pod_axis: str = "pod"):
+    """Inside shard_map: full-precision psum within the pod ("data" axis
+    handled by pjit), int8+EF psum across pods.
+
+    Used by the train loop's manual-collective path; the pjit path prices
+    the same traffic via the fabric cost model instead."""
+    qt, new_err = ef_compress_tree(grads, err)
+
+    def allreduce_one(t):
+        q, s = t
+        # sum int32 across pods, rescale by the max scale (conservative)
+        qs = jax.lax.psum(q.astype(jnp.int32), pod_axis)
+        ss = jax.lax.pmax(s, pod_axis)
+        return qs.astype(jnp.float32) * ss
+
+    summed = jax.tree.map(
+        allreduce_one, qt,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    return summed, new_err

@@ -1,0 +1,95 @@
+"""AdamW with WSD / cosine schedules, gradient clipping, bf16 params with
+fp32 master copies (ZeRO-sharded via runtime/sharding.opt_state_specs),
+and optional gradient compression on the scarce cross-pod tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    decay_frac: float = 0.1        # WSD: last 10% of steps decay
+    schedule: str = "cosine"       # "cosine" | "wsd" | "const"
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_pod_grads: bool = False
+
+
+def schedule_lr(cfg: OptConfig, step):
+    """Learning-rate schedules; WSD (warmup-stable-decay) is the MiniCPM
+    schedule [arXiv:2404.06395]."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) \
+            * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = 1.0 - cfg.decay_frac
+        d = jnp.clip((t - decay_start) / cfg.decay_frac, 0, 1)
+        frac = 1.0 - (1 - cfg.min_lr_frac) * d
+    else:
+        frac = jnp.ones_like(t)
+    return cfg.lr * warm * frac
+
+
+def init_opt_state(params):
+    """fp32 master weights + first/second moments.  The master copy is a
+    real copy even for fp32 leaves (donation safety)."""
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, grads, opt_state, params):
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        w = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * w * (w.ndim > 1))
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"],
+                       opt_state["master"])
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    w = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda wm, p: wm.astype(p.dtype), w, params)
+    new_state = {"master": w, "m": m, "v": v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

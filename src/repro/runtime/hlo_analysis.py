@@ -1,0 +1,197 @@
+"""Collective-traffic extraction from compiled/optimized HLO text.
+
+cost_analysis() has FLOPs and HBM bytes but not collective bytes; we
+regex every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op, sum operand sizes, and attribute each op to a mesh
+axis by the stride pattern of its replica groups."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    bpe = _DTYPE_BYTES.get(dtype)
+    if bpe is None:
+        return 0
+    if not dims:
+        return bpe
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * bpe
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _build_def_table(hlo_text: str) -> dict:
+    """%name -> result bytes (operand shapes are not printed inline in
+    optimized HLO, so operand sizes are resolved through definitions)."""
+    table = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            table[m.group(1)] = _type_bytes(m.group(2))
+    return table
+
+
+def _operand_bytes(line: str, def_table: dict) -> int:
+    """Sum sizes of the operands of an HLO op line."""
+    if "(" not in line:
+        return 0
+    args = line[line.index("("):]
+    depth = 0
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args = args[:i]
+                break
+    total = 0
+    # inline shapes (older printers) ...
+    for m in _SHAPE_RE.finditer(args):
+        total += _shape_bytes(m.group(1), m.group(2))
+    if total:
+        return total
+    # ... otherwise resolve through the def table
+    for m in _OPERAND_RE.finditer(args):
+        total += def_table.get(m.group(0), 0)
+    return total
+
+
+def _classify_groups(line: str, axis_sizes: dict) -> str:
+    """Map a collective's replica groups to a mesh-axis label.
+
+    axis_sizes: ordered {axis: size} major-to-minor, e.g.
+    {"pod": 2, "data": 16, "model": 16} -> device id =
+    pod*256 + data*16 + model."""
+    names = list(axis_sizes)
+    sizes = [axis_sizes[a] for a in names]
+    strides = {}
+    s = 1
+    for a, sz in zip(reversed(names), reversed(sizes)):
+        strides[a] = s
+        s *= sz
+
+    def classify(group):
+        if len(group) <= 1:
+            return "none"
+        d = group[1] - group[0]
+        matched = [a for a in names if strides[a] == d
+                   and len(group) <= axis_sizes[a] * (
+                       strides[a] and 1)]
+        # single-axis?
+        for a in names:
+            if d == strides[a] and len(group) == axis_sizes[a] and \
+               all(group[i + 1] - group[i] == d
+                   for i in range(len(group) - 1)):
+                return a
+        # combined axes (e.g. data+model = contiguous block)
+        span = group[-1] - group[0] + 1
+        if span == len(group):
+            combo = []
+            prod = 1
+            for a in reversed(names):
+                combo.append(a)
+                prod *= axis_sizes[a]
+                if prod == len(group):
+                    return "+".join(reversed(combo))
+        return "mixed"
+
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        ids = [int(x) for x in first.split(",") if x]
+        return classify(ids)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = [int(x) for x in m.group(4).split(",")] if m.group(4) \
+            else list(range(len(dims)))
+        arr = np.arange(int(np.prod(dims))).reshape(dims).transpose(perm)
+        ids = arr.reshape(ngroups, gsize)[0].tolist()
+        return classify(sorted(ids))
+    if _PAIRS_RE.search(line):
+        m2 = _PAIRS_RE.search(line)
+        first = m2.group(1).split("},{")[0].strip("{}")
+        ids = [int(x) for x in first.split(",") if x]
+        if len(ids) == 2:
+            d = abs(ids[1] - ids[0])
+            for a, st in strides.items():
+                if d == st:
+                    return a
+        return "mixed"
+    return "unknown"
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def collective_bytes(hlo_text: str, axis_sizes: dict,
+                     loop_trips: tuple = ()) -> dict:
+    """Sum operand sizes of every collective in the (per-device SPMD
+    partitioned) HLO.
+
+    Collectives whose op_name metadata places them inside while bodies
+    (jax scans) are scaled by the caller-supplied loop trip counts: the
+    i-th "while/body" nesting level multiplies by loop_trips[i] (layers
+    scan, then inner chunk scans).  Missing levels default to 1, so with
+    loop_trips=() this degrades to a static count.
+    """
+    by_op = defaultdict(int)
+    by_axis = defaultdict(int)
+    ops = []
+    def_table = _build_def_table(hlo_text)
+    pat = re.compile(r"=\s+[\w\[\],{}\s]*?\b(" + "|".join(
+        COLLECTIVE_OPS) + r")(?:-start|-done)?\(")
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = pat.search(ls)
+        if not m:
+            continue
+        if "-done(" in ls:
+            continue  # paired with -start; count once
+        op = m.group(1)
+        nbytes = _operand_bytes(ls, def_table)
+        nm = _OPNAME_RE.search(ls)
+        depth = nm.group(1).count("while/body") if nm else 0
+        mult = 1
+        for i in range(min(depth, len(loop_trips))):
+            mult *= max(int(loop_trips[i]), 1)
+        nbytes *= mult
+        axis = _classify_groups(ls, axis_sizes)
+        by_op[op] += nbytes
+        by_axis[axis] += nbytes
+        ops.append({"op": op, "bytes": nbytes, "axis": axis, "mult": mult})
+    return {"by_op": dict(by_op), "by_axis": dict(by_axis), "ops": ops}

@@ -1,0 +1,222 @@
+"""Sharding rules: DP / TP (Megatron-style) / EP / FSDP via PartitionSpecs.
+
+Axis->fabric-tier mapping (the paper's Eq. (3) load-balance transposed to
+ML collectives, DESIGN.md Sec. 2):
+  "model" -> on-wafer C-group links  (TP/EP collectives, highest volume)
+  "data"  -> intra-W-group local links (gradient reduction)
+  "pod"   -> global links (rare cross-pod sync, compressed)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def param_spec(path: tuple, shape: tuple, mesh: Mesh,
+               fsdp_threshold: int = 1 << 22) -> P:
+    """Sharding rule for one parameter.
+
+    path: tuple of pytree keys (strings).  Stacked scan blocks carry a
+    leading group dim which is never sharded.
+    """
+    mp = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+    name = "/".join(str(k) for k in path)
+    nd = len(shape)
+    spec = [None] * nd
+
+    # detect the stacked-groups leading axis: blocks/* params have one more
+    # dim than their logical shape; we simply never shard dim 0 of blocks.
+    off = 1 if name.startswith("blocks/") or name.startswith("encoder/") \
+        else 0
+
+    def logical(i):
+        return off + i
+
+    ls = shape[off:]
+    lnd = len(ls)
+
+    if name.endswith("embed") or "lm_head" in name:
+        # vocab-parallel embedding / output head
+        vdim = 0 if name.endswith("embed") else 1
+        if _div(ls[vdim], mp):
+            spec[logical(vdim)] = "model"
+        other = 1 - vdim
+        if _div(ls[other], dsize) and np.prod(ls) > fsdp_threshold:
+            spec[logical(other)] = "data"
+    elif "router" in name:
+        pass  # replicated
+    elif lnd == 3:  # stacked experts [E, din, dout]
+        if _div(ls[0], mp):
+            spec[logical(0)] = "model"      # expert parallelism
+            if _div(ls[1], dsize) and np.prod(ls) > fsdp_threshold:
+                spec[logical(1)] = "data"   # FSDP within expert
+        elif _div(ls[2], mp):
+            spec[logical(2)] = "model"
+    elif lnd == 2:
+        din, dout = ls
+        col_parallel = any(s in name for s in (
+            "/q/", "/k/", "/v/", "wi", "wg", "in_x", "in_gate", "in_proj",
+            "w_a", "w_x"))
+        row_parallel = any(s in name for s in (
+            "/o/", "wo", "out", "out_proj"))
+        if col_parallel and _div(dout, mp):
+            spec[logical(1)] = "model"
+            if _div(din, dsize) and np.prod(ls) > fsdp_threshold:
+                spec[logical(0)] = "data"
+        elif row_parallel and _div(din, mp):
+            spec[logical(0)] = "model"
+            if _div(dout, dsize) and np.prod(ls) > fsdp_threshold:
+                spec[logical(1)] = "data"
+        elif _div(dout, mp):
+            spec[logical(1)] = "model"
+        elif _div(din, mp):
+            spec[logical(0)] = "model"
+    # 1D (biases, norm scales, A_log, conv) stay replicated
+    return P(*spec)
+
+
+def tree_param_specs(params_or_shapes, mesh: Mesh, **kw):
+    """PartitionSpec pytree for a parameter pytree (arrays or
+    ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_or_shapes)
+
+    def key_name(k):
+        if hasattr(k, "key"):
+            return str(k.key)
+        if hasattr(k, "idx"):
+            return str(k.idx)
+        return str(k)
+
+    specs = []
+    for path, leaf in flat:
+        names = tuple(key_name(k) for k in path)
+        specs.append(param_spec(names, leaf.shape, mesh, **kw))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(param_specs_tree, params_or_shapes, mesh: Mesh):
+    """ZeRO: optimizer moments reuse the param spec and additionally shard
+    the first unsharded divisible dim over "data"."""
+    dsize = _axis_size(mesh, "data")
+
+    def extend(spec, leaf):
+        parts = list(spec)
+        parts += [None] * (len(leaf.shape) - len(parts))
+        if "data" in parts:
+            return P(*parts)
+        for i, (p, s) in enumerate(zip(parts, leaf.shape)):
+            if p is None and _div(s, dsize) and s >= dsize:
+                parts[i] = "data"
+                return P(*parts)
+        return P(*parts)
+
+    return jax.tree.map(extend, param_specs_tree, params_or_shapes)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def batch_specs(batch_shapes, mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    n = _dp_size(mesh)
+    out = {}
+    for k, v in batch_shapes.items():
+        lead = dp if v.shape and _div(v.shape[0], n) else None
+        spec = [lead] + [None] * (len(v.shape) - 1)
+        # batch-1 long-context: shard the sequence dim over data instead
+        if lead is None and len(v.shape) >= 2 and _div(v.shape[1], n) \
+                and v.shape[1] >= n:
+            spec[1] = dp
+        out[k] = P(*spec)
+    return out
+
+
+def cache_specs(cache, mesh: Mesh):
+    """KV/state caches: batch-sharded; KV heads sharded over model when
+    divisible."""
+    dp = dp_axes(mesh)
+    mp = _axis_size(mesh, "model")
+
+    n = _dp_size(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        names = [getattr(k, "key", None) for k in path]
+        stacked = "blocks" in names
+        off = 1 if stacked else 0
+        spec = [None] * len(shape)
+        if len(shape) - off == 0:
+            return P(*spec)
+        if len(shape) - off >= 1 and _div(shape[off], n):
+            spec[off] = dp          # batch dim
+        # kv cache [B, W, KV, hd]: shard KV heads over model if divisible,
+        # otherwise shard the window (sequence) dim — ring-attention-style
+        # sequence parallelism for long caches
+        if len(shape) - off == 4:
+            if _div(shape[off + 2], mp):
+                spec[off + 2] = "model"
+            elif _div(shape[off + 1], mp) and shape[off + 1] >= 4 * mp:
+                spec[off + 1] = "model"
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    # scalars (idx) replicated
+    specs = []
+    for path, leaf in flat:
+        if leaf.ndim == 0 or (leaf.ndim == 1 and "blocks" in
+                              [getattr(k, "key", None) for k in path]):
+            specs.append(P(*([None] * leaf.ndim)))
+        else:
+            specs.append(one(path, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def make_constrain(mesh: Mesh, seq_parallel: bool = True):
+    """Activation constraint closure passed into the model: batch over the
+    data axes and — Megatron sequence parallelism — the sequence dim over
+    "model" for the residual stream (GSPMD inserts the all-gather /
+    reduce-scatter pairs around attention/FFN, cutting per-device
+    activation memory by the TP degree)."""
+    dp = dp_axes(mesh)
+    mp = _axis_size(mesh, "model")
+
+    def constrain(x, kind: str = "resid"):
+        if x.ndim != 3:
+            return x
+        if kind == "logits":
+            spec = P(dp, None, "model") if x.shape[2] % mp == 0 \
+                else P(dp, None, None)
+        elif kind == "gather":      # replicate features, batch-shard only
+            spec = P(dp, None, None)
+        elif seq_parallel and x.shape[1] % mp == 0 and x.shape[1] >= mp:
+            spec = P(dp, "model", None)
+        else:
+            spec = P(dp, None, None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def shardings(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,204 @@
+"""jit-compiled train/prefill/decode steps with full sharding, plus the
+host-side training loop used by the launcher and the fault-tolerance
+harness."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as TF
+from repro.optim.optimizer import OptConfig, adamw_update, init_opt_state
+from repro.runtime import sharding as SH
+
+
+@dataclass(frozen=True)
+class TrainSetup:
+    model: ModelConfig
+    opt: OptConfig
+    attn_impl: str = "chunked"
+    remat: bool = True
+    # gradient accumulation: split the global batch into this many
+    # microbatches (scan) — divides activation memory by the same factor
+    microbatch: int = 1
+
+
+def make_train_step(setup: TrainSetup, mesh):
+    cfg = setup.model
+    constrain = SH.make_constrain(mesh)
+
+    def loss_fn(p, batch):
+        return TF.lm_loss(p, cfg, batch, attn_impl=setup.attn_impl,
+                          remat=setup.remat, constrain=constrain)
+
+    def train_step(params, opt_state, batch):
+        k = setup.microbatch
+        if k <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (l, met), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / k, g_acc, g)
+                return (g_acc, l_acc + l / k), met
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), mets = jax.lax.scan(acc_fn, (g0, 0.0), micro)
+            metrics = jax.tree.map(lambda m: m.mean(), mets)
+        new_params, new_opt, om = adamw_update(setup.opt, grads, opt_state,
+                                               params)
+        return new_params, new_opt, dict(loss=loss, **metrics, **om)
+
+    return train_step
+
+
+def make_prefill_step(setup: TrainSetup, mesh):
+    cfg = setup.model
+    constrain = SH.make_constrain(mesh)
+
+    def prefill_step(params, batch, cache):
+        logits, new_cache, _ = TF.forward(
+            params, cfg, batch, mode="prefill", cache=cache,
+            attn_impl=setup.attn_impl, remat=False, constrain=constrain)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(setup: TrainSetup, mesh):
+    cfg = setup.model
+
+    def decode_step(params, batch, cache):
+        logits, new_cache, _ = TF.forward(
+            params, cfg, batch, mode="decode", cache=cache,
+            attn_impl="naive", remat=False)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return decode_step
+
+
+def jit_train_step(setup: TrainSetup, mesh, batch_shapes):
+    """Fully sharded jitted train step (params/opt donated)."""
+    pspec_tree = None
+
+    def build(params_shapes, opt_shapes):
+        nonlocal pspec_tree
+        pspecs = SH.tree_param_specs(params_shapes, mesh)
+        ospecs = {
+            "master": SH.opt_state_specs(pspecs, params_shapes, mesh),
+            "m": SH.opt_state_specs(pspecs, params_shapes, mesh),
+            "v": SH.opt_state_specs(pspecs, params_shapes, mesh),
+            "step": P(),
+        }
+        bspecs = SH.batch_specs(batch_shapes, mesh)
+        pspec_tree = (pspecs, ospecs, bspecs)
+        fn = make_train_step(setup, mesh)
+        return jax.jit(
+            fn,
+            in_shardings=(SH.shardings(pspecs, mesh),
+                          SH.shardings(ospecs, mesh),
+                          SH.shardings(bspecs, mesh)),
+            out_shardings=(SH.shardings(pspecs, mesh),
+                           SH.shardings(ospecs, mesh), None),
+            donate_argnums=(0, 1))
+
+    return build
+
+
+class Trainer:
+    """Host loop: data -> jitted step -> metrics/checkpoints."""
+
+    def __init__(self, setup: TrainSetup, mesh, data_it, checkpointer=None,
+                 ckpt_every: int = 0, seed: int = 0):
+        self.setup = setup
+        self.mesh = mesh
+        self.data = data_it
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        cfg = setup.model
+        key = jax.random.PRNGKey(seed)
+        with jax.default_device(jax.devices()[0]):
+            params = TF.init_params(key, cfg)
+        pspecs = SH.tree_param_specs(params, mesh)
+        self.params = jax.device_put(params, SH.shardings(pspecs, mesh))
+        opt = init_opt_state(self.params)
+        ospecs = {
+            "master": SH.opt_state_specs(pspecs, params, mesh),
+            "m": SH.opt_state_specs(pspecs, params, mesh),
+            "v": SH.opt_state_specs(pspecs, params, mesh),
+            "step": P(),
+        }
+        self.opt_state = jax.device_put(opt, SH.shardings(ospecs, mesh))
+        self.pspecs, self.ospecs = pspecs, ospecs
+        self._jit = None
+        self.step = 0
+        self.history = []
+        self.step_times = []
+
+    def _ensure_jit(self, batch):
+        if self._jit is None:
+            bspecs = SH.batch_specs(batch, self.mesh)
+            fn = make_train_step(self.setup, self.mesh)
+            self._jit = jax.jit(
+                fn,
+                in_shardings=(SH.shardings(self.pspecs, self.mesh),
+                              SH.shardings(self.ospecs, self.mesh),
+                              SH.shardings(bspecs, self.mesh)),
+                donate_argnums=(0, 1))
+
+    def run(self, steps: int, on_step=None):
+        for _ in range(steps):
+            batch = next(self.data)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self._ensure_jit(batch)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._jit(
+                self.params, self.opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self.step += 1
+            self.step_times.append(dt)
+            self.history.append(metrics)
+            if on_step:
+                on_step(self.step, metrics, dt)
+            if (self.ckpt is not None and self.ckpt_every
+                    and self.step % self.ckpt_every == 0):
+                self.save()
+        return self.history
+
+    def save(self, blocking: bool = True):
+        state = {"params": self.params, "opt": self.opt_state,
+                 "data": {"step": jnp.asarray(self.data.state()["step"])}}
+        self.ckpt.save(self.step, state, blocking=blocking)
+
+    def restore(self, step=None):
+        tmpl = {"params": self.params, "opt": self.opt_state,
+                "data": {"step": jnp.zeros((), jnp.int32)}}
+        shardings = {"params": SH.shardings(self.pspecs, self.mesh),
+                     "opt": SH.shardings(self.ospecs, self.mesh),
+                     "data": {"step": None}}
+        state, ck_step = self.ckpt.restore(tmpl, step, shardings=None)
+        self.params = jax.device_put(state["params"],
+                                     SH.shardings(self.pspecs, self.mesh))
+        self.opt_state = jax.device_put(state["opt"],
+                                        SH.shardings(self.ospecs, self.mesh))
+        self.data.restore({"step": int(state["data"]["step"])})
+        self.step = ck_step
+        return ck_step

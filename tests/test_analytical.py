@@ -1,0 +1,100 @@
+"""Property tests of the paper's closed-form models (Eqs. 1-7, Table III)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical as A
+from repro.core import topology as T
+
+
+def test_eq1_paper_small_config():
+    # "Using a very small configuration (a,b,m,n)=(2,4,2,6), the total
+    # chiplet number can reach 1K."
+    p = T.SwitchlessParams(a=2, b=4, m=2, n=6)
+    assert A.total_chiplets(p) == 1312  # ~1K
+
+
+def test_radix16_eval_config():
+    p = T.paper_radix16_switchless()
+    assert p.k == 12 and p.h == 5 and p.ab == 8
+    assert p.g_max == 41 and p.num_chips == 1312
+    d = T.paper_radix16_dragonfly()
+    assert d.num_groups == 41 and d.num_chips == 1312
+
+
+def test_radix32_eval_config():
+    p = T.paper_radix32_switchless()
+    assert p.k == 24 and p.h == 9 and p.ab == 16
+    assert p.g_max == 145 and p.num_chips == 18560
+    d = T.paper_radix32_dragonfly()
+    assert d.num_groups == 145 and d.num_chips == 18560
+
+
+def test_table3_case_study():
+    p = T.paper_table3_switchless()
+    assert p.g_max == 545
+    assert A.total_chiplets(p) == 279040
+    c = A.switchless_case(p)
+    assert c.num_switches == 0
+    assert c.num_cabinets == 545
+    assert c.num_processors == 279040
+    sling = A.dragonfly_slingshot_case()
+    assert sling.num_processors == 279040
+    assert sling.num_switches == 17440
+    assert sling.num_cabinets == 2180
+    # cable-length claim: less than half of the switch-based Dragonfly
+    assert c.cable_length_E < 0.5 * sling.cable_length_E
+
+
+def test_balanced_config_throughput():
+    # Eq. (3): n = 3m, ab = 2m^2 gives T_global >= 1, T_local = 2, T_cg = 3
+    for m in (2, 4):
+        p = T.SwitchlessParams(a=2, b=m * m, m=m, n=3 * m)
+        assert A.is_balanced_config(p)
+        assert A.global_throughput_bound(p) >= 1.0
+        assert A.local_throughput_bound(p) == pytest.approx(2.0)
+        assert A.cgroup_throughput_bound(p) == pytest.approx(3.0)
+        assert A.cgroup_bisection(p) == pytest.approx(p.k / 2)
+
+
+def test_diameter_eq7():
+    p = T.paper_radix16_switchless()
+    d = A.switchless_diameter(p)
+    assert (d.global_hops, d.local_hops, d.sr_hops) == (1, 2, 8 * p.m - 2)
+    # switch-less trades 2 cable hops (H_l*) for on-wafer hops: latency win
+    assert d.latency_ns() < A.dragonfly_diameter().latency_ns()
+
+
+@given(m=st.integers(1, 6), am=st.integers(1, 4), bm=st.integers(1, 8),
+       nm=st.integers(1, 12))
+@settings(max_examples=200, deadline=None)
+def test_eq1_consistency(m, am, bm, nm):
+    """Eq. (1) equals ab*m^2*g_max for any feasible parameter set."""
+    p = T.SwitchlessParams(a=am, b=bm, m=m, n=nm)
+    if p.h < 1:
+        return
+    assert A.total_chiplets(p) == p.ab * m * m * p.g_max
+    assert A.total_chiplets(p) == p.N_eq1
+
+
+@given(m=st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_balanced_family(m):
+    """The Eq. (3) family is balanced for every m and hits T_global >= 1:
+    (mn - ab + 1)/m^2 = (m^2 + 1)/m^2 >= 1."""
+    p = T.SwitchlessParams(a=1, b=2 * m * m, m=m, n=3 * m)
+    assert A.is_balanced_config(p)
+    assert A.global_throughput_bound(p) == pytest.approx(
+        (m * m + 1) / (m * m))
+    assert A.global_throughput_bound(p) >= 1.0
+
+
+def test_energy_model_switchless_beats_switch_based():
+    # Fig. 15 qualitative claim with the Table II constants: a minimal-routed
+    # packet (1 global + 2 local + ~14 SR hops at m=2) costs less than the
+    # switch-based (1 global + 2 local + 2 terminal-cable hops).
+    swl = A.energy_per_packet_pj_per_bit(
+        {"mesh": 14, "local": 2, "global": 1, "term_onchip": 2})
+    swb = A.energy_per_packet_pj_per_bit(
+        {"local": 2, "global": 1, "term_cable": 2})
+    assert swl < swb

@@ -1,0 +1,132 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret mode on CPU; the kernels target TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rglru import ops as rg_ops
+from repro.kernels.rglru import ref as rg_ref
+from repro.kernels.ssd_scan import ops as sd_ops
+from repro.kernels.ssd_scan import ref as sd_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    denom = max(np.abs(b).max(), 1e-6)
+    return np.abs(a - b).max() / denom
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,hd", [
+    (1, 128, 128, 2, 2, 64),
+    (2, 256, 256, 4, 2, 64),      # GQA groups=2
+    (2, 192, 320, 4, 1, 80),      # MQA, ragged seq, odd head_dim
+    (1, 512, 512, 8, 8, 128),     # MHA, aligned
+    (1, 64, 64, 10, 1, 256),      # recurrentgemma-like heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Sk, H, KV, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * Sq + hd), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, hd), dtype)
+    o = fa_ops.flash_attention(q, k, v, causal=True)
+    ref = fa_ref.attention_ref(q, k, v, causal=True)
+    assert _err(o, ref) < TOL[dtype]
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 2, 64), jnp.float32)
+    o = fa_ops.flash_attention(q, k, v, causal=True, window=window)
+    ref = fa_ref.attention_ref(q, k, v, causal=True, window=window)
+    assert _err(o, ref) < TOL[jnp.float32]
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 96, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 96, 2, 64), jnp.float32)
+    o = fa_ops.flash_attention(q, k, v, causal=False)
+    ref = fa_ref.attention_ref(q, k, v, causal=False)
+    assert _err(o, ref) < TOL[jnp.float32]
+
+
+@given(st.integers(1, 3), st.sampled_from([64, 100, 192]),
+       st.sampled_from([16, 64]), st.sampled_from([16, 32]))
+@settings(max_examples=8, deadline=None)
+def test_ssd_property(B, S, P, N):
+    H = 2
+    ks = jax.random.split(jax.random.PRNGKey(S * P + N), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = jnp.abs(jax.random.normal(ks[2], (H,))) + 0.1
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y = sd_ops.ssd_scan(x, dt, A, Bm, Cm, chunk=32)
+    ref, _ = sd_ref.ssd_ref(x, dt, A, Bm, Cm)
+    assert _err(y, ref) < 1e-4
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 128])
+def test_ssd_chunk_invariance(chunk):
+    """The chunked kernel result must not depend on the chunk size."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, H, P, N = 1, 160, 2, 32, 16
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = jnp.abs(jax.random.normal(ks[2], (H,))) + 0.1
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y = sd_ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    ref, _ = sd_ref.ssd_ref(x, dt, A, Bm, Cm)
+    assert _err(y, ref) < 1e-4
+
+
+@pytest.mark.parametrize("B,S,R,chunk,block_r", [
+    (1, 128, 128, 64, 128),
+    (2, 300, 192, 128, 128),     # padding both dims
+    (2, 64, 512, 64, 256),
+])
+def test_rglru_sweep(B, S, R, chunk, block_r):
+    ks = jax.random.split(jax.random.PRNGKey(R + S), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, R))) * 0.2 + 0.79
+    b = jax.random.normal(ks[1], (B, S, R)) * 0.1
+    h = rg_ops.rglru_scan(a, b, chunk=chunk, block_r=block_r)
+    ref = rg_ref.rglru_scan_ref(a, b)
+    assert _err(h, ref) < 1e-5
+
+
+def test_rglru_long_decay_stability():
+    """Long sequences with a ~ 1 must not blow up."""
+    B, S, R = 1, 2048, 128
+    a = jnp.full((B, S, R), 0.999, jnp.float32)
+    b = jnp.full((B, S, R), 0.01, jnp.float32)
+    h = rg_ops.rglru_scan(a, b)
+    ref = rg_ref.rglru_scan_ref(a, b)
+    assert _err(h, ref) < 1e-5
+    assert bool(jnp.isfinite(h).all())
+
+
+def test_models_chunked_attention_matches_kernel():
+    """The model-side chunked jnp implementation agrees with the Pallas
+    kernel (two independent flash implementations)."""
+    from repro.models.layers import chunked_attention
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    B, S, H, hd = 2, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    o1 = chunked_attention(q, k, v, causal=True, chunk_q=64, chunk_k=64)
+    o2 = fa_ops.flash_attention(q, k, v, causal=True)
+    assert _err(o1, o2) < 2e-5

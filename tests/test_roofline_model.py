@@ -1,0 +1,42 @@
+"""Validate the analytic roofline FLOPs model against XLA cost_analysis
+at smoke scale with a single scan group (where the scan-once counting of
+HloCostAnalysis is exact)."""
+import dataclasses
+import os
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs.registry import get_config
+from repro.models import transformer as TF
+
+
+def test_analytic_flops_match_hlo_single_group():
+    cfg = dataclasses.replace(get_config("llama3.2-3b-smoke"),
+                              num_layers=1, vocab_size=512)
+    B, S = 2, 64
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_sds = jax.eval_shape(partial(TF.init_params, cfg=cfg), key_sds)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def loss(p, b):
+        return TF.lm_loss(p, cfg, b, attn_impl="naive", remat=False)[0]
+
+    grad = jax.jit(jax.grad(loss))
+    compiled = grad.lower(params_sds, batch).compile()
+    hlo_flops = compiled.cost_analysis().get("flops", 0.0)
+
+    tokens = B * S
+    n = cfg.num_params()
+    analytic = 6 * n * tokens \
+        + 12 * B * S * (S / 2) * cfg.num_heads * cfg.hd * cfg.num_layers
+    # HLO counts matmul FLOPs (2mnk); elementwise/softmax add some slack
+    assert hlo_flops > 0
+    ratio = analytic / hlo_flops
+    assert 0.4 < ratio < 2.5, (analytic, hlo_flops, ratio)

@@ -1,0 +1,157 @@
+"""Routing correctness: delivery, hop bounds (Eq. 7), VC bounds, and
+deadlock freedom via channel-dependency-graph acyclicity (Sec. IV)."""
+import numpy as np
+import pytest
+
+from repro.core import routing as R
+from repro.core import topology as T
+
+
+@pytest.fixture(scope="module")
+def net():
+    return T.build_switchless(T.SwitchlessParams(a=2, b=2, m=2, n=4, noc=2,
+                                                 g=5))
+
+
+@pytest.fixture(scope="module")
+def dnet():
+    return T.build_switch_dragonfly(T.SwitchDragonflyParams(t=2, l=3, gl=2,
+                                                            g=5))
+
+
+def _all_pairs(net, limit=30000, seed=0):
+    Tn = net.num_terminals
+    if Tn * Tn <= limit:
+        s, d = np.divmod(np.arange(Tn * Tn), Tn)
+    else:
+        rng = np.random.default_rng(seed)
+        s = rng.integers(0, Tn, size=limit)
+        d = rng.integers(0, Tn, size=limit)
+    keep = s != d
+    return s[keep], d[keep]
+
+
+def test_minimal_paths_deliver_and_respect_diameter(net):
+    """Eq. (7): inter-C-group hops <= 1 global + 2 local; intra-C-group
+    hops <= 8m - 2 mesh hops (+ inject/eject)."""
+    p = T.SwitchlessParams(**{k: v for k, v in
+                              net.meta["params"].items()})
+    route_fn = R.make_route_fn(net, "baseline")
+    s, d = _all_pairs(net, limit=20000)
+    mis = np.full(len(s), -1)
+    chans, vcs, lengths = R.trace_paths(net, route_fn, s, d, mis)
+    types = np.where(chans >= 0, net.ch_type[np.clip(chans, 0, None)], -1)
+    n_global = (types == T.GLOBAL).sum(axis=1)
+    n_local = (types == T.LOCAL).sum(axis=1)
+    n_mesh = (types == T.MESH).sum(axis=1)
+    assert (n_global <= 1).all()
+    assert (n_local <= 2).all()
+    # Eq. (7) at router granularity: 4 C-group transits x XY diameter
+    # 2(R-1).  (The paper counts chiplet-level hops, 8m-2 with SR-LR
+    # conversions; our SR-LR conversion cost lives in the LR link latency.)
+    assert (n_mesh <= 4 * 2 * (p.R - 1)).all()
+    # every path ends with an ejection at the right terminal
+    last = chans[np.arange(len(s)), lengths - 1]
+    assert (net.ch_type[last] == T.EJECT).all()
+    # eject channel of terminal d
+    assert (last == net.eject_ch[net.term_node[d]] ).all()
+
+
+def test_vc_counts(net):
+    """Baseline minimal uses <= 4 VCs (Sec. IV-A); our W-group-wide
+    up*/down* scheme uses <= 2 (beyond the paper's 3, Sec. IV-B)."""
+    s, d = _all_pairs(net, limit=20000)
+    mis = np.full(len(s), -1)
+    for mode, bound in [("baseline", 4), ("updown", 2),
+                        ("updown_merged", 2)]:
+        route_fn = R.make_route_fn(net, mode)
+        _, vcs, _ = R.trace_paths(net, route_fn, s, d, mis)
+        assert int(vcs.max()) + 1 <= bound, mode
+
+
+def test_vc_counts_nonminimal(net):
+    rng = np.random.default_rng(1)
+    s, d = _all_pairs(net, limit=8000)
+    g = net.meta["g"]
+    wg = net.tables["node_wg"]
+    wg_s, wg_d = wg[net.term_node[s]], wg[net.term_node[d]]
+    mis = rng.integers(0, g, size=len(s))
+    mis = np.where((mis == wg_s) | (mis == wg_d), -1, mis)
+    for mode, bound in [("baseline", 6), ("updown", 3)]:
+        route_fn = R.make_route_fn(net, mode)
+        _, vcs, _ = R.trace_paths(net, route_fn, s, d, mis)
+        assert int(vcs.max()) + 1 <= bound, mode
+
+
+@pytest.mark.parametrize("mode,nonmin", [
+    ("baseline", False), ("baseline", True),
+    ("updown", False), ("updown", True),
+    ("updown_merged", False), ("updown_merged", True),
+])
+def test_deadlock_freedom_switchless(net, mode, nonmin):
+    rng = np.random.default_rng(7)
+    edges = R.assert_deadlock_free(net, mode, nonmin, rng, n_pairs=6000)
+    assert edges > 0
+
+
+@pytest.mark.parametrize("nonmin", [False, True])
+def test_deadlock_freedom_dragonfly(dnet, nonmin):
+    rng = np.random.default_rng(7)
+    edges = R.assert_deadlock_free(dnet, "baseline", nonmin, rng,
+                                   n_pairs=6000)
+    assert edges > 0
+
+
+def test_deadlock_freedom_larger_net():
+    """Paper radix-16 evaluation network (subset of W-groups)."""
+    net = T.build_switchless(T.paper_radix16_switchless(g=7))
+    rng = np.random.default_rng(3)
+    for mode, nonmin in [("baseline", True), ("updown", True),
+                         ("updown_merged", True)]:
+        R.assert_deadlock_free(net, mode, nonmin, rng, n_pairs=5000)
+
+
+def test_updown_paths_near_minimal(net):
+    """up*/down* detours are bounded: mean hops within 35% of XY-minimal."""
+    s, d = _all_pairs(net, limit=12000)
+    mis = np.full(len(s), -1)
+    base = R.make_route_fn(net, "baseline")
+    ud = R.make_route_fn(net, "updown")
+    _, _, len_b = R.trace_paths(net, base, s, d, mis)
+    _, _, len_u = R.trace_paths(net, ud, s, d, mis)
+    assert len_u.mean() <= 1.35 * len_b.mean()
+
+
+def test_dragonfly_minimal_three_hops(dnet):
+    route_fn = R.make_route_fn(dnet, "baseline")
+    s, d = _all_pairs(dnet, limit=20000)
+    mis = np.full(len(s), -1)
+    chans, _, lengths = R.trace_paths(dnet, route_fn, s, d, mis)
+    # inject + (<= l,g,l) + eject
+    assert lengths.max() <= 5
+    types = np.where(chans >= 0, dnet.ch_type[np.clip(chans, 0, None)], -1)
+    assert ((types == T.GLOBAL).sum(axis=1) <= 1).all()
+    assert ((types == T.LOCAL).sum(axis=1) <= 2).all()
+
+
+def test_misroute_clears_and_delivers(net):
+    """Non-minimal paths visit the intermediate W-group then deliver."""
+    rng = np.random.default_rng(11)
+    route_fn = R.make_route_fn(net, "baseline")
+    wg = net.tables["node_wg"]
+    Tn = net.num_terminals
+    s = rng.integers(0, Tn, 500)
+    d = rng.integers(0, Tn, 500)
+    wg_s, wg_d = wg[net.term_node[s]], wg[net.term_node[d]]
+    keep = wg_s != wg_d
+    s, d, wg_s, wg_d = s[keep], d[keep], wg_s[keep], wg_d[keep]
+    g = net.meta["g"]
+    mis = (np.maximum(wg_s, wg_d) + 1) % g
+    ok = (mis != wg_s) & (mis != wg_d)
+    s, d, mis = s[ok], d[ok], mis[ok]
+    chans, _, lengths = R.trace_paths(net, route_fn, s, d, mis)
+    types = np.where(chans >= 0, net.ch_type[np.clip(chans, 0, None)], -1)
+    # two global hops: src W-group -> mis W-group -> dest W-group
+    assert ((types == T.GLOBAL).sum(axis=1) == 2).all()
+    last = chans[np.arange(len(s)), lengths - 1]
+    assert (last == net.eject_ch[net.term_node[d]]).all()

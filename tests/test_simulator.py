@@ -1,0 +1,148 @@
+"""Behavioural tests of the flit-level simulator."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.simulator import SimConfig, Simulator
+
+
+@pytest.fixture(scope="module")
+def cgroup_net():
+    # single C-group: 4x4 router mesh, 16 terminals, 4 chips (Fig. 10(a))
+    p = T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1)
+    return T.build_switchless(p, "cgroup")
+
+
+@pytest.fixture(scope="module")
+def wgroup_nets():
+    p = T.SwitchlessParams(a=2, b=4, m=2, n=6, noc=2, g=1)
+    swl = T.build_switchless(p, "wgroup")
+    swb = T.build_switch_dragonfly(
+        T.SwitchDragonflyParams(t=4, l=7, gl=1, g=1), "wgroup-df")
+    return swl, swb
+
+
+def test_conservation_and_low_load_delivery(cgroup_net):
+    cfg = SimConfig(warmup=300, measure=1200, vcs_per_class=2)
+    sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
+    r = sim.run(0.4)
+    assert r.dropped_pkts == 0
+    # at low load everything offered is delivered (within transient slack)
+    assert r.throughput_per_chip == pytest.approx(0.4, rel=0.12)
+    # flit conservation: delivered <= generated
+    assert r.delivered_pkts <= r.generated_pkts + 64 * cgroup_net.num_terminals
+
+
+def test_zero_load_latency_matches_hops(cgroup_net):
+    """Latency at near-zero load ~= avg hop count x per-hop latency."""
+    cfg = SimConfig(warmup=300, measure=2000, vcs_per_class=2)
+    sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
+    r = sim.run(0.05)
+    h = r.avg_hops_by_type
+    expect = h["mesh"] + h["inject"] + h["eject"]  # 1 cycle per SR hop
+    assert r.avg_latency == pytest.approx(expect, rel=0.5)
+    assert r.avg_latency < 3 * expect
+
+
+def test_intra_cgroup_saturation_beats_switch(cgroup_net):
+    """Fig. 10(a): uniform saturation ~3 flits/cycle/chip, >= 2.5x the
+    1 flit/cycle/chip switch-based injection cap."""
+    cfg = SimConfig(warmup=400, measure=1600, vcs_per_class=4)
+    sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
+    sat = max(sim.run(r).throughput_per_chip for r in (2.5, 3.2))
+    assert sat > 2.5
+
+
+def test_intra_cgroup_throughput_bounded_by_bisection(cgroup_net):
+    """Accepted uniform throughput never exceeds the router-grid bisection
+    bound 4/R flits/cycle/terminal (the analog of Eq. (5); the paper's n/m=3
+    counts chiplet-level channel bundles, our grid has R=m*noc single
+    channels across the cut)."""
+    p = T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1)
+    cfg = SimConfig(warmup=400, measure=1200, vcs_per_class=4)
+    sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
+    r = sim.run(3.9)
+    bound_per_chip = 4.0 / p.R * p.routers_per_chip
+    assert r.throughput_per_chip <= bound_per_chip * 1.05
+    # and it comes close to the paper's reported 3.0
+    assert r.throughput_per_chip > 2.9
+
+
+def test_switch_based_injection_cap(wgroup_nets):
+    """The single terminal->switch link caps the switch-based Dragonfly at
+    1 flit/cycle/chip (Sec. III-B2)."""
+    _, swb = wgroup_nets
+    cfg = SimConfig(warmup=400, measure=1600, vcs_per_class=2)
+    sim = Simulator(swb, cfg, TR.ring_allreduce(swb, bidirectional=False))
+    # the cap: never above 1 flit/cycle/chip no matter the offered load
+    assert sim.run(1.0).throughput_per_chip <= 1.02
+    # below the critical load the ring through a switch is conflict-free
+    r = sim.run(0.9)
+    assert r.throughput_per_chip > 0.82
+
+
+def test_switchless_wgroup_beats_switch_based(wgroup_nets):
+    """Fig. 10(c): intra-W-group uniform saturation 1.2-2x switch-based."""
+    swl, swb = wgroup_nets
+    cfg = SimConfig(warmup=500, measure=2000, vcs_per_class=2)
+    sat_l = max(Simulator(swl, cfg, TR.uniform(swl)).run(r).throughput_per_chip
+                for r in (1.2, 1.6))
+    sat_b = max(Simulator(swb, cfg, TR.uniform(swb)).run(r).throughput_per_chip
+                for r in (1.2, 1.6))
+    assert sat_l > 1.15 * sat_b
+
+
+def test_ring_allreduce_bidirectional_gain(cgroup_net):
+    """Fig. 14(a): bidirectional ring roughly doubles the uni-ring
+    saturation inside the C-group."""
+    cfg = SimConfig(warmup=400, measure=1600, vcs_per_class=4)
+    uni = Simulator(cgroup_net, cfg, TR.ring_allreduce(cgroup_net, False))
+    bi = Simulator(cgroup_net, cfg, TR.ring_allreduce(cgroup_net, True))
+    sat_u = max(uni.run(r).throughput_per_chip for r in (2.0, 2.6))
+    sat_b = max(bi.run(r).throughput_per_chip for r in (3.0, 3.8))
+    assert sat_b > 1.3 * sat_u
+    assert sat_u > 1.8  # paper: ~2 flits/cycle/chip
+
+
+def test_nonminimal_routing_helps_worst_case():
+    """Fig. 13: VAL routing beats minimal by a wide margin under the
+    worst-case pattern on the full radix-16 network (one global link per
+    W-group pair, so minimal WC throughput is ~1/terms-per-W-group)."""
+    net = T.build_switchless(T.paper_radix16_switchless(), "wc-net")
+    pat = TR.worst_case(net)
+    cfg_min = SimConfig(warmup=300, measure=700, route_mode="min",
+                        vcs_per_class=2)
+    cfg_val = SimConfig(warmup=300, measure=700, route_mode="val",
+                        vcs_per_class=2)
+    thr_min = Simulator(net, cfg_min, pat).run(0.5).throughput_per_chip
+    thr_val = Simulator(net, cfg_val, pat).run(0.5).throughput_per_chip
+    assert thr_val > 3.0 * thr_min
+
+
+def test_ugal_adaptive_best_of_both():
+    """Beyond-paper: UGAL-G keeps minimal-level uniform throughput while
+    recovering most of VAL's worst-case gain (min/VAL per Fig. 13)."""
+    net = T.build_switchless(T.paper_radix16_switchless(), "ugal-net")
+    wc = TR.worst_case(net)
+    uni = TR.uniform(net)
+    res = {}
+    for mode in ("min", "ugal"):
+        cfg = SimConfig(route_mode=mode, vcs_per_class=2, warmup=250,
+                        measure=600)
+        res[mode, "wc"] = Simulator(net, cfg, wc).run(0.5).throughput_per_chip
+        res[mode, "uni"] = Simulator(net, cfg, uni).run(
+            0.5).throughput_per_chip
+    assert res["ugal", "wc"] > 5 * res["min", "wc"]
+    assert res["ugal", "uni"] > 0.9 * res["min", "uni"]
+
+
+def test_hotspot_inject_mask():
+    net = T.build_switchless(T.paper_radix16_switchless(g=8), "hot-net")
+    pat, is_hot = TR.hotspot(net, num_hot=4, seed=0)
+    cfg = SimConfig(warmup=300, measure=900, route_mode="min",
+                    vcs_per_class=2)
+    sim = Simulator(net, cfg, pat, inject_mask=is_hot)
+    r = sim.run(0.2)
+    assert r.delivered_pkts > 0
+    assert r.dropped_pkts >= 0

@@ -1,0 +1,121 @@
+"""Structural invariants of the constructed networks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+
+def small_net():
+    return T.build_switchless(T.SwitchlessParams(a=2, b=2, m=2, n=4, noc=2,
+                                                 g=5))
+
+
+def test_channel_counts():
+    p = T.SwitchlessParams(a=2, b=2, m=2, n=4, noc=2, g=5)
+    net = T.build_switchless(p)
+    R, ab, g = p.R, p.ab, 5
+    num_cg = ab * g
+    mesh = 2 * 2 * R * (R - 1) * num_cg
+    local = ab * (ab - 1) * g
+    assert (net.ch_type == T.MESH).sum() == mesh
+    assert (net.ch_type == T.LOCAL).sum() == local
+    # at least one global link per W-group pair, each direction
+    assert (net.ch_type == T.GLOBAL).sum() >= g * (g - 1)
+    assert (net.ch_type == T.INJECT).sum() == net.num_terminals
+    assert (net.ch_type == T.EJECT).sum() == net.num_terminals
+
+
+def test_local_links_connect_correct_cgroups():
+    net = small_net()
+    t = net.tables
+    for e in np.where(net.ch_type == T.LOCAL)[0]:
+        s, d = net.ch_src[e], net.ch_dst[e]
+        assert t["node_wg"][s] == t["node_wg"][d]
+        assert t["node_cg"][s] != t["node_cg"][d]
+
+
+def test_global_links_connect_distinct_wgroups():
+    net = small_net()
+    t = net.tables
+    for e in np.where(net.ch_type == T.GLOBAL)[0]:
+        s, d = net.ch_src[e], net.ch_dst[e]
+        assert t["node_wg"][s] != t["node_wg"][d]
+
+
+def test_wgroup_fully_connected():
+    """Every pair of W-groups has a global link (the Dragonfly property)."""
+    net = small_net()
+    t = net.tables
+    g = net.meta["g"]
+    seen = set()
+    for e in np.where(net.ch_type == T.GLOBAL)[0]:
+        seen.add((int(t["node_wg"][net.ch_src[e]]),
+                  int(t["node_wg"][net.ch_dst[e]])))
+    for i in range(g):
+        for j in range(g):
+            if i != j:
+                assert (i, j) in seen
+
+
+def test_cgroup_fully_connected_within_wgroup():
+    net = small_net()
+    t = net.tables
+    ab = net.meta["ab"]
+    pairs = set()
+    for e in np.where(net.ch_type == T.LOCAL)[0]:
+        s, d = net.ch_src[e], net.ch_dst[e]
+        pairs.add((int(t["node_wg"][s]), int(t["node_cg"][s]),
+                   int(t["node_cg"][d])))
+    for wg in range(net.meta["g"]):
+        for c1 in range(ab):
+            for c2 in range(ab):
+                if c1 != c2:
+                    assert (wg, c1, c2) in pairs
+
+
+def test_port_labeling_property2():
+    """Property 2: for every C-group, local ports to lower C-groups are at
+    lower labels than every global port, which are lower than local ports to
+    higher C-groups."""
+    p = T.SwitchlessParams(a=2, b=2, m=2, n=4, noc=2, g=5)
+    net = T.build_switchless(p)
+    lp = net.tables["local_port"]
+    ab, h, k = p.ab, p.h, p.k
+    for cg in range(ab):
+        down = [lp[cg, peer] for peer in range(cg)]
+        up = [lp[cg, peer] for peer in range(cg + 1, ab)]
+        glob = list(range(cg, cg + h))
+        if down:
+            assert max(down) < min(glob)
+        if up:
+            assert max(glob) < min(up)
+        labels = sorted(down + glob + up)
+        assert labels == sorted(set(labels)), "labels must be distinct"
+        assert max(labels) < k
+
+
+def test_dragonfly_baseline_structure():
+    p = T.SwitchDragonflyParams(t=2, l=3, gl=2, g=5)
+    net = T.build_switch_dragonfly(p)
+    assert net.num_nodes == 5 * 4
+    assert net.num_terminals == 40
+    assert (net.ch_type == T.LOCAL).sum() == 5 * 4 * 3
+    assert (net.ch_type == T.GLOBAL).sum() >= 5 * 4
+
+
+@given(a=st.integers(1, 2), b=st.integers(1, 3), m=st.integers(1, 2),
+       n=st.sampled_from([4, 6, 8]), g=st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_switchless_builds_and_validates(a, b, m, n, g):
+    p = T.SwitchlessParams(a=a, b=b, m=m, n=n, noc=2)
+    if p.h < 1 or g > p.g_max:
+        return
+    net = T.build_switchless(T.SwitchlessParams(a=a, b=b, m=m, n=n, noc=2,
+                                                g=g))
+    net.validate()
+    assert net.num_terminals == p.ab * p.R * p.R * g
+    # every external port that is wired appears exactly once as a source
+    ext = net.tables["ext_out"]
+    wired = ext[ext >= 0]
+    assert len(np.unique(wired)) == len(wired)
