@@ -8,8 +8,6 @@ and quantitative saturation ratios.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core import topology as T
@@ -18,13 +16,15 @@ from repro.core.simulator import SimConfig, Simulator
 
 
 def _sweep(net, pattern, rates, cfg, inject_mask=None):
+    """Load-latency curve; all rates run as ONE batched jitted scan.
+
+    The reported per-row wall_s is the whole-sweep wall-clock (including
+    the one-time jit compile) amortized over the rates: per-rate timings
+    don't exist in the batched path."""
     sim = Simulator(net, cfg, pattern, inject_mask=inject_mask)
-    out = []
-    for r in rates:
-        t0 = time.perf_counter()
-        res = sim.run(r)
-        out.append((res, time.perf_counter() - t0))
-    return out
+    grid = sim.sweep_grid(rates)
+    dt = grid.wall_s / max(len(rates), 1)
+    return [(res, dt) for res in grid.mean_over_seeds()]
 
 
 def fig10_local(fast=True):
@@ -196,12 +196,12 @@ def fig15_energy(fast=True):
             sim = Simulator(net, cfg, TR.uniform(net))
             res = sim.run(0.3)
             h = res.avg_hops_by_type
-            hops = {"mesh": h["mesh"], "local": h["local"],
-                    "global": h["global"]}
+            mesh, local, glob, inj, ej = T.CH_TYPE_NAMES
+            hops = {name: h[name] for name in (mesh, local, glob)}
             if term_onchip:
-                hops["term_onchip"] = h["inject"] + h["eject"]
+                hops["term_onchip"] = h[inj] + h[ej]
             else:
-                hops["term_cable"] = h["inject"] + h["eject"]
+                hops["term_cable"] = h[inj] + h[ej]
             e = A.energy_per_packet_pj_per_bit(hops)
             rows.append(dict(fig="15", topo=tname, mode=mode,
                              energy_pj_per_bit=e,

@@ -86,6 +86,20 @@ def bench_simulator_throughput():
           f"cycles_per_s={cps:.0f};channels={net.num_channels}")
 
 
+def bench_batched_sweep():
+    """Batched (vmapped rate x seed) vs sequential sweep; records the
+    engine's first perf-trajectory datapoint in BENCH_sweep.json."""
+    from . import bench_sweep as BS
+    out = BS.bench()
+    BS.write(out)
+    _emit("sweep_batched", out["batched_wall_s"] * 1e6,
+          f"speedup_vs_seed={out['speedup']:.2f};"
+          f"speedup_vs_seq={out['speedup_vs_engine_sequential']:.2f};"
+          f"lanes={out['lanes']};"
+          f"batched_cycles_per_s={out['batched_cycles_per_s']:.0f};"
+          f"max_dev={out['max_throughput_deviation']:.4f}")
+
+
 def bench_roofline():
     from . import roofline as R
     rows = R.load_rows("single")
@@ -103,6 +117,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_kernels()
     bench_simulator_throughput()
+    bench_batched_sweep()
     bench_paper_figs(fast=fast)
     bench_roofline()
 

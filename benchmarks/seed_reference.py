@@ -1,0 +1,433 @@
+"""FROZEN perf baseline: the seed (pre-engine) monolithic simulator.
+
+This is the PR-0 `repro.core.simulator` step/run loop, kept verbatim so
+`bench_sweep.py` can measure the wall-clock the paper-figure sweep grid paid
+BEFORE the modular batch-parallel engine existed.  Do not modernize it — its
+whole value is staying identical to the seed.  Config/result types are
+imported from the live module (their definitions are unchanged since seed);
+the switch-less baseline route function is ALSO frozen here (the live one
+gained packed-gather optimizations in the same PR, which would pollute the
+baseline).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import (EJECT, GLOBAL, INJECT, LOCAL, MESH,
+                                 NUM_CH_TYPES, Network)
+from repro.core.routing import make_route_fn as _live_make_route_fn
+from repro.core.routing import meta_cg_count, meta_update, num_vcs
+from repro.core.simulator import SimConfig, SimResult
+
+INF32 = jnp.int32(2**31 - 1)
+
+
+def _seed_switchless_baseline_route(net):
+    """Alg. 1 with XY in-C-group routing; VC = #C-groups entered (4/6 VCs)."""
+    t = net.tables
+    node_wg = jnp.asarray(t["node_wg"])
+    node_cg = jnp.asarray(t["node_cg"])
+    node_cgg = jnp.asarray(t["node_cg_global"])
+    node_x = jnp.asarray(t["node_x"])
+    node_y = jnp.asarray(t["node_y"])
+    node_mesh_ch = jnp.asarray(t["node_mesh_ch"])
+    eject_ch = jnp.asarray(t["eject_ch"])
+    ext_out = jnp.asarray(t["ext_out"])
+    local_port = jnp.asarray(t["local_port"])
+    glob_route_cg = jnp.asarray(t["glob_route_cg"])
+    glob_route_port = jnp.asarray(t["glob_route_port"])
+    glob_npar = jnp.asarray(t["glob_npar"])
+    port_node_local = jnp.asarray(t["port_node_local"])
+    term_node = jnp.asarray(t["term_node"])
+    ch_type = jnp.asarray(net.ch_type)
+    R = net.meta["R"]
+    nodes_per_cg = net.meta["nodes_per_cg"]
+
+    def route_vc(cur, dest_term, mis_wg, meta):
+        dest_node = term_node[dest_term]
+        wg_c = node_wg[cur]
+        wg_d = node_wg[dest_node]
+        mis_active = mis_wg >= 0
+        tgt_wg = jnp.where(mis_active, mis_wg, wg_d)
+        cg_c = node_cg[cur]
+        cgg_c = node_cgg[cur]
+        cgg_d = node_cgg[dest_node]
+        cg_d = node_cg[dest_node]
+
+        in_tgt_wg = wg_c == tgt_wg          # mis cleared on entry => == wg_d
+        at_dest_cg = (cgg_c == cgg_d) & (~mis_active)
+
+        # exit port selection (Alg. 1 steps); parallel global links per
+        # W-group pair are spread across flows by destination hash
+        par = dest_term % glob_npar[wg_c, tgt_wg]
+        cg_gl = glob_route_cg[wg_c, tgt_wg, par]     # owner of global channel
+        port_gl = glob_route_port[wg_c, tgt_wg, par]
+        at_global_cg = cg_c == cg_gl
+        peer_cg = jnp.where(in_tgt_wg, cg_d, cg_gl)
+        port_lc = local_port[cg_c, peer_cg]
+        use_global = (~in_tgt_wg) & at_global_cg
+        port = jnp.where(use_global, port_gl, port_lc)
+        to_terminal = at_dest_cg
+
+        tgt_local = jnp.where(to_terminal,
+                              dest_node % nodes_per_cg,
+                              port_node_local[port])
+        cur_local = cur % nodes_per_cg
+        at_target = cur_local == tgt_local
+        out_at_target = jnp.where(to_terminal, eject_ch[cur],
+                                  ext_out[cgg_c, port])
+
+        # XY (dimension-order): x first, then y.  DIRS = (N, E, S, W).
+        tx = tgt_local % R
+        ty = tgt_local // R
+        x = node_x[cur]
+        y = node_y[cur]
+        dir_xy = jnp.where(
+            x != tx, jnp.where(tx > x, 1, 3), jnp.where(ty > y, 2, 0))
+        out_mesh = node_mesh_ch[cur, dir_xy]
+
+        out_ch = jnp.where(at_target, out_at_target, out_mesh)
+        new_meta = meta_update(meta, ch_type[out_ch])
+        is_ej = ch_type[out_ch] == 4
+        req_vc = jnp.where(is_ej, 0, meta_cg_count(new_meta))
+        return out_ch, req_vc.astype(jnp.int32), new_meta
+
+    return route_vc
+
+
+def make_route_fn(net, vc_mode="baseline"):
+    """Frozen seed route function where the seed had its own
+    implementation (switch-less baseline VC scheme); other modes fall back
+    to the live module — they are not on the benchmark path."""
+    if net.meta["kind"] == "switchless" and vc_mode == "baseline":
+        return _seed_switchless_baseline_route(net)
+    return _live_make_route_fn(net, vc_mode)
+
+
+def _build_static(net: Network, cfg: SimConfig):
+    """Static (hashable) arrays + closures captured by the jitted step."""
+    NV = num_vcs(net.meta["kind"], cfg.vc_mode, cfg.nonminimal) \
+        * cfg.vcs_per_class
+    E = net.num_channels
+    T = net.num_terminals
+    route_fn = make_route_fn(net, cfg.vc_mode)
+    ser = (cfg.pkt_len + net.ch_bw - 1) // net.ch_bw  # serialization cycles
+    wg_tbl = net.tables.get("node_wg", net.tables.get("node_grp"))
+    # wg of the downstream node of each channel (for misroute clearing)
+    ch_dst_wg = wg_tbl[np.clip(net.ch_dst, 0, net.num_nodes - 1)]
+    consts = dict(
+        NV=NV, E=E, T=T,
+        ch_dst=jnp.asarray(net.ch_dst),
+        ch_type=jnp.asarray(net.ch_type),
+        ch_ser=jnp.asarray(ser),
+        ch_lat=jnp.asarray(net.ch_lat),
+        ch_dst_wg=jnp.asarray(ch_dst_wg),
+        inject_ch=jnp.asarray(net.inject_ch),
+        term_node=jnp.asarray(net.term_node),
+        term_wg=jnp.asarray(wg_tbl[net.term_node]),
+        num_wg=net.meta["g"],
+    )
+    return consts, route_fn
+
+
+def make_state(net: Network, cfg: SimConfig, NV: int):
+    E, T = net.num_channels, net.num_terminals
+    S, Q = cfg.buf_pkts, cfg.srcq_pkts
+    z = lambda *s: jnp.zeros(s, dtype=jnp.int32)
+    return dict(
+        # per-(channel, vc) input buffers (ring buffers of packets)
+        b_dest=z(E, NV, S), b_itime=z(E, NV, S), b_mis=z(E, NV, S),
+        b_meta=z(E, NV, S), b_ready=z(E, NV, S),
+        b_head=z(E, NV), b_count=z(E, NV),
+        # source queues
+        s_dest=z(T, Q), s_itime=z(T, Q), s_mis=z(T, Q),
+        s_head=z(T), s_count=z(T),
+        ch_busy=z(E),
+        # stats
+        st=dict(delivered=z(), lat_sum=jnp.zeros((), jnp.float32),
+                generated=z(), dropped=z(),
+                hops=z(NUM_CH_TYPES)),
+    )
+
+
+def _make_step(net: Network, cfg: SimConfig, pattern, inject_mask=None):
+    consts, route_fn = _build_static(net, cfg)
+    NV, E, T = consts["NV"], consts["E"], consts["T"]
+    S, Q = cfg.buf_pkts, cfg.srcq_pkts
+    PKT = cfg.pkt_len
+    inj_mask = (jnp.ones(T, dtype=bool) if inject_mask is None
+                else jnp.asarray(inject_mask))
+    num_wg = consts["num_wg"]
+    term_wg = consts["term_wg"]
+    glob_watch = None
+    if cfg.route_mode == "ugal" and net.meta["kind"] == "switchless":
+        # UGAL-G congestion sensors: for each (w-group, peer) the global
+        # channel itself PLUS the mesh channels feeding its source router —
+        # under adversarial load the backlog accumulates in those feeders,
+        # not in the (fast-draining) downstream buffer of the link.
+        t = net.tables
+        ab = net.meta["ab"]
+        g = net.meta["g"]
+        gw = np.zeros((g, g, 5), dtype=np.int64)
+        for w in range(g):
+            for u in range(g):
+                if u == w:
+                    continue
+                cg = t["glob_route_cg"][w, u, 0]
+                port = t["glob_route_port"][w, u, 0]
+                ch = t["ext_out"][w * ab + cg, port]
+                src = net.ch_src[ch]
+                feeders = [c for c in np.where(net.ch_dst == src)[0]
+                           if net.ch_type[c] == 0][:4]       # MESH inputs
+                sens = [ch] + list(feeders)
+                gw[w, u, :len(sens)] = sens
+        glob_watch = jnp.asarray(gw)
+    elif cfg.route_mode == "ugal":
+        t = net.tables
+        g = net.meta["g"]
+        gw = np.maximum(t["glob_out_ch"][:, :, :1], 0)
+        glob_watch = jnp.asarray(
+            np.concatenate([gw, np.zeros((g, g, 4), dtype=np.int64)],
+                           axis=-1))
+
+    def gen_mis(key, dest, st_bcount):
+        """Misroute W-group per freshly generated packet (-1 = minimal)."""
+        wg_s = term_wg
+        wg_d = term_wg[dest]
+        differ = wg_s != wg_d
+        if cfg.route_mode == "min" or num_wg <= 2:
+            return jnp.full((T,), -1, dtype=jnp.int32)
+        cand = jax.random.randint(key, (T,), 0, num_wg).astype(jnp.int32)
+        cand = jnp.where((cand == wg_s) | (cand == wg_d),
+                         (cand + 1) % num_wg, cand)
+        cand = jnp.where((cand == wg_s) | (cand == wg_d),
+                         (cand + 1) % num_wg, cand)
+        if cfg.route_mode == "val_restricted":
+            # only misroute to W-groups strictly below the destination
+            ok = (cand < wg_d) & (cand != wg_s)
+            cand = jnp.where(ok, cand, -1)
+        if cfg.route_mode == "ugal":
+            occ = st_bcount.sum(axis=1)  # [E] total buffered packets
+            q_min = occ[glob_watch[wg_s, jnp.maximum(wg_d, 0)]].sum(-1)
+            q_non = occ[glob_watch[wg_s, jnp.maximum(cand, 0)]].sum(-1)
+            take_nonmin = q_min > 2 * q_non + cfg.ugal_threshold
+            cand = jnp.where(take_nonmin, cand, -1)
+        return jnp.where(differ, cand, -1).astype(jnp.int32)
+
+    def step(state, t_and_key_rate):
+        t, key, rate_pkt = t_and_key_rate
+        k_gen, k_dest, k_mis = jax.random.split(key, 3)
+
+        # ---------------- injection ----------------
+        gen = (jax.random.uniform(k_gen, (T,)) < rate_pkt) & inj_mask
+        dest = pattern(k_dest, t).astype(jnp.int32)
+        gen = gen & (dest != jnp.arange(T))  # fixed points are silent
+        mis = gen_mis(k_mis, dest, state["b_count"])
+        space = state["s_count"] < Q
+        push = gen & space
+        slot = (state["s_head"] + state["s_count"]) % Q
+        idx = (jnp.arange(T), slot)
+        s_dest = state["s_dest"].at[idx].set(
+            jnp.where(push, dest, state["s_dest"][idx]))
+        s_itime = state["s_itime"].at[idx].set(
+            jnp.where(push, t, state["s_itime"][idx]))
+        s_mis = state["s_mis"].at[idx].set(
+            jnp.where(push, mis, state["s_mis"][idx]))
+        s_count = state["s_count"] + push
+        st = state["st"]
+        st = dict(st, generated=st["generated"] + gen.sum(),
+                  dropped=st["dropped"] + (gen & ~space).sum())
+
+        # ---------------- requesters ----------------
+        # buffer requesters: one per (channel, vc)
+        bh = state["b_head"]                      # [E, NV]
+        e_idx = jnp.arange(E)[:, None].repeat(NV, 1)
+        v_idx = jnp.arange(NV)[None, :].repeat(E, 0)
+        hslot = (e_idx, v_idx, bh)
+        r_dest = state["b_dest"][hslot].reshape(-1)
+        r_itime = state["b_itime"][hslot].reshape(-1)
+        r_mis = state["b_mis"][hslot].reshape(-1)
+        r_meta = state["b_meta"][hslot].reshape(-1)
+        r_ready = state["b_ready"][hslot].reshape(-1)
+        r_valid = ((state["b_count"] > 0).reshape(-1)
+                   & (r_ready <= t)
+                   & (consts["ch_type"][e_idx.reshape(-1)] != EJECT))
+        cur_node = consts["ch_dst"][e_idx.reshape(-1)]
+        out_ch, req_vc, new_meta = route_fn(cur_node, r_dest, r_mis, r_meta)
+
+        # source-queue requesters: fixed out channel (the injection link)
+        sq = (jnp.arange(T), state["s_head"])
+        sq_dest = s_dest[sq]
+        sq_itime = s_itime[sq]
+        sq_mis = s_mis[sq]
+        sq_valid = s_count > 0
+        sq_out = consts["inject_ch"]
+        sq_vc = jnp.zeros(T, jnp.int32)
+        sq_meta = jnp.zeros(T, jnp.int32)
+
+        a_dest = jnp.concatenate([r_dest, sq_dest])
+        a_itime = jnp.concatenate([r_itime, sq_itime])
+        a_mis = jnp.concatenate([r_mis, sq_mis])
+        a_meta = jnp.concatenate([new_meta, sq_meta])
+        a_out = jnp.concatenate([out_ch, sq_out]).astype(jnp.int32)
+        a_vc = jnp.concatenate([req_vc, sq_vc]).astype(jnp.int32)
+        a_valid = jnp.concatenate([r_valid, sq_valid])
+
+        # expand deadlock class -> physical VC (least-occupied of the class)
+        vpc = cfg.vcs_per_class
+        if vpc > 1:
+            base = a_vc * vpc
+            occs = jnp.stack(
+                [state["b_count"][a_out, base + i] for i in range(vpc)],
+                axis=-1)
+            a_vc = base + jnp.argmin(occs, axis=-1).astype(jnp.int32)
+
+        # ---------------- constraints + arbitration ----------------
+        a_type = consts["ch_type"][a_out]
+        is_ej = a_type == EJECT
+        credit = state["b_count"][a_out, a_vc] < S
+        ok = a_valid & (state["ch_busy"][a_out] == 0) & (credit | is_ej)
+
+        seg = jnp.where(ok, a_out, E)
+        key1 = jnp.where(ok, a_itime, INF32)
+        m1 = jax.ops.segment_min(key1, seg, num_segments=E + 1)
+        tie = ok & (a_itime == m1[a_out])
+        ridx = jnp.arange(a_out.shape[0], dtype=jnp.int32)
+        key2 = jnp.where(tie, ridx, INF32)
+        m2 = jax.ops.segment_min(key2, seg, num_segments=E + 1)
+        win = tie & (ridx == m2[a_out])
+
+        win_buf = win[:E * NV].reshape(E, NV)
+        win_src = win[E * NV:]
+
+        # ---------------- apply: pops ----------------
+        b_head = (bh + win_buf) % S
+        b_count = state["b_count"] - win_buf
+        s_head = (state["s_head"] + win_src) % Q
+        s_count = s_count - win_src
+
+        # ---------------- apply: pushes ----------------
+        w_push = win & ~is_ej
+        # one winner per out channel => no index collisions among winners;
+        # non-winners are routed to the out-of-bounds row E and dropped by
+        # JAX scatter semantics.
+        po = a_out
+        pv = a_vc
+        pslot = (state["b_head"][po, pv] + state["b_count"][po, pv]) % S
+        # NOTE: use pre-pop head/count of the DESTINATION buffer; a pop on the
+        # same buffer this cycle removes its head, not the tail we append to,
+        # and the count delta composes (-1 pop, +1 push).
+        # clear misroute on entering the intermediate W-group
+        entered = (a_mis >= 0) & (consts["ch_dst_wg"][po] == a_mis)
+        new_mis = jnp.where(entered, -1, a_mis)
+        # virtual cut-through: the head is forwardable after the pipeline
+        # latency; serialization is modeled by the channel busy time below.
+        ready = t + consts["ch_lat"][po]
+        po_push = jnp.where(w_push, po, E)
+        tgt = (po_push, pv, pslot)
+
+        def scat(arr, val):
+            return arr.at[tgt].set(val, mode="drop")
+
+        b_dest = scat(state["b_dest"], a_dest)
+        b_itime = scat(state["b_itime"], a_itime)
+        b_mis = scat(state["b_mis"], new_mis)
+        b_meta = scat(state["b_meta"], a_meta)
+        b_ready = scat(state["b_ready"], ready)
+        b_count = b_count.at[(po_push, pv)].add(1, mode="drop")
+
+        # channel busy (serialization) for every winner (incl. ejects);
+        # ser - 1 because the winning cycle itself is the first busy slot
+        po_win = jnp.where(win, po, E)
+        ch_busy = jnp.maximum(state["ch_busy"] - 1, 0)
+        ch_busy = ch_busy.at[po_win].set(consts["ch_ser"][po] - 1, mode="drop")
+
+        # ---------------- stats ----------------
+        w_ej = win & is_ej
+        delivered = st["delivered"] + w_ej.sum()
+        lat_sum = st["lat_sum"] + jnp.where(w_ej, (t - a_itime), 0).sum()
+        hops = st["hops"] + jax.ops.segment_sum(
+            win.astype(jnp.int32), jnp.where(win, a_type, NUM_CH_TYPES),
+            num_segments=NUM_CH_TYPES + 1)[:NUM_CH_TYPES]
+        st = dict(st, delivered=delivered, lat_sum=lat_sum, hops=hops)
+
+        new_state = dict(
+            b_dest=b_dest, b_itime=b_itime, b_mis=b_mis, b_meta=b_meta,
+            b_ready=b_ready, b_head=b_head, b_count=b_count,
+            s_dest=s_dest, s_itime=s_itime, s_mis=s_mis,
+            s_head=s_head, s_count=s_count, ch_busy=ch_busy, st=st)
+        return new_state, None
+
+    return step, consts
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _run(step, cycles, reset_at, state0, rate_pkt, seed):
+
+    def body(carry, t):
+        state, key = carry
+        key, sub = jax.random.split(key)
+        state, _ = step(state, (t, sub, rate_pkt))
+        # reset statistics at the end of warmup
+        def zero_stats(st):
+            return jax.tree.map(lambda x: jnp.zeros_like(x), st)
+        st = jax.lax.cond(t == reset_at, zero_stats, lambda s: s, state["st"])
+        state = dict(state, st=st)
+        return (state, key), None
+
+    key = jax.random.PRNGKey(seed)
+    (state, _), _ = jax.lax.scan(body, (state0, key), jnp.arange(cycles))
+    return state
+
+
+class SeedSimulator:
+    """Compile-once-per-(net, cfg, pattern) simulator; sweep rates cheaply."""
+
+    def __init__(self, net: Network, cfg: SimConfig, pattern,
+                 inject_mask=None):
+        self.net, self.cfg = net, cfg
+        self.terms_per_chip = net.num_terminals / net.num_chips
+        self.step, self.consts = _make_step(net, cfg, pattern, inject_mask)
+        self.NV = self.consts["NV"]
+        n_inj = (int(np.asarray(inject_mask).sum()) if inject_mask is not None
+                 else net.num_terminals)
+        self._inj_frac = n_inj / net.num_terminals
+
+    def run(self, offered_per_chip: float) -> SimResult:
+        cfg = self.cfg
+        rate_pkt = offered_per_chip / cfg.pkt_len / self.terms_per_chip
+        if rate_pkt > 1.0 + 1e-9:
+            raise ValueError(
+                f"offered {offered_per_chip}/chip needs per-terminal packet "
+                f"rate {rate_pkt:.2f} > 1")
+        state0 = make_state(self.net, cfg, self.NV)
+        cycles = cfg.warmup + cfg.measure
+        state = _run(self.step, cycles, cfg.warmup,
+                     state0, jnp.float32(rate_pkt), cfg.seed)
+        st = jax.tree.map(np.asarray, state["st"])
+        delivered = int(st["delivered"])
+        chips = self.net.num_chips * self._inj_frac
+        thr = delivered * cfg.pkt_len / cfg.measure / max(chips, 1e-9)
+        lat = float(st["lat_sum"]) / max(delivered, 1)
+        hops = {name: int(st["hops"][i])
+                for i, name in enumerate(("mesh", "local", "global",
+                                          "inject", "eject"))}
+        avg_hops = {k: v / max(delivered, 1) for k, v in hops.items()}
+        return SimResult(
+            offered_per_chip=offered_per_chip, throughput_per_chip=thr,
+            avg_latency=lat, delivered_pkts=delivered,
+            generated_pkts=int(st["generated"]), dropped_pkts=int(st["dropped"]),
+            hops_by_type=hops, avg_hops_by_type=avg_hops)
+
+    def sweep(self, rates) -> list[SimResult]:
+        return [self.run(r) for r in rates]
+
+
+def saturation_throughput(results: list[SimResult]) -> float:
+    """Max accepted throughput over a sweep (flits/cycle/chip)."""
+    return max(r.throughput_per_chip for r in results)

@@ -5,15 +5,18 @@ Topology construction, analytical models (Eqs. 1-7, Table II/III), routing
 patterns, topology-aware collectives, and the fabric cost model used by the
 training-stack roofline.
 """
-from . import analytical, collectives, cost_model, routing, simulator
+from . import analytical, collectives, cost_model, engine, routing, simulator
 from . import topology, traffic
-from .topology import (Network, SwitchDragonflyParams, SwitchlessParams,
-                       build_switch_dragonfly, build_switchless)
+from .topology import (CH_TYPE_NAMES, Network, SwitchDragonflyParams,
+                       SwitchlessParams, build_switch_dragonfly,
+                       build_switchless)
+from .engine import BatchedSweep, SimState, SweepResult
 from .simulator import SimConfig, SimResult, Simulator
 
 __all__ = [
-    "analytical", "collectives", "cost_model", "routing", "simulator",
-    "topology", "traffic", "Network", "SwitchDragonflyParams",
-    "SwitchlessParams", "build_switch_dragonfly", "build_switchless",
+    "analytical", "collectives", "cost_model", "engine", "routing",
+    "simulator", "topology", "traffic", "CH_TYPE_NAMES", "Network",
+    "SwitchDragonflyParams", "SwitchlessParams", "build_switch_dragonfly",
+    "build_switchless", "BatchedSweep", "SimState", "SweepResult",
     "SimConfig", "SimResult", "Simulator",
 ]

@@ -26,7 +26,9 @@ from jax import lax
 
 
 def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+    if hasattr(lax, "axis_size"):       # jax >= 0.4.32... renamed over time
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)       # portable fallback
 
 
 def ring_all_reduce(x: jax.Array, axis_name: str):

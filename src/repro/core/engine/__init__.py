@@ -1,0 +1,29 @@
+"""Modular batch-parallel simulation engine.
+
+The cycle is decomposed into explicit phases over a pytree `SimState`:
+
+    inject    packet generation + misroute decision + source-queue push
+    arbitrate routing, VC expansion, credit check, age-based grant
+    apply     pops / pushes / misroute clearing / serialization
+    stats     delivered / latency / hop accumulators
+
+`step.make_step` wires them into one pure cycle function; `sweep.BatchedSweep`
+vmaps it over a (rate x seed) lane grid so an entire load-latency curve runs
+in a single jitted `lax.scan`.  `repro.core.simulator` is the thin
+compatibility facade over this package.
+"""
+from .state import SimState, SimStats, build_consts, make_state
+from .arbitrate import Requests, make_arbitrate_fn
+from .inject import make_inject_fn, make_misroute_fn, build_ugal_watch
+from .apply import make_apply_fn
+from .stats import accumulate, finalize, zero_stats
+from .step import make_step, run_scan
+from .sweep import BatchedSweep, SweepResult, run_scan_batched
+
+__all__ = [
+    "SimState", "SimStats", "Requests", "build_consts", "make_state",
+    "make_arbitrate_fn", "make_inject_fn", "make_misroute_fn",
+    "build_ugal_watch", "make_apply_fn", "accumulate", "finalize",
+    "zero_stats", "make_step", "run_scan", "BatchedSweep", "SweepResult",
+    "run_scan_batched",
+]

@@ -1,0 +1,71 @@
+"""Apply phase: commit the granted movements — pop winners from their
+buffers / source queues, push them into the downstream (channel, VC) buffer,
+clear satisfied misroutes, stamp cut-through readiness, and charge channel
+serialization (credit-based flow control reserved the slot at grant time).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..topology import EJECT, Network
+from .arbitrate import Requests
+from .state import SimState
+
+
+def make_apply_fn(net: Network, cfg, consts):
+    E, NV, ER = consts["E"], consts["NV"], consts["E_req"]
+    S, Q = cfg.buf_pkts, cfg.srcq_pkts
+
+    def apply_moves(state: SimState, req: Requests, win, won_ch,
+                    t) -> SimState:
+        win_buf = win[:ER * NV].reshape(ER, NV)
+        win_src = win[ER * NV:]
+
+        # pops (the trailing eject rows never pop: concat keeps them dense)
+        b_head = jnp.concatenate(
+            [(state.b_head[:ER] + win_buf) % S, state.b_head[ER:]])
+        b_count = jnp.concatenate(
+            [state.b_count[:ER] - win_buf, state.b_count[ER:]])
+        s_head = (state.s_head + win_src) % Q
+        s_count = state.s_count - win_src
+
+        # pushes
+        is_ej = req.otype == EJECT
+        w_push = win & ~is_ej
+        # one winner per out channel => no index collisions among winners;
+        # non-winners are routed to the out-of-bounds row E and dropped by
+        # JAX scatter semantics.
+        po = req.out
+        pv = req.vc
+        pslot = (state.b_head[po, pv] + req.ovc_count) % S
+        # NOTE: use pre-pop head/count of the DESTINATION buffer; a pop on the
+        # same buffer this cycle removes its head, not the tail we append to,
+        # and the count delta composes (-1 pop, +1 push).
+        # clear misroute on entering the intermediate W-group
+        entered = (req.mis >= 0) & (req.odst_wg == req.mis)
+        new_mis = jnp.where(entered, -1, req.mis)
+        # virtual cut-through: the head is forwardable after the pipeline
+        # latency; serialization is modeled by the channel busy time below.
+        ready = t + req.olat
+        po_push = jnp.where(w_push, po, E)
+        # ONE scatter writes the whole packed record (field order F_DEST,
+        # F_ITIME, F_MIS, F_META, F_READY — see state.py); scatters lower to
+        # per-row loops on CPU, so 1 row of 5 values beats 5 rows of 1.
+        new_pkt = jnp.stack([req.dest, req.itime, new_mis, req.meta, ready],
+                            axis=-1)
+        b_pkt = state.b_pkt.at[(po_push, pv, pslot)].set(new_pkt, mode="drop")
+        b_count = b_count.at[(po_push, pv)].add(1, mode="drop")
+
+        # channel busy (serialization) for every winner (incl. ejects);
+        # ser - 1 because the winning cycle itself is the first busy slot.
+        # `won_ch` is the dense per-channel grant mask, so this is a pure
+        # elementwise update (a busy channel can't grant: ok requires
+        # busy == 0, hence no overwrite conflict).
+        ch_busy = jnp.where(won_ch, consts["ch_ser"] - 1,
+                            jnp.maximum(state.ch_busy - 1, 0))
+
+        return state.replace(
+            b_pkt=b_pkt, b_head=b_head, b_count=b_count,
+            s_head=s_head, s_count=s_count, ch_busy=ch_busy)
+
+    return apply_moves

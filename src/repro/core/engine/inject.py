@@ -1,0 +1,121 @@
+"""Injection phase: Bernoulli packet generation, the misroute decision
+(VAL / restricted-VAL / UGAL-G with congestion sensors), and the source-queue
+push.  Also accounts generated/dropped packets.
+
+The phase reads the pre-cycle buffer occupancy (`state.b_count`) for the
+UGAL sensors and writes only the source-queue fields + stats, so it composes
+with the arbitration phase that runs after it in the same cycle: a packet
+pushed into an empty source queue this cycle is immediately eligible to
+request the injection channel (matching the monolithic simulator).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..topology import MESH, Network
+
+
+def build_ugal_watch(net: Network, cfg):
+    """UGAL-G congestion sensors: channels whose buffered load proxies the
+    (w-group -> peer) global path quality.
+
+    For the switch-less network each (w, u) entry lists the global channel
+    itself PLUS the mesh channels feeding its source router — under
+    adversarial load the backlog accumulates in those feeders, not in the
+    (fast-draining) downstream buffer of the link.  Returns an int array
+    [g, g, 5] of channel ids (0-padded), or None when UGAL is off.
+    """
+    if cfg.route_mode != "ugal":
+        return None
+    t = net.tables
+    g = net.meta["g"]
+    if net.meta["kind"] == "switchless":
+        ab = net.meta["ab"]
+        gw = np.zeros((g, g, 5), dtype=np.int64)
+        for w in range(g):
+            for u in range(g):
+                if u == w:
+                    continue
+                cg = t["glob_route_cg"][w, u, 0]
+                port = t["glob_route_port"][w, u, 0]
+                ch = t["ext_out"][w * ab + cg, port]
+                src = net.ch_src[ch]
+                feeders = [c for c in np.where(net.ch_dst == src)[0]
+                           if net.ch_type[c] == MESH][:4]
+                sens = [ch] + list(feeders)
+                gw[w, u, :len(sens)] = sens
+        return jnp.asarray(gw)
+    gw = np.maximum(t["glob_out_ch"][:, :, :1], 0)
+    return jnp.asarray(
+        np.concatenate([gw, np.zeros((g, g, 4), dtype=np.int64)], axis=-1))
+
+
+def make_misroute_fn(net: Network, cfg, consts):
+    """Returns gen_mis(key, dest[T], b_count[E, NV]) -> mis_wg[T].
+
+    -1 means route minimally; otherwise the intermediate W-group the packet
+    must visit first (cleared by the apply phase on entry).
+    """
+    T = consts["T"]
+    num_wg = consts["num_wg"]
+    term_wg = consts["term_wg"]
+    glob_watch = build_ugal_watch(net, cfg)
+
+    def gen_mis(key, dest, b_count):
+        wg_s = term_wg
+        wg_d = term_wg[dest]
+        differ = wg_s != wg_d
+        if cfg.route_mode == "min" or num_wg <= 2:
+            return jnp.full((T,), -1, dtype=jnp.int32)
+        cand = jax.random.randint(key, (T,), 0, num_wg).astype(jnp.int32)
+        cand = jnp.where((cand == wg_s) | (cand == wg_d),
+                         (cand + 1) % num_wg, cand)
+        cand = jnp.where((cand == wg_s) | (cand == wg_d),
+                         (cand + 1) % num_wg, cand)
+        if cfg.route_mode == "val_restricted":
+            # only misroute to W-groups strictly below the destination
+            ok = (cand < wg_d) & (cand != wg_s)
+            cand = jnp.where(ok, cand, -1)
+        if cfg.route_mode == "ugal":
+            occ = b_count.sum(axis=1)  # [E] total buffered packets
+            q_min = occ[glob_watch[wg_s, jnp.maximum(wg_d, 0)]].sum(-1)
+            q_non = occ[glob_watch[wg_s, jnp.maximum(cand, 0)]].sum(-1)
+            take_nonmin = q_min > 2 * q_non + cfg.ugal_threshold
+            cand = jnp.where(take_nonmin, cand, -1)
+        return jnp.where(differ, cand, -1).astype(jnp.int32)
+
+    return gen_mis
+
+
+def make_inject_fn(net: Network, cfg, consts, pattern, inject_mask=None):
+    """Returns inject(state, t, key, rate_pkt) -> state."""
+    T = consts["T"]
+    Q = cfg.srcq_pkts
+    inj_mask = (jnp.ones(T, dtype=bool) if inject_mask is None
+                else jnp.asarray(inject_mask))
+    gen_mis = make_misroute_fn(net, cfg, consts)
+
+    def inject(state, t, key, rate_pkt):
+        k_gen, k_dest, k_mis = jax.random.split(key, 3)
+        gen = (jax.random.uniform(k_gen, (T,)) < rate_pkt) & inj_mask
+        dest = pattern(k_dest, t).astype(jnp.int32)
+        gen = gen & (dest != jnp.arange(T))  # fixed points are silent
+        mis = gen_mis(k_mis, dest, state.b_count)
+        space = state.s_count < Q
+        push = gen & space
+        slot = (state.s_head + state.s_count) % Q
+        idx = (jnp.arange(T), slot)
+        # one gather + one scatter for the packed (dest, itime, mis) record
+        new_rec = jnp.stack(
+            [dest, jnp.full((T,), t, jnp.int32), mis], axis=-1)
+        rec = jnp.where(push[:, None], new_rec, state.s_pkt[idx])
+        s_pkt = state.s_pkt.at[idx].set(rec)
+        st = state.stats
+        st = st.replace(generated=st.generated + gen.sum(),
+                        dropped=st.dropped + (gen & ~space).sum())
+        return state.replace(s_pkt=s_pkt,
+                             s_count=state.s_count + push, stats=st)
+
+    return inject

@@ -1,0 +1,130 @@
+"""Simulation state (pytree) and static model constants.
+
+`SimState` is the single carry of the cycle loop: every field is a
+fixed-shape jnp array, so the whole state is a JAX pytree that can be
+`lax.scan`-carried, `jax.vmap`-batched over a (rate x seed) sweep axis, and
+donated across scan steps to keep memory flat.  An optional leading batch
+axis on every array is the contract the phase functions obey: they never
+reshape across axis 0, so `vmap` over axis 0 is always legal.
+
+`build_consts` packages the static (per-network, per-config) arrays the
+phases close over; these carry no batch axis and are captured by the jitted
+step, not threaded through the carry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..topology import NUM_CH_TYPES, Network
+from ..routing import make_route_fn, num_vcs
+
+INF32 = jnp.int32(2**31 - 1)
+
+# payload-field indices of the packed per-packet record in `SimState.b_pkt`.
+# Packing all five fields into one trailing axis turns the five head gathers
+# and five push scatters of the monolithic simulator into ONE gather and ONE
+# scatter per cycle — scatter/gather lower to per-row loops on CPU, so row
+# count, not element count, is what the hot loop pays for.
+F_DEST, F_ITIME, F_MIS, F_META, F_READY = range(5)
+NUM_FIELDS = 5
+NUM_SRC_FIELDS = 3      # source-queue records pack (dest, itime, mis)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SimStats:
+    """Measurement accumulators (zeroed at the end of warmup)."""
+
+    delivered: jax.Array      # [] packets ejected
+    lat_sum: jax.Array        # [] float32 sum of generation->ejection cycles
+    generated: jax.Array      # [] packets generated (incl. dropped)
+    dropped: jax.Array        # [] source-queue overflow
+    hops: jax.Array           # [NUM_CH_TYPES] channel traversals by type
+
+    def replace(self, **kw) -> "SimStats":
+        return replace(self, **kw)
+
+    @classmethod
+    def zeros(cls, batch: tuple[int, ...] = ()) -> "SimStats":
+        z = lambda *s: jnp.zeros(batch + s, dtype=jnp.int32)
+        return cls(delivered=z(), lat_sum=jnp.zeros(batch, jnp.float32),
+                   generated=z(), dropped=z(), hops=z(NUM_CH_TYPES))
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SimState:
+    """All mutable router/terminal state, over (channel E, VC NV, slot S)
+    and (terminal T, source-queue slot Q); ring buffers of packets."""
+
+    # per-(channel, vc) input buffers; the trailing axis packs the packet
+    # record (F_DEST destination terminal, F_ITIME generation cycle,
+    # F_MIS misroute W-group (-1 = minimal), F_META routing meta bitfield,
+    # F_READY cycle the head becomes forwardable)
+    b_pkt: jax.Array          # [E, NV, S, NUM_FIELDS]
+    b_head: jax.Array         # [E, NV] ring head
+    b_count: jax.Array        # [E, NV] occupancy (packets)
+    # per-terminal source queues (trailing axis: F_DEST, F_ITIME, F_MIS)
+    s_pkt: jax.Array          # [T, Q, NUM_SRC_FIELDS]
+    s_head: jax.Array         # [T]
+    s_count: jax.Array        # [T]
+    ch_busy: jax.Array        # [E] serialization busy countdown
+    stats: SimStats
+
+    def replace(self, **kw) -> "SimState":
+        return replace(self, **kw)
+
+
+def make_state(net: Network, cfg, NV: int,
+               batch: tuple[int, ...] = ()) -> SimState:
+    """Fresh (empty-network) state; `batch` prepends sweep axes."""
+    E, T = net.num_channels, net.num_terminals
+    S, Q = cfg.buf_pkts, cfg.srcq_pkts
+    z = lambda *s: jnp.zeros(batch + s, dtype=jnp.int32)
+    return SimState(
+        b_pkt=z(E, NV, S, NUM_FIELDS),
+        b_head=z(E, NV), b_count=z(E, NV),
+        s_pkt=z(T, Q, NUM_SRC_FIELDS),
+        s_head=z(T), s_count=z(T),
+        ch_busy=z(E),
+        stats=SimStats.zeros(batch))
+
+
+def build_consts(net: Network, cfg):
+    """Static (per-net, per-cfg) arrays + the route closure.
+
+    Everything here is batch-free: phase functions gather from these with
+    (possibly batched) indices, which keeps them pure under `vmap`.
+    """
+    NV = num_vcs(net.meta["kind"], cfg.vc_mode, cfg.nonminimal) \
+        * cfg.vcs_per_class
+    E = net.num_channels
+    T = net.num_terminals
+    route_fn = make_route_fn(net, cfg.vc_mode)
+    ser = (cfg.pkt_len + net.ch_bw - 1) // net.ch_bw  # serialization cycles
+    wg_tbl = net.tables.get("node_wg", net.tables.get("node_grp"))
+    # wg of the downstream node of each channel (for misroute clearing)
+    ch_dst_wg = wg_tbl[np.clip(net.ch_dst, 0, net.num_nodes - 1)]
+    consts = dict(
+        NV=NV, E=E, T=T,
+        # eject channels are the trailing id block (Network.validate); they
+        # never request, so the request grid covers only [:E_req]
+        E_req=net.first_eject,
+        ch_dst=jnp.asarray(net.ch_dst),
+        ch_ser=jnp.asarray(ser),
+        # packed per-channel record (type, dst_wg, lat): the request phase
+        # gathers it ONCE per requester instead of three separate row
+        # gathers spread over arbitrate/stats/apply
+        ch_tbl=jnp.stack([jnp.asarray(net.ch_type),
+                          jnp.asarray(ch_dst_wg),
+                          jnp.asarray(net.ch_lat)], axis=-1),
+        inject_ch=jnp.asarray(net.inject_ch),
+        term_node=jnp.asarray(net.term_node),
+        term_wg=jnp.asarray(wg_tbl[net.term_node]),
+        num_wg=net.meta["g"],
+    )
+    return consts, route_fn

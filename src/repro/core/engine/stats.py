@@ -1,0 +1,48 @@
+"""Stats phase: delivered/latency/hop accumulators and the conversion of
+raw counters into a `SimResult` (per sweep lane)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..topology import CH_TYPE_NAMES, EJECT, NUM_CH_TYPES
+from .arbitrate import Requests
+from .state import SimStats
+
+
+def accumulate(stats: SimStats, req: Requests, win, consts, t) -> SimStats:
+    """Fold this cycle's granted movements into the accumulators."""
+    w_ej = win & (req.otype == EJECT)
+    delivered = stats.delivered + w_ej.sum()
+    lat_sum = stats.lat_sum + jnp.where(w_ej, (t - req.itime), 0).sum()
+    # dense one-hot instead of segment_sum: NUM_CH_TYPES is tiny and
+    # segment ops lower to per-row scatter loops on CPU
+    onehot = win[:, None] & (req.otype[:, None] == jnp.arange(NUM_CH_TYPES))
+    hops = stats.hops + onehot.astype(jnp.int32).sum(0)
+    return stats.replace(delivered=delivered, lat_sum=lat_sum, hops=hops)
+
+
+def zero_stats(stats: SimStats) -> SimStats:
+    """Warmup reset (shape/dtype-preserving, vmap/batch-safe)."""
+    return jax.tree.map(jnp.zeros_like, stats)
+
+
+def finalize(stats: SimStats, cfg, offered_per_chip: float, chips: float):
+    """Raw (host) counters of ONE sweep lane -> a `SimResult`.
+
+    Imported lazily to avoid a cycle: `simulator` is the facade over this
+    package.
+    """
+    from ..simulator import SimResult
+    st = jax.tree.map(np.asarray, stats)
+    delivered = int(st.delivered)
+    thr = delivered * cfg.pkt_len / cfg.measure / max(chips, 1e-9)
+    lat = float(st.lat_sum) / max(delivered, 1)
+    hops = {name: int(st.hops[i]) for i, name in enumerate(CH_TYPE_NAMES)}
+    avg_hops = {k: v / max(delivered, 1) for k, v in hops.items()}
+    return SimResult(
+        offered_per_chip=offered_per_chip, throughput_per_chip=thr,
+        avg_latency=lat, delivered_pkts=delivered,
+        generated_pkts=int(st.generated), dropped_pkts=int(st.dropped),
+        hops_by_type=hops, avg_hops_by_type=avg_hops)

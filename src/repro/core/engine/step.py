@@ -1,0 +1,55 @@
+"""One simulated cycle, wired from the phase modules:
+
+    inject -> arbitrate (route + VC expansion + grant) -> apply -> stats
+
+`make_step` returns a pure function `step(state, (t, key, rate_pkt))` whose
+carry is the pytree `SimState`; `run_scan` advances it `cycles` times inside
+one jitted `lax.scan`, donating the state so buffers are reused in place.
+Both are `vmap`-compatible over a leading batch axis (see `sweep.py`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..topology import Network
+from .apply import make_apply_fn
+from .arbitrate import make_arbitrate_fn
+from .inject import make_inject_fn
+from .state import build_consts
+from .stats import accumulate, zero_stats
+
+
+def make_step(net: Network, cfg, pattern, inject_mask=None):
+    """Returns (step, consts); step(state, (t, key, rate_pkt)) -> (state, None)."""
+    consts, route_fn = build_consts(net, cfg)
+    inject = make_inject_fn(net, cfg, consts, pattern, inject_mask)
+    arbitrate = make_arbitrate_fn(net, cfg, consts, route_fn)
+    apply_moves = make_apply_fn(net, cfg, consts)
+
+    def step(state, t_and_key_rate):
+        t, key, rate_pkt = t_and_key_rate
+        state = inject(state, t, key, rate_pkt)
+        req, win, won_ch = arbitrate(state, t)
+        stats = accumulate(state.stats, req, win, consts, t)
+        state = apply_moves(state, req, win, won_ch, t)
+        return state.replace(stats=stats), None
+
+    return step, consts
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(3,))
+def run_scan(step, cycles, reset_at, state0, rate_pkt, key):
+    """Advance one lane `cycles` steps; stats are zeroed after warmup."""
+
+    def body(carry, t):
+        state, key = carry
+        key, sub = jax.random.split(key)
+        state, _ = step(state, (t, sub, rate_pkt))
+        st = jax.lax.cond(t == reset_at, zero_stats, lambda s: s, state.stats)
+        return (state.replace(stats=st), key), None
+
+    (state, _), _ = jax.lax.scan(body, (state0, key), jnp.arange(cycles))
+    return state

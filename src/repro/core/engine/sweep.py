@@ -1,0 +1,192 @@
+"""Batched load-latency sweeps: `jax.vmap` the engine step over a
+(rate x seed) lane axis and run the WHOLE sweep in a single jitted
+`lax.scan` — one compilation, one device dispatch per curve, instead of one
+sequential `scan` per offered rate.
+
+    sweep = BatchedSweep(net, cfg, pattern)
+    grid = sweep.run(rates=[0.2, 0.4, ...], seeds=(0, 1))
+    grid.result(i, j)            # SimResult for (rates[i], seeds[j])
+    grid.mean_over_seeds()       # list[SimResult], one per rate
+    grid.saturation_throughput() # scalar, seed-averaged
+
+Lane (i, j) reproduces `Simulator.run(rates[i])` with `seed=seeds[j]`
+bit-for-bit: the per-lane key chain is identical and `vmap` does not change
+the per-lane math.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..topology import Network
+from .state import make_state
+from .stats import finalize, zero_stats
+from .step import make_step
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(3,))
+def run_scan_batched(step, cycles, reset_at, state0, rate_pkt, keys):
+    """Advance B lanes in lockstep; state0/keys/rate_pkt carry axis 0 = B."""
+
+    def body(carry, t):
+        state, keys = carry
+        splits = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
+        keys, subs = splits[:, 0], splits[:, 1]
+        state, _ = jax.vmap(
+            lambda s, k, r: step(s, (t, k, r)))(state, subs, rate_pkt)
+        st = jax.lax.cond(t == reset_at, zero_stats, lambda s: s, state.stats)
+        return (state.replace(stats=st), keys), None
+
+    (state, _), _ = jax.lax.scan(body, (state0, keys), jnp.arange(cycles))
+    return state
+
+
+def offered_to_rate_pkt(offered_per_chip: float, cfg,
+                        terms_per_chip: float) -> float:
+    """Offered flits/cycle/chip -> per-terminal packet-generation rate.
+
+    Shared by the facade `Simulator.run` and `BatchedSweep`; raises when the
+    offered load would need more than one packet per terminal per cycle.
+    """
+    rate = offered_per_chip / cfg.pkt_len / terms_per_chip
+    if rate > 1.0 + 1e-9:
+        raise ValueError(
+            f"offered {offered_per_chip}/chip needs per-terminal packet "
+            f"rate {rate:.2f} > 1")
+    return rate
+
+
+def _jit_cache_size() -> int:
+    """Entry count of run_scan_batched's jit cache (0 if the private JAX
+    introspection API is unavailable)."""
+    try:
+        return run_scan_batched._cache_size()
+    except AttributeError:
+        return 0
+
+
+@dataclass
+class SweepResult:
+    """SimResults on the (rate x seed) grid, plus curve-level reductions."""
+
+    rates: list[float]
+    seeds: list[int]
+    results: list[list]        # [num_rates][num_seeds] of SimResult
+    compile_count: int = 0     # jit compilations this sweep triggered
+    wall_s: float = 0.0
+
+    def result(self, rate_idx: int, seed_idx: int = 0):
+        return self.results[rate_idx][seed_idx]
+
+    def flat(self):
+        return [r for row in self.results for r in row]
+
+    def mean_over_seeds(self) -> list:
+        """One seed-averaged SimResult per rate.
+
+        Rates/latencies are means over the seed lanes; packet counters are
+        floor-averaged (NOT summed) so they stay comparable to a single
+        `Simulator.run`."""
+        from ..simulator import SimResult
+        out = []
+        for row in self.results:
+            n = len(row)
+            hops = {k: sum(r.hops_by_type[k] for r in row) // n
+                    for k in row[0].hops_by_type}
+            avg_hops = {k: float(np.mean([r.avg_hops_by_type[k] for r in row]))
+                        for k in row[0].avg_hops_by_type}
+            out.append(SimResult(
+                offered_per_chip=row[0].offered_per_chip,
+                throughput_per_chip=float(
+                    np.mean([r.throughput_per_chip for r in row])),
+                avg_latency=float(np.mean([r.avg_latency for r in row])),
+                delivered_pkts=sum(r.delivered_pkts for r in row) // n,
+                generated_pkts=sum(r.generated_pkts for r in row) // n,
+                dropped_pkts=sum(r.dropped_pkts for r in row) // n,
+                hops_by_type=hops, avg_hops_by_type=avg_hops))
+        return out
+
+    def saturation_throughput(self) -> float:
+        """Max seed-averaged accepted throughput over the sweep."""
+        return max(r.throughput_per_chip for r in self.mean_over_seeds())
+
+
+class BatchedSweep:
+    """Compile-once sweep runner over a (rate x seed) lane grid.
+
+    The step closure is shared with `Simulator` (same phases, same consts);
+    `route_fn` and the traffic pattern only ever see per-lane data, so the
+    whole cycle is batch-pure and legal to `vmap`.
+    """
+
+    def __init__(self, net: Network, cfg, pattern, inject_mask=None,
+                 step=None, consts=None):
+        self.net, self.cfg = net, cfg
+        if step is None:
+            step, consts = make_step(net, cfg, pattern, inject_mask)
+        self.step, self.consts = step, consts
+        self.NV = consts["NV"]
+        self.terms_per_chip = net.num_terminals / net.num_chips
+        n_inj = (int(np.asarray(inject_mask).sum()) if inject_mask is not None
+                 else net.num_terminals)
+        self._inj_frac = n_inj / net.num_terminals
+
+    def _rate_pkt(self, offered_per_chip: float) -> float:
+        return offered_to_rate_pkt(offered_per_chip, self.cfg,
+                                   self.terms_per_chip)
+
+    @staticmethod
+    def _lane_sharding(B: int):
+        """NamedSharding splitting the lane axis over host devices (or None).
+
+        Lanes are independent, so partitioning axis 0 is communication-free
+        SPMD: with `--xla_force_host_platform_device_count=N` (or real
+        multi-device backends) the whole sweep parallelizes across cores.
+        """
+        devs = jax.devices()
+        if len(devs) <= 1 or B % len(devs) != 0:
+            return None
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+        mesh = Mesh(np.array(devs), ("lanes",))
+        return NamedSharding(mesh, PartitionSpec("lanes"))
+
+    def run(self, rates, seeds=None) -> SweepResult:
+        import time
+        cfg = self.cfg
+        rates = [float(r) for r in rates]
+        seeds = [cfg.seed] if seeds is None else [int(s) for s in seeds]
+        R, S = len(rates), len(seeds)
+        B = R * S
+        if B == 0:
+            raise ValueError(
+                f"sweep needs >= 1 rate and >= 1 seed (got {R} rates, "
+                f"{S} seeds)")
+        lane_rates = jnp.asarray(
+            [self._rate_pkt(r) for r in rates for _ in seeds],
+            dtype=jnp.float32)
+        lane_keys = jnp.stack(
+            [jax.random.PRNGKey(s) for _ in rates for s in seeds])
+        state0 = make_state(self.net, cfg, self.NV, batch=(B,))
+        sharding = self._lane_sharding(B)
+        if sharding is not None:
+            state0 = jax.device_put(state0, sharding)
+            lane_rates = jax.device_put(lane_rates, sharding)
+            lane_keys = jax.device_put(lane_keys, sharding)
+        cycles = cfg.warmup + cfg.measure
+        misses0 = _jit_cache_size()
+        t0 = time.perf_counter()
+        state = run_scan_batched(self.step, cycles, cfg.warmup,
+                                 state0, lane_rates, lane_keys)
+        stats = jax.tree.map(np.asarray, state.stats)
+        wall = time.perf_counter() - t0
+        compiles = _jit_cache_size() - misses0
+        chips = self.net.num_chips * self._inj_frac
+        lane = lambda i: jax.tree.map(lambda x: x[i], stats)
+        results = [[finalize(lane(i * S + j), cfg, rates[i], chips)
+                    for j in range(S)] for i in range(R)]
+        return SweepResult(rates=rates, seeds=seeds, results=results,
+                           compile_count=compiles, wall_s=wall)

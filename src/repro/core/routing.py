@@ -5,6 +5,13 @@ Route functions are pure, vectorizable jnp functions usable both inside the
 jitted simulator and (via numpy inputs) by the offline path tracer that
 builds the channel-dependency graph for the deadlock-freedom tests.
 
+BATCH PURITY CONTRACT: a route function may only gather from the static
+tables it closes over; it must never reduce over, reshape, or branch on the
+shape of its packet-vector arguments.  `engine.sweep.BatchedSweep` vmaps the
+whole cycle over a (rate x seed) lane axis, so any cross-packet coupling
+here would silently change batched results (guarded by
+tests/test_engine.py::test_route_fn_batch_pure).
+
 Packet routing state ("meta" int32 bitfield):
   bits 0..2  cg_count  number of inter-C-group channels traversed so far
   bits 3..4  g_count   number of global channels traversed so far
@@ -98,25 +105,30 @@ def _make_switchless_baseline(net: Network):
     eject_ch = jnp.asarray(t["eject_ch"])
     ext_out = jnp.asarray(t["ext_out"])
     local_port = jnp.asarray(t["local_port"])
-    glob_route_cg = jnp.asarray(t["glob_route_cg"])
-    glob_route_port = jnp.asarray(t["glob_route_port"])
     glob_npar = jnp.asarray(t["glob_npar"])
     port_node_local = jnp.asarray(t["port_node_local"])
     term_node = jnp.asarray(t["term_node"])
     ch_type = jnp.asarray(net.ch_type)
     R = net.meta["R"]
     nodes_per_cg = net.meta["nodes_per_cg"]
+    # packed gathers: destination-indexed node record and the (cg, port)
+    # record of the global exit — one dynamic row gather each instead of
+    # three/two (row count, not width, is what CPU gather loops pay for)
+    dnode_tbl = jnp.stack([node_wg, node_cgg, node_cg], axis=-1)   # [V, 3]
+    glob_tbl = jnp.stack([jnp.asarray(t["glob_route_cg"]),
+                          jnp.asarray(t["glob_route_port"])], axis=-1)
 
     def route_vc(cur, dest_term, mis_wg, meta):
         dest_node = term_node[dest_term]
+        dtbl = dnode_tbl[dest_node]
         wg_c = node_wg[cur]
-        wg_d = node_wg[dest_node]
+        wg_d = dtbl[..., 0]
         mis_active = mis_wg >= 0
         tgt_wg = jnp.where(mis_active, mis_wg, wg_d)
         cg_c = node_cg[cur]
         cgg_c = node_cgg[cur]
-        cgg_d = node_cgg[dest_node]
-        cg_d = node_cg[dest_node]
+        cgg_d = dtbl[..., 1]
+        cg_d = dtbl[..., 2]
 
         in_tgt_wg = wg_c == tgt_wg          # mis cleared on entry => == wg_d
         at_dest_cg = (cgg_c == cgg_d) & (~mis_active)
@@ -124,8 +136,9 @@ def _make_switchless_baseline(net: Network):
         # exit port selection (Alg. 1 steps); parallel global links per
         # W-group pair are spread across flows by destination hash
         par = dest_term % glob_npar[wg_c, tgt_wg]
-        cg_gl = glob_route_cg[wg_c, tgt_wg, par]     # owner of global channel
-        port_gl = glob_route_port[wg_c, tgt_wg, par]
+        gtbl = glob_tbl[wg_c, tgt_wg, par]
+        cg_gl = gtbl[..., 0]                         # owner of global channel
+        port_gl = gtbl[..., 1]
         at_global_cg = cg_c == cg_gl
         peer_cg = jnp.where(in_tgt_wg, cg_d, cg_gl)
         port_lc = local_port[cg_c, peer_cg]

@@ -12,6 +12,12 @@ directed.  Channel types:
   GLOBAL inter-W-group link (H_g, long-reach)
   INJECT terminal -> router
   EJECT  router -> terminal
+
+Channel-id layout contract: EJECT channels form the TRAILING id block
+(checked by `Network.validate`).  Eject channels own no input buffers and
+never appear as requesters, so the simulation engine shrinks its per-cycle
+request grid to `[:first_eject]` with a free slice instead of a masked
+gather (see engine/arbitrate.py).
 """
 from __future__ import annotations
 
@@ -49,6 +55,11 @@ class Network:
     def num_channels(self) -> int:
         return int(len(self.ch_src))
 
+    @property
+    def first_eject(self) -> int:
+        """First channel id of the trailing EJECT block (== #non-eject)."""
+        return self.num_channels - int((self.ch_type == EJECT).sum())
+
     def validate(self) -> None:
         E = self.num_channels
         assert self.ch_dst.shape == (E,) and self.ch_type.shape == (E,)
@@ -57,6 +68,8 @@ class Network:
         # every terminal has an inject channel pointing at its router
         assert (self.ch_dst[self.inject_ch] == self.term_node).all()
         assert (self.ch_type[self.inject_ch] == INJECT).all()
+        # eject channels are the trailing id block (engine slicing contract)
+        assert (self.ch_type[self.first_eject:] == EJECT).all()
 
 
 # ---------------------------------------------------------------------------
@@ -229,12 +242,10 @@ def build_switchless(p: SwitchlessParams, name: str = "switchless") -> Network:
                                 p.cg_bw_mult, p.sr_latency, MESH)
                         node_mesh_ch[s, di] = c
 
-    # inject / eject channels
+    # inject channels (ejects are added LAST: trailing-block contract)
     inject_ch = np.zeros(T, dtype=np.int64)
-    eject_ch = np.full(V, -1, dtype=np.int64)
     for t in range(T):
         inject_ch[t] = add(V + t, term_node[t], 1, 1, INJECT)  # src id unused
-        eject_ch[t] = add(term_node[t], V + t, 1, 1, EJECT)
 
     # port labeling and the local/global split (Fig. 6):
     # ports 0..n_local-1 are LOCAL (to the other ab-1 C-groups of the W-group),
@@ -316,6 +327,11 @@ def build_switchless(p: SwitchlessParams, name: str = "switchless") -> Network:
         # routable parallel count = links wired in BOTH directions
         glob_npar = np.minimum(glob_npar, glob_npar.T)
         np.fill_diagonal(glob_npar, 1)
+
+    # eject channels last: the engine slices requesters to [:first_eject]
+    eject_ch = np.full(V, -1, dtype=np.int64)
+    for t in range(T):
+        eject_ch[t] = add(term_node[t], V + t, 1, 1, EJECT)
 
     # --- routing tables --------------------------------------------------
     # perimeter position of each node (-1 if interior) for ring routing
@@ -442,11 +458,8 @@ def build_switch_dragonfly(p: SwitchDragonflyParams,
         return len(src) - 1
 
     inject_ch = np.zeros(T, dtype=np.int64)
-    eject_sw_term = np.full((V, p.t), -1, dtype=np.int64)  # per-terminal eject
     for t_ in range(T):
-        sw = term_node[t_]
-        inject_ch[t_] = add(V + t_, sw, 1, 1, INJECT)
-        eject_sw_term[sw, t_ % p.t] = add(sw, V + t_, 1, 1, EJECT)
+        inject_ch[t_] = add(V + t_, term_node[t_], 1, 1, INJECT)
 
     # local links: full mesh within each group
     local_ch = np.full((V, spg), -1, dtype=np.int64)  # [switch, peer_idx]
@@ -489,6 +502,12 @@ def build_switch_dragonfly(p: SwitchDragonflyParams,
                                                     p.lr_latency, GLOBAL)
         glob_npar = np.minimum(glob_npar, glob_npar.T)
         np.fill_diagonal(glob_npar, 1)
+
+    # eject channels last (trailing-block contract, cf. build_switchless)
+    eject_sw_term = np.full((V, p.t), -1, dtype=np.int64)  # per-terminal eject
+    for t_ in range(T):
+        sw = term_node[t_]
+        eject_sw_term[sw, t_ % p.t] = add(sw, V + t_, 1, 1, EJECT)
 
     eject_ch = np.full(V, -1, dtype=np.int64)  # first eject per switch (unused)
     tables = dict(

@@ -169,6 +169,21 @@ def ring_allreduce(net: Network, bidirectional: bool = False):
     return sample
 
 
+def batched(sample):
+    """Lift a pattern `sample(key, t) -> dest[T]` to a batched-key path:
+    `sample_b(keys[B, 2], t) -> dest[B, T]`.
+
+    This is the contract the batch-parallel engine relies on: patterns are
+    pure per-lane functions of their key, so a `vmap` over the key axis is
+    the whole lift.  Permutation patterns (key-independent) broadcast."""
+    return jax.vmap(sample, in_axes=(0, None))
+
+
+def split_lanes(key, num_lanes: int):
+    """Per-lane PRNG keys [B, 2] for a batched sweep."""
+    return jax.random.split(key, num_lanes)
+
+
 PATTERNS = {
     "uniform": uniform,
     "bit_reverse": bit_reverse,

@@ -1,6 +1,8 @@
 """Property tests of the paper's closed-form models (Eqs. 1-7, Table III)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import analytical as A

@@ -1,0 +1,135 @@
+"""Engine-level tests: pytree SimState, phase composition, batch purity of
+the route function, and BatchedSweep equivalence with sequential runs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core import engine
+from repro.core.engine import (BatchedSweep, Requests, SimState, SimStats,
+                               make_state, make_step)
+from repro.core.engine.sweep import run_scan_batched
+from repro.core.routing import make_route_fn
+from repro.core.simulator import SimConfig, Simulator
+
+
+@pytest.fixture(scope="module")
+def cgroup_net():
+    p = T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1)
+    return T.build_switchless(p, "engine-cgroup")
+
+
+def test_simstate_is_pytree(cgroup_net):
+    cfg = SimConfig()
+    consts, _ = engine.build_consts(cgroup_net, cfg)
+    state = make_state(cgroup_net, cfg, consts["NV"])
+    leaves, treedef = jax.tree.flatten(state)
+    assert all(isinstance(l, jax.Array) for l in leaves)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, SimState)
+    assert isinstance(rebuilt.stats, SimStats)
+    bumped = jax.tree.map(lambda x: x + 1, state)
+    assert int(bumped.b_count.sum()) == state.b_count.size
+
+
+def test_make_state_batch_axis(cgroup_net):
+    cfg = SimConfig()
+    consts, _ = engine.build_consts(cgroup_net, cfg)
+    single = make_state(cgroup_net, cfg, consts["NV"])
+    batched = make_state(cgroup_net, cfg, consts["NV"], batch=(3,))
+    for a, b in zip(jax.tree.leaves(single), jax.tree.leaves(batched)):
+        assert b.shape == (3,) + a.shape
+
+
+def test_route_fn_batch_pure(cgroup_net):
+    """vmapping the route function over a batch of packet vectors must equal
+    looping it — the property BatchedSweep relies on."""
+    route_fn = make_route_fn(cgroup_net, "baseline")
+    rng = np.random.default_rng(0)
+    V, Tn = cgroup_net.num_nodes, cgroup_net.num_terminals
+    B, N = 4, 32
+    cur = jnp.asarray(rng.integers(0, V, size=(B, N)))
+    dest = jnp.asarray(rng.integers(0, Tn, size=(B, N)))
+    mis = jnp.full((B, N), -1, dtype=jnp.int32)
+    meta = jnp.zeros((B, N), dtype=jnp.int32)
+    out_b, vc_b, meta_b = jax.vmap(route_fn)(cur, dest, mis, meta)
+    for i in range(B):
+        out, vc, m = route_fn(cur[i], dest[i], mis[i], meta[i])
+        np.testing.assert_array_equal(np.asarray(out_b[i]), np.asarray(out))
+        np.testing.assert_array_equal(np.asarray(vc_b[i]), np.asarray(vc))
+        np.testing.assert_array_equal(np.asarray(meta_b[i]), np.asarray(m))
+
+
+def test_step_grants_at_most_one_winner_per_channel(cgroup_net):
+    cfg = SimConfig(warmup=10, measure=10, vcs_per_class=2)
+    consts, route_fn = engine.build_consts(cgroup_net, cfg)
+    inject = engine.make_inject_fn(cgroup_net, cfg, consts, TR.uniform(cgroup_net))
+    arbitrate = engine.make_arbitrate_fn(cgroup_net, cfg, consts, route_fn)
+    state = make_state(cgroup_net, cfg, consts["NV"])
+    key = jax.random.PRNGKey(0)
+    apply_moves = engine.make_apply_fn(cgroup_net, cfg, consts)
+    for t in range(8):
+        key, sub = jax.random.split(key)
+        state = inject(state, t, sub, jnp.float32(0.9))
+        req, win, won_ch = arbitrate(state, t)
+        assert isinstance(req, Requests)
+        # one winner per output channel
+        outs = np.asarray(req.out)[np.asarray(win)]
+        assert len(outs) == len(np.unique(outs))
+        # winners must be valid requesters
+        assert bool((np.asarray(win) <= np.asarray(req.valid)).all())
+        # the dense grant mask agrees with the winner rows
+        assert set(outs) == set(np.flatnonzero(np.asarray(won_ch)))
+        state = apply_moves(state, req, win, won_ch, t)
+        # occupancy never exceeds capacity, never goes negative
+        bc = np.asarray(state.b_count)
+        assert bc.min() >= 0 and bc.max() <= cfg.buf_pkts
+
+
+def test_batched_sweep_matches_sequential(cgroup_net):
+    """Acceptance: >= 6 rates x 2 seeds, throughput/latency within 2% of
+    per-rate sequential Simulator.run, ONE jit compile for the whole sweep."""
+    cfg = SimConfig(warmup=100, measure=400, vcs_per_class=2)
+    sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
+    rates = [0.2, 0.5, 0.9, 1.4, 2.0, 2.6]
+    seeds = (0, 1)
+    # the jit-cache introspection is a private JAX API; sweep.py degrades
+    # gracefully without it, and so does this assertion
+    has_cache_api = hasattr(run_scan_batched, "clear_cache") and \
+        hasattr(run_scan_batched, "_cache_size")
+    if has_cache_api:
+        run_scan_batched.clear_cache()
+    grid = sim.sweep_grid(rates, seeds)
+    if has_cache_api:
+        assert grid.compile_count == 1
+        assert run_scan_batched._cache_size() == 1
+    for i, r in enumerate(rates):
+        for j, s in enumerate(seeds):
+            seq = sim.run(r, seed=s)
+            bat = grid.result(i, j)
+            assert bat.throughput_per_chip == pytest.approx(
+                seq.throughput_per_chip, rel=0.02)
+            assert bat.avg_latency == pytest.approx(seq.avg_latency, rel=0.02)
+    # curve-level reductions
+    sat = grid.saturation_throughput()
+    assert sat == max(r.throughput_per_chip for r in grid.mean_over_seeds())
+
+
+def test_sweep_rejects_overdriven_rate(cgroup_net):
+    cfg = SimConfig(warmup=10, measure=10)
+    sweep = BatchedSweep(cgroup_net, cfg, TR.uniform(cgroup_net))
+    with pytest.raises(ValueError):
+        sweep.run([100.0])
+
+
+def test_simulator_sweep_facade(cgroup_net):
+    """Simulator.sweep keeps the historical list[SimResult] contract."""
+    cfg = SimConfig(warmup=50, measure=200, vcs_per_class=2)
+    sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
+    rates = [0.3, 0.6]
+    out = sim.sweep(rates)
+    assert len(out) == len(rates)
+    assert [r.offered_per_chip for r in out] == rates
+    assert all(r.throughput_per_chip > 0 for r in out)

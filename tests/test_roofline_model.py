@@ -30,7 +30,10 @@ def test_analytic_flops_match_hlo_single_group():
 
     grad = jax.jit(jax.grad(loss))
     compiled = grad.lower(params_sds, batch).compile()
-    hlo_flops = compiled.cost_analysis().get("flops", 0.0)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+        ca = ca[0] if ca else {}
+    hlo_flops = ca.get("flops", 0.0)
 
     tokens = B * S
     n = cfg.num_params()

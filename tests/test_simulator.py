@@ -4,7 +4,8 @@ import pytest
 
 from repro.core import topology as T
 from repro.core import traffic as TR
-from repro.core.simulator import SimConfig, Simulator
+from repro.core.simulator import (SimConfig, Simulator,
+                                  saturation_throughput)
 
 
 @pytest.fixture(scope="module")
@@ -50,7 +51,7 @@ def test_intra_cgroup_saturation_beats_switch(cgroup_net):
     1 flit/cycle/chip switch-based injection cap."""
     cfg = SimConfig(warmup=400, measure=1600, vcs_per_class=4)
     sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
-    sat = max(sim.run(r).throughput_per_chip for r in (2.5, 3.2))
+    sat = saturation_throughput(sim.sweep([2.5, 3.2]))
     assert sat > 2.5
 
 
@@ -86,10 +87,10 @@ def test_switchless_wgroup_beats_switch_based(wgroup_nets):
     """Fig. 10(c): intra-W-group uniform saturation 1.2-2x switch-based."""
     swl, swb = wgroup_nets
     cfg = SimConfig(warmup=500, measure=2000, vcs_per_class=2)
-    sat_l = max(Simulator(swl, cfg, TR.uniform(swl)).run(r).throughput_per_chip
-                for r in (1.2, 1.6))
-    sat_b = max(Simulator(swb, cfg, TR.uniform(swb)).run(r).throughput_per_chip
-                for r in (1.2, 1.6))
+    sat_l = saturation_throughput(
+        Simulator(swl, cfg, TR.uniform(swl)).sweep([1.2, 1.6]))
+    sat_b = saturation_throughput(
+        Simulator(swb, cfg, TR.uniform(swb)).sweep([1.2, 1.6]))
     assert sat_l > 1.15 * sat_b
 
 
@@ -99,8 +100,8 @@ def test_ring_allreduce_bidirectional_gain(cgroup_net):
     cfg = SimConfig(warmup=400, measure=1600, vcs_per_class=4)
     uni = Simulator(cgroup_net, cfg, TR.ring_allreduce(cgroup_net, False))
     bi = Simulator(cgroup_net, cfg, TR.ring_allreduce(cgroup_net, True))
-    sat_u = max(uni.run(r).throughput_per_chip for r in (2.0, 2.6))
-    sat_b = max(bi.run(r).throughput_per_chip for r in (3.0, 3.8))
+    sat_u = saturation_throughput(uni.sweep([2.0, 2.6]))
+    sat_b = saturation_throughput(bi.sweep([3.0, 3.8]))
     assert sat_b > 1.3 * sat_u
     assert sat_u > 1.8  # paper: ~2 flits/cycle/chip
 

@@ -1,6 +1,8 @@
 """Structural invariants of the constructed networks."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import topology as T

@@ -1,0 +1,93 @@
+"""Traffic pattern invariants: destination ranges, the out-of-range guard,
+permutation fixed-point handling, and the batched-key path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.simulator import SimConfig, Simulator
+
+
+@pytest.fixture(scope="module")
+def net():
+    # 2 W-groups so group-structured patterns (worst_case, hotspot) are
+    # exercised; T=64 is NOT a power of two times anything special for the
+    # bit patterns (b = 6 bits covers 0..63 exactly here, so also try the
+    # guard separately on a non-power-of-two below).
+    p = T.SwitchlessParams(a=2, b=1, m=2, n=4, noc=2, g=2)
+    return T.build_switchless(p, "traffic-net")
+
+
+def _assert_in_range(dest, T_):
+    d = np.asarray(dest)
+    assert d.shape == (T_,)
+    assert (d >= 0).all() and (d < T_).all()
+
+
+def test_all_patterns_in_range(net):
+    T_ = net.num_terminals
+    key = jax.random.PRNGKey(0)
+    for name, mk in TR.PATTERNS.items():
+        pat = mk(net)
+        for t in (0, 7):
+            _assert_in_range(pat(jax.random.fold_in(key, t), t), T_)
+    hot, _ = TR.hotspot(net, num_hot=2, seed=0)
+    _assert_in_range(hot(key, 0), T_)
+    for bi in (False, True):
+        _assert_in_range(TR.ring_allreduce(net, bidirectional=bi)(key, 0), T_)
+
+
+def test_uniform_never_self(net):
+    pat = TR.uniform(net)
+    for s in range(4):
+        d = np.asarray(pat(jax.random.PRNGKey(s), 0))
+        assert (d != np.arange(net.num_terminals)).all()
+
+
+def test_guard_maps_out_of_range_to_self():
+    T_ = 12  # non-power-of-two: bit patterns can exceed T-1
+    dest = np.array([0, 5, 11, 12, 15, 200] + [1] * (T_ - 6))
+    g = TR._guard(dest, T_)
+    src = np.arange(T_)
+    oor = dest >= T_
+    assert (g[oor] == src[oor]).all()
+    assert (g[~oor] == dest[~oor]).all()
+    assert (g < T_).all()
+
+
+def test_bit_patterns_guarded_on_non_pow2(net):
+    # the fixture net has T = num_terminals; whatever it is, destinations
+    # must be guarded into range
+    T_ = net.num_terminals
+    for mk in (TR.bit_reverse, TR.bit_shuffle, TR.bit_transpose):
+        _assert_in_range(mk(net)(jax.random.PRNGKey(0), 0), T_)
+
+
+def test_permutation_fixed_points_silently_dropped(net):
+    """A pattern that is ALL fixed points generates zero packets: the
+    simulator treats dest == src as "don't inject" (no drops, no traffic)."""
+    identity = TR._perm_pattern(np.arange(net.num_terminals))
+    cfg = SimConfig(warmup=50, measure=150, vcs_per_class=2)
+    sim = Simulator(net, cfg, identity)
+    r = sim.run(1.0)
+    assert r.generated_pkts == 0
+    assert r.delivered_pkts == 0
+    assert r.dropped_pkts == 0
+
+
+def test_batched_key_path_matches_per_lane(net):
+    pat = TR.uniform(net)
+    keys = TR.split_lanes(jax.random.PRNGKey(42), 3)
+    batched = TR.batched(pat)(keys, 0)
+    assert batched.shape == (3, net.num_terminals)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(batched[i]),
+                                      np.asarray(pat(keys[i], 0)))
+    # permutation patterns broadcast over the lane axis
+    perm = TR.bit_reverse(net)
+    b = TR.batched(perm)(keys, 0)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(b[i]),
+                                      np.asarray(perm(keys[i], 0)))
