@@ -1,0 +1,106 @@
+"""Degraded-wafer throughput benchmark: accepted throughput and latency
+vs. the fraction of failed fabric links.
+
+Wafer-scale integration makes dead links/routers the norm (known-good-die
+yield, post-bond defects), so the interesting number is not peak throughput
+but how gracefully the switch-less fabric degrades.  This benchmark samples
+one random link-failure `FaultSet` per (failure-rate, seed) lane, rebuilds
+fault-aware routing per lane, and runs the WHOLE failure-rate x seed grid
+as ONE compiled batched scan (`BatchedSweep.run_faults` stacks the per-lane
+fault tables and vmaps the shared step over them) — `compiles == 1` in the
+output is the proof.
+
+Writes `BENCH_faults.json` (repo root) with the per-rate seed-averaged
+curve; `monotone_within_tol` checks that accepted throughput never
+*increases* materially as more links fail.
+
+    PYTHONPATH=src python benchmarks/bench_faults.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+DEFAULT_FRACS = (0.0, 0.04, 0.08, 0.12, 0.16)
+DEFAULT_SEEDS = (0, 1)
+# a shade above the pristine saturation point, so accepted throughput
+# tracks the surviving capacity instead of the offered load
+DEFAULT_OFFERED = 0.55
+MONOTONE_TOL = 0.03   # allowed non-monotone wiggle (flits/cycle/chip)
+
+
+def bench(fracs=DEFAULT_FRACS, seeds=DEFAULT_SEEDS,
+          offered=DEFAULT_OFFERED, warmup=300, measure=1500) -> dict:
+    from repro.core import topology as T
+    from repro.core import traffic as TR
+    from repro.core.simulator import SimConfig, Simulator
+
+    net = T.build_switchless(
+        T.SwitchlessParams(a=2, b=2, m=2, n=4, noc=2, g=5), "bench-faults")
+    cfg = SimConfig(warmup=warmup, measure=measure, vc_mode="updown",
+                    route_mode="min", vcs_per_class=2)
+    fracs, seeds = list(fracs), list(seeds)
+    # one independently sampled fault set per (failure rate, seed) lane
+    fault_grid = [
+        [T.sample_link_faults(net, f, np.random.default_rng(1000 * i + s))
+         for s in seeds]
+        for i, f in enumerate(fracs)]
+    sim = Simulator(net, cfg, TR.uniform(net))
+    grid = sim.sweep_faults(offered, fault_grid, seeds=seeds)
+
+    rows = grid.mean_over_seeds()
+    thr = [r.throughput_per_chip for r in rows]
+    lat = [r.avg_latency for r in rows]
+    monotone = all(thr[i + 1] <= thr[i] + MONOTONE_TOL
+                   for i in range(len(thr) - 1))
+    return dict(
+        net="switchless a=2 b=2 m=2 n=4 g=5 (updown, minimal)",
+        channels=net.num_channels,
+        offered_per_chip=offered,
+        requested_fracs=fracs,
+        achieved_fracs=grid.fault_fracs,
+        seeds=seeds,
+        lanes=len(fracs) * len(seeds),
+        cycles_per_lane=warmup + measure,
+        throughput_per_chip=thr,
+        avg_latency=lat,
+        per_seed_throughput=[[grid.result(i, j).throughput_per_chip
+                              for j in range(len(seeds))]
+                             for i in range(len(fracs))],
+        delivered_pkts=[[grid.result(i, j).delivered_pkts
+                         for j in range(len(seeds))]
+                        for i in range(len(fracs))],
+        compiles=grid.compile_count,
+        wall_s=grid.wall_s,
+        monotone_within_tol=monotone,
+        monotone_tol=MONOTONE_TOL,
+    )
+
+
+def write(out: dict, path: str | None = None) -> str:
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_faults.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return os.path.abspath(path)
+
+
+def main() -> None:
+    out = bench()
+    path = write(out)
+    print(json.dumps(out, indent=2))
+    print(f"\nwrote {path}")
+    if out["compiles"] != 1:
+        raise SystemExit(f"expected exactly 1 compile, got {out['compiles']}")
+    if not out["monotone_within_tol"]:
+        raise SystemExit("degraded-throughput curve is not monotone")
+
+
+if __name__ == "__main__":
+    main()

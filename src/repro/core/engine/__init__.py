@@ -12,18 +12,22 @@ vmaps it over a (rate x seed) lane grid so an entire load-latency curve runs
 in a single jitted `lax.scan`.  `repro.core.simulator` is the thin
 compatibility facade over this package.
 """
-from .state import SimState, SimStats, build_consts, make_state
+from .state import (SimState, SimStats, build_consts, build_lane,
+                    make_state, stack_lanes)
 from .arbitrate import Requests, make_arbitrate_fn
-from .inject import make_inject_fn, make_misroute_fn, build_ugal_watch
+from .inject import (make_inject_fn, make_misroute_fn, build_ugal_watch,
+                     ugal_queue_len)
 from .apply import make_apply_fn
 from .stats import accumulate, finalize, zero_stats
 from .step import make_step, run_scan
-from .sweep import BatchedSweep, SweepResult, run_scan_batched
+from .sweep import (BatchedSweep, SweepResult, compile_counter,
+                    run_scan_batched)
 
 __all__ = [
-    "SimState", "SimStats", "Requests", "build_consts", "make_state",
-    "make_arbitrate_fn", "make_inject_fn", "make_misroute_fn",
-    "build_ugal_watch", "make_apply_fn", "accumulate", "finalize",
-    "zero_stats", "make_step", "run_scan", "BatchedSweep", "SweepResult",
+    "SimState", "SimStats", "Requests", "build_consts", "build_lane",
+    "make_state", "stack_lanes", "make_arbitrate_fn", "make_inject_fn",
+    "make_misroute_fn", "build_ugal_watch", "ugal_queue_len",
+    "make_apply_fn", "accumulate", "finalize", "zero_stats", "make_step",
+    "run_scan", "BatchedSweep", "SweepResult", "compile_counter",
     "run_scan_batched",
 ]

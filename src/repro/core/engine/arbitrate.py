@@ -43,11 +43,13 @@ class Requests:
         return replace(self, **kw)
 
 
-def gather_requests(state: SimState, consts, route_fn, t) -> Requests:
+def gather_requests(state: SimState, consts, route_kernel, fl,
+                    t) -> Requests:
     """Head-of-line packets of every non-eject (channel, VC) buffer + source
     queue.  Eject channels are the trailing id block and never hold packets,
     so restricting the grid to [:E_req] is a free slice that shrinks every
-    downstream row-wise op."""
+    downstream row-wise op.  `fl` carries the lane's fault-dependent
+    routing tables into the route kernel."""
     NV, T, ER = consts["NV"], consts["T"], consts["E_req"]
     bh = state.b_head[:ER]                         # [E_req, NV]
     e_idx = jnp.arange(ER)[:, None].repeat(NV, 1)
@@ -61,7 +63,8 @@ def gather_requests(state: SimState, consts, route_fn, t) -> Requests:
     r_ready = head_pkt[:, F_READY]
     r_valid = ((state.b_count[:ER] > 0).reshape(-1) & (r_ready <= t))
     cur_node = consts["ch_dst"][e_idx.reshape(-1)]
-    out_ch, req_vc, new_meta = route_fn(cur_node, r_dest, r_mis, r_meta)
+    out_ch, req_vc, new_meta = route_kernel(fl, cur_node, r_dest, r_mis,
+                                            r_meta)
 
     # source-queue requesters: fixed out channel (the injection link)
     sq_pkt = state.s_pkt[(jnp.arange(T), state.s_head)]   # [T, 3]
@@ -97,7 +100,8 @@ def expand_vcs(req: Requests, state: SimState, cfg) -> Requests:
         ovc_count=jnp.min(occs, axis=-1))
 
 
-def age_based_grant(req: Requests, state: SimState, consts, buf_pkts: int):
+def age_based_grant(req: Requests, state: SimState, consts, buf_pkts: int,
+                    ch_alive=None):
     """One winner per output channel, oldest `itime` first (ids break ties).
 
     Returns (win, won_ch): the boolean winner mask aligned with the request
@@ -105,11 +109,17 @@ def age_based_grant(req: Requests, state: SimState, consts, buf_pkts: int):
     winner this cycle (a channel with any eligible requester always grants
     exactly one — `m1 != INF` — which gives apply the serialization update
     without another scatter).
+
+    `ch_alive` (the lane's fault mask) makes dead channels ungrantable —
+    fault-aware routing never requests one, so this is defence in depth
+    that also covers hand-built states in tests.
     """
     E = consts["E"]
     is_ej = req.otype == EJECT
     credit = req.ovc_count < buf_pkts
     ok = req.valid & (state.ch_busy[req.out] == 0) & (credit | is_ej)
+    if ch_alive is not None:
+        ok = ok & ch_alive[req.out]
 
     seg = jnp.where(ok, req.out, E)
     key1 = jnp.where(ok, req.itime, INF32)
@@ -123,13 +133,14 @@ def age_based_grant(req: Requests, state: SimState, consts, buf_pkts: int):
     return win, won_ch
 
 
-def make_arbitrate_fn(net: Network, cfg, consts, route_fn):
-    """Returns arbitrate(state, t) -> (Requests, win_mask, won_ch_mask)."""
+def make_arbitrate_fn(net: Network, cfg, consts, route_kernel):
+    """Returns arbitrate(state, t, fl) -> (Requests, win_mask, won_ch_mask)."""
 
-    def arbitrate(state, t):
-        req = gather_requests(state, consts, route_fn, t)
+    def arbitrate(state, t, fl):
+        req = gather_requests(state, consts, route_kernel, fl, t)
         req = expand_vcs(req, state, cfg)
-        win, won_ch = age_based_grant(req, state, consts, cfg.buf_pkts)
+        win, won_ch = age_based_grant(req, state, consts, cfg.buf_pkts,
+                                      fl["ch_alive"])
         return req, win, won_ch
 
     return arbitrate

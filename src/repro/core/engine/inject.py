@@ -14,10 +14,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..topology import MESH, Network
+from ..topology import MESH, FaultSet, Network
 
 
-def build_ugal_watch(net: Network, cfg):
+def build_ugal_watch(net: Network, cfg, faults: FaultSet | None = None):
     """UGAL-G congestion sensors: channels whose buffered load proxies the
     (w-group -> peer) global path quality.
 
@@ -25,45 +25,79 @@ def build_ugal_watch(net: Network, cfg):
     itself PLUS the mesh channels feeding its source router — under
     adversarial load the backlog accumulates in those feeders, not in the
     (fast-draining) downstream buffer of the link.  Returns an int array
-    [g, g, 5] of channel ids (0-padded), or None when UGAL is off.
+    [g, g, 5] of channel ids, or None when UGAL is off.
+
+    Unused sensor slots hold the sentinel -1 and are masked out of the
+    occupancy sum (0-padding would silently add channel 0's backlog to
+    every entry with fewer than 5 feeders and bias the min-vs-nonmin
+    comparison).  With `faults`, each entry watches the first ALIVE
+    parallel global link and only its alive feeders.
     """
     if cfg.route_mode != "ugal":
         return None
     t = net.tables
     g = net.meta["g"]
+    faults = faults or FaultSet()
+    ch_alive = faults.ch_alive(net)
+    gw = np.full((g, g, 5), -1, dtype=np.int64)
     if net.meta["kind"] == "switchless":
         ab = net.meta["ab"]
-        gw = np.zeros((g, g, 5), dtype=np.int64)
+        npar = t["glob_route_cg"].shape[-1]
         for w in range(g):
             for u in range(g):
                 if u == w:
                     continue
-                cg = t["glob_route_cg"][w, u, 0]
-                port = t["glob_route_port"][w, u, 0]
-                ch = t["ext_out"][w * ab + cg, port]
+                ch = -1
+                for r in range(npar):
+                    cg = t["glob_route_cg"][w, u, r]
+                    if cg < 0:
+                        continue
+                    cand = t["ext_out"][w * ab + cg, t["glob_route_port"][w, u, r]]
+                    if cand >= 0 and ch_alive[cand]:
+                        ch = cand
+                        break
+                if ch < 0:
+                    continue
                 src = net.ch_src[ch]
                 feeders = [c for c in np.where(net.ch_dst == src)[0]
-                           if net.ch_type[c] == MESH][:4]
+                           if net.ch_type[c] == MESH and ch_alive[c]][:4]
                 sens = [ch] + list(feeders)
                 gw[w, u, :len(sens)] = sens
         return jnp.asarray(gw)
-    gw = np.maximum(t["glob_out_ch"][:, :, :1], 0)
-    return jnp.asarray(
-        np.concatenate([gw, np.zeros((g, g, 4), dtype=np.int64)], axis=-1))
+    out_ch = t["glob_out_ch"]
+    npar = out_ch.shape[-1]
+    for w in range(g):
+        for u in range(g):
+            if u == w:
+                continue
+            for r in range(npar):
+                cand = out_ch[w, u, r]
+                if cand >= 0 and ch_alive[cand]:
+                    gw[w, u, 0] = cand
+                    break
+    return jnp.asarray(gw)
+
+
+def ugal_queue_len(occ, watch_entry):
+    """Masked sensor sum: total buffered packets over the (>= 0) sensor
+    channels of one watch entry; -1 sentinel slots contribute zero."""
+    vals = occ[jnp.maximum(watch_entry, 0)]
+    return jnp.where(watch_entry >= 0, vals, 0).sum(-1)
 
 
 def make_misroute_fn(net: Network, cfg, consts):
-    """Returns gen_mis(key, dest[T], b_count[E, NV]) -> mis_wg[T].
+    """Returns gen_mis(key, dest[T], b_count[E, NV], fl) -> mis_wg[T].
 
     -1 means route minimally; otherwise the intermediate W-group the packet
-    must visit first (cleared by the apply phase on entry).
+    must visit first (cleared by the apply phase on entry).  The UGAL
+    sensor table comes from the per-lane `fl` dict so faulted lanes watch
+    their surviving links.
     """
     T = consts["T"]
     num_wg = consts["num_wg"]
     term_wg = consts["term_wg"]
-    glob_watch = build_ugal_watch(net, cfg)
 
-    def gen_mis(key, dest, b_count):
+    def gen_mis(key, dest, b_count, fl):
         wg_s = term_wg
         wg_d = term_wg[dest]
         differ = wg_s != wg_d
@@ -79,9 +113,10 @@ def make_misroute_fn(net: Network, cfg, consts):
             ok = (cand < wg_d) & (cand != wg_s)
             cand = jnp.where(ok, cand, -1)
         if cfg.route_mode == "ugal":
+            glob_watch = fl["ugal_watch"]
             occ = b_count.sum(axis=1)  # [E] total buffered packets
-            q_min = occ[glob_watch[wg_s, jnp.maximum(wg_d, 0)]].sum(-1)
-            q_non = occ[glob_watch[wg_s, jnp.maximum(cand, 0)]].sum(-1)
+            q_min = ugal_queue_len(occ, glob_watch[wg_s, jnp.maximum(wg_d, 0)])
+            q_non = ugal_queue_len(occ, glob_watch[wg_s, jnp.maximum(cand, 0)])
             take_nonmin = q_min > 2 * q_non + cfg.ugal_threshold
             cand = jnp.where(take_nonmin, cand, -1)
         return jnp.where(differ, cand, -1).astype(jnp.int32)
@@ -90,19 +125,27 @@ def make_misroute_fn(net: Network, cfg, consts):
 
 
 def make_inject_fn(net: Network, cfg, consts, pattern, inject_mask=None):
-    """Returns inject(state, t, key, rate_pkt) -> state."""
+    """Returns inject(state, t, key, rate_pkt, fl) -> state.
+
+    Dead terminals (routers killed by the lane's fault set) neither inject
+    nor are injected TO: a generated packet whose destination terminal is
+    dead is suppressed like a permutation fixed point, so every packet that
+    enters a degraded network can be delivered.
+    """
     T = consts["T"]
     Q = cfg.srcq_pkts
     inj_mask = (jnp.ones(T, dtype=bool) if inject_mask is None
                 else jnp.asarray(inject_mask))
     gen_mis = make_misroute_fn(net, cfg, consts)
 
-    def inject(state, t, key, rate_pkt):
+    def inject(state, t, key, rate_pkt, fl):
         k_gen, k_dest, k_mis = jax.random.split(key, 3)
+        alive = fl["term_alive"]
         gen = (jax.random.uniform(k_gen, (T,)) < rate_pkt) & inj_mask
         dest = pattern(k_dest, t).astype(jnp.int32)
         gen = gen & (dest != jnp.arange(T))  # fixed points are silent
-        mis = gen_mis(k_mis, dest, state.b_count)
+        gen = gen & alive & alive[dest]      # dead endpoints are silent
+        mis = gen_mis(k_mis, dest, state.b_count, fl)
         space = state.s_count < Q
         push = gen & space
         slot = (state.s_head + state.s_count) % Q

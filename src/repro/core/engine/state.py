@@ -19,8 +19,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..topology import NUM_CH_TYPES, Network
-from ..routing import make_route_fn, num_vcs
+from ..topology import NUM_CH_TYPES, FaultSet, Network
+from ..routing import make_route_kernel, num_vcs, route_tables
 
 INF32 = jnp.int32(2**31 - 1)
 
@@ -95,16 +95,20 @@ def make_state(net: Network, cfg, NV: int,
 
 
 def build_consts(net: Network, cfg):
-    """Static (per-net, per-cfg) arrays + the route closure.
+    """Static (per-net, per-cfg) arrays + the route KERNEL.
 
     Everything here is batch-free: phase functions gather from these with
-    (possibly batched) indices, which keeps them pure under `vmap`.
+    (possibly batched) indices, which keeps them pure under `vmap`.  The
+    fault-dependent data (routing tables, alive masks) is deliberately NOT
+    here — it lives in the per-lane `fl` dict (`build_lane`) threaded
+    through the step arguments, so one compiled step serves lanes with
+    different fault sets.
     """
     NV = num_vcs(net.meta["kind"], cfg.vc_mode, cfg.nonminimal) \
         * cfg.vcs_per_class
     E = net.num_channels
     T = net.num_terminals
-    route_fn = make_route_fn(net, cfg.vc_mode)
+    route_kernel = make_route_kernel(net, cfg.vc_mode)
     ser = (cfg.pkt_len + net.ch_bw - 1) // net.ch_bw  # serialization cycles
     wg_tbl = net.tables.get("node_wg", net.tables.get("node_grp"))
     # wg of the downstream node of each channel (for misroute clearing)
@@ -127,4 +131,32 @@ def build_consts(net: Network, cfg):
         term_wg=jnp.asarray(wg_tbl[net.term_node]),
         num_wg=net.meta["g"],
     )
-    return consts, route_fn
+    return consts, route_kernel
+
+
+def build_lane(net: Network, cfg, faults: FaultSet | None = None) -> dict:
+    """Per-lane fault data (the `fl` pytree): alive masks + fault-dependent
+    routing tables (+ UGAL sensors when adaptive routing is on).
+
+    One lane describes ONE degraded (or pristine) network.  The dict is a
+    JAX pytree with a fixed structure per (net, cfg), so `stack_lanes` can
+    prepend a lane axis and `run_scan_batched` can vmap the step over lanes
+    carrying DIFFERENT fault sets in a single compile.  The `SimState`
+    itself needs no fault information: buffers start empty and dead
+    channels simply never grant.
+    """
+    from .inject import build_ugal_watch  # local import: step imports both
+    faults = faults or FaultSet()
+    fl = dict(
+        ch_alive=jnp.asarray(faults.ch_alive(net)),
+        term_alive=jnp.asarray(faults.term_alive(net)),
+    )
+    fl.update(route_tables(net, cfg.vc_mode, faults))
+    if cfg.route_mode == "ugal":
+        fl["ugal_watch"] = build_ugal_watch(net, cfg, faults)
+    return fl
+
+
+def stack_lanes(lanes: list[dict]) -> dict:
+    """Stack per-lane fault dicts into one lane-axis pytree [B, ...]."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)

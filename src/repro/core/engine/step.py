@@ -2,10 +2,14 @@
 
     inject -> arbitrate (route + VC expansion + grant) -> apply -> stats
 
-`make_step` returns a pure function `step(state, (t, key, rate_pkt))` whose
-carry is the pytree `SimState`; `run_scan` advances it `cycles` times inside
-one jitted `lax.scan`, donating the state so buffers are reused in place.
-Both are `vmap`-compatible over a leading batch axis (see `sweep.py`).
+`make_step` returns a pure function `step(state, (t, key, rate_pkt, fl))`
+whose carry is the pytree `SimState`; `fl` is the lane's fault data
+(`state.build_lane`: alive masks + fault-dependent routing tables) — an
+explicit traced argument rather than a closure constant, so the batched
+sweep can vmap one compiled step over lanes with different fault sets.
+`run_scan` advances one lane `cycles` times inside one jitted `lax.scan`,
+donating the state so buffers are reused in place.  Both are
+`vmap`-compatible over a leading batch axis (see `sweep.py`).
 """
 from __future__ import annotations
 
@@ -23,16 +27,17 @@ from .stats import accumulate, zero_stats
 
 
 def make_step(net: Network, cfg, pattern, inject_mask=None):
-    """Returns (step, consts); step(state, (t, key, rate_pkt)) -> (state, None)."""
-    consts, route_fn = build_consts(net, cfg)
+    """Returns (step, consts);
+    step(state, (t, key, rate_pkt, fl)) -> (state, None)."""
+    consts, route_kernel = build_consts(net, cfg)
     inject = make_inject_fn(net, cfg, consts, pattern, inject_mask)
-    arbitrate = make_arbitrate_fn(net, cfg, consts, route_fn)
+    arbitrate = make_arbitrate_fn(net, cfg, consts, route_kernel)
     apply_moves = make_apply_fn(net, cfg, consts)
 
-    def step(state, t_and_key_rate):
-        t, key, rate_pkt = t_and_key_rate
-        state = inject(state, t, key, rate_pkt)
-        req, win, won_ch = arbitrate(state, t)
+    def step(state, t_key_rate_fl):
+        t, key, rate_pkt, fl = t_key_rate_fl
+        state = inject(state, t, key, rate_pkt, fl)
+        req, win, won_ch = arbitrate(state, t, fl)
         stats = accumulate(state.stats, req, win, consts, t)
         state = apply_moves(state, req, win, won_ch, t)
         return state.replace(stats=stats), None
@@ -41,13 +46,13 @@ def make_step(net: Network, cfg, pattern, inject_mask=None):
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(3,))
-def run_scan(step, cycles, reset_at, state0, rate_pkt, key):
+def run_scan(step, cycles, reset_at, state0, rate_pkt, key, fl):
     """Advance one lane `cycles` steps; stats are zeroed after warmup."""
 
     def body(carry, t):
         state, key = carry
         key, sub = jax.random.split(key)
-        state, _ = step(state, (t, sub, rate_pkt))
+        state, _ = step(state, (t, sub, rate_pkt, fl))
         st = jax.lax.cond(t == reset_at, zero_stats, lambda s: s, state.stats)
         return (state.replace(stats=st), key), None
 

@@ -12,32 +12,60 @@ sequential `scan` per offered rate.
 Lane (i, j) reproduces `Simulator.run(rates[i])` with `seed=seeds[j]`
 bit-for-bit: the per-lane key chain is identical and `vmap` does not change
 the per-lane math.
+
+Fault grids: because the fault-dependent data (alive masks + routing
+tables, `state.build_lane`) is an explicit step argument, lanes may carry
+DIFFERENT fault sets — `run_faults` stacks one lane per (fault set, seed)
+and runs a whole failure-rate x seed grid of degraded networks in the same
+single compile (see benchmarks/bench_faults.py).
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..topology import Network
-from .state import make_state
+from ..topology import FaultSet, Network
+from .state import build_lane, make_state, stack_lanes
 from .stats import finalize, zero_stats
 from .step import make_step
 
+# Monotone count of `run_scan_batched` (re)traces.  The body below bumps it
+# at TRACE time (Python side effects run once per jit compilation, never per
+# execution), so a delta across a call counts exactly the compiles that call
+# triggered — unlike the private `_cache_size` jit API, which is absent on
+# some JAX versions and silently made `SweepResult.compile_count` lie as 0.
+_TRACE_COUNT = [0]
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(3,))
-def run_scan_batched(step, cycles, reset_at, state0, rate_pkt, keys):
-    """Advance B lanes in lockstep; state0/keys/rate_pkt carry axis 0 = B."""
+
+def compile_counter() -> int:
+    """Compilations of `run_scan_batched` so far in this process."""
+    return _TRACE_COUNT[0]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7),
+                   donate_argnums=(3,))
+def run_scan_batched(step, cycles, reset_at, state0, rate_pkt, keys, lanes,
+                     per_lane_faults: bool):
+    """Advance B lanes in lockstep; state0/keys/rate_pkt carry axis 0 = B.
+
+    `lanes` is the fault pytree (`build_lane`): lane-stacked ([B, ...],
+    `per_lane_faults=True`) when the lanes model different degraded
+    networks, or a single shared lane dict broadcast across the batch.
+    """
+    _TRACE_COUNT[0] += 1  # trace-time side effect == one jit compilation
+    lane_axis = 0 if per_lane_faults else None
 
     def body(carry, t):
         state, keys = carry
         splits = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
         keys, subs = splits[:, 0], splits[:, 1]
         state, _ = jax.vmap(
-            lambda s, k, r: step(s, (t, k, r)))(state, subs, rate_pkt)
+            lambda s, k, r, f: step(s, (t, k, r, f)),
+            in_axes=(0, 0, 0, lane_axis))(state, subs, rate_pkt, lanes)
         st = jax.lax.cond(t == reset_at, zero_stats, lambda s: s, state.stats)
         return (state.replace(stats=st), keys), None
 
@@ -60,24 +88,21 @@ def offered_to_rate_pkt(offered_per_chip: float, cfg,
     return rate
 
 
-def _jit_cache_size() -> int:
-    """Entry count of run_scan_batched's jit cache (0 if the private JAX
-    introspection API is unavailable)."""
-    try:
-        return run_scan_batched._cache_size()
-    except AttributeError:
-        return 0
-
-
 @dataclass
 class SweepResult:
-    """SimResults on the (rate x seed) grid, plus curve-level reductions."""
+    """SimResults on the (rate x seed) grid, plus curve-level reductions.
+
+    For fault sweeps (`BatchedSweep.run_faults`) the row axis is the fault
+    grid instead of the rate grid: `rates[i]` repeats the common offered
+    load and `fault_fracs[i]` labels row i with its failed-link fraction.
+    """
 
     rates: list[float]
     seeds: list[int]
     results: list[list]        # [num_rates][num_seeds] of SimResult
     compile_count: int = 0     # jit compilations this sweep triggered
     wall_s: float = 0.0
+    fault_fracs: list | None = None   # per-row failed-link fraction (faults)
 
     def result(self, rate_idx: int, seed_idx: int = 0):
         return self.results[rate_idx][seed_idx]
@@ -120,24 +145,36 @@ class BatchedSweep:
 
     The step closure is shared with `Simulator` (same phases, same consts);
     `route_fn` and the traffic pattern only ever see per-lane data, so the
-    whole cycle is batch-pure and legal to `vmap`.
+    whole cycle is batch-pure and legal to `vmap`.  `faults` degrades every
+    lane with one fault set; `run_faults` runs a grid of different fault
+    sets in one compile.
     """
 
     def __init__(self, net: Network, cfg, pattern, inject_mask=None,
-                 step=None, consts=None):
+                 step=None, consts=None, faults: FaultSet | None = None,
+                 lane=None):
         self.net, self.cfg = net, cfg
         if step is None:
             step, consts = make_step(net, cfg, pattern, inject_mask)
         self.step, self.consts = step, consts
         self.NV = consts["NV"]
+        self.faults = faults
+        self.lane0 = build_lane(net, cfg, faults) if lane is None else lane
         self.terms_per_chip = net.num_terminals / net.num_chips
-        n_inj = (int(np.asarray(inject_mask).sum()) if inject_mask is not None
-                 else net.num_terminals)
-        self._inj_frac = n_inj / net.num_terminals
+        self._inj_mask = (np.ones(net.num_terminals, dtype=bool)
+                          if inject_mask is None
+                          else np.asarray(inject_mask).astype(bool))
 
     def _rate_pkt(self, offered_per_chip: float) -> float:
         return offered_to_rate_pkt(offered_per_chip, self.cfg,
                                    self.terms_per_chip)
+
+    def _chips(self, faults: FaultSet | None) -> float:
+        """Accepted-throughput divisor: chips weighted by the fraction of
+        terminals that actually inject (mask AND alive)."""
+        alive = (self._inj_mask if faults is None
+                 else self._inj_mask & faults.term_alive(self.net))
+        return self.net.num_chips * alive.sum() / self.net.num_terminals
 
     @staticmethod
     def _lane_sharding(B: int):
@@ -154,8 +191,31 @@ class BatchedSweep:
         mesh = Mesh(np.array(devs), ("lanes",))
         return NamedSharding(mesh, PartitionSpec("lanes"))
 
-    def run(self, rates, seeds=None) -> SweepResult:
+    def _run_lanes(self, lane_rates, lane_keys, lanes, per_lane_faults):
+        """One `run_scan_batched` dispatch; returns (stats [B], wall_s,
+        compiles)."""
         import time
+        cfg = self.cfg
+        B = len(lane_rates)
+        state0 = make_state(self.net, cfg, self.NV, batch=(B,))
+        sharding = self._lane_sharding(B)
+        if sharding is not None:
+            state0 = jax.device_put(state0, sharding)
+            lane_rates = jax.device_put(lane_rates, sharding)
+            lane_keys = jax.device_put(lane_keys, sharding)
+            if per_lane_faults:
+                lanes = jax.device_put(lanes, sharding)
+        cycles = cfg.warmup + cfg.measure
+        compiles0 = compile_counter()
+        t0 = time.perf_counter()
+        state = run_scan_batched(self.step, cycles, cfg.warmup,
+                                 state0, lane_rates, lane_keys, lanes,
+                                 per_lane_faults)
+        stats = jax.tree.map(np.asarray, state.stats)
+        wall = time.perf_counter() - t0
+        return stats, wall, compile_counter() - compiles0
+
+    def run(self, rates, seeds=None) -> SweepResult:
         cfg = self.cfg
         rates = [float(r) for r in rates]
         seeds = [cfg.seed] if seeds is None else [int(s) for s in seeds]
@@ -170,23 +230,63 @@ class BatchedSweep:
             dtype=jnp.float32)
         lane_keys = jnp.stack(
             [jax.random.PRNGKey(s) for _ in rates for s in seeds])
-        state0 = make_state(self.net, cfg, self.NV, batch=(B,))
-        sharding = self._lane_sharding(B)
-        if sharding is not None:
-            state0 = jax.device_put(state0, sharding)
-            lane_rates = jax.device_put(lane_rates, sharding)
-            lane_keys = jax.device_put(lane_keys, sharding)
-        cycles = cfg.warmup + cfg.measure
-        misses0 = _jit_cache_size()
-        t0 = time.perf_counter()
-        state = run_scan_batched(self.step, cycles, cfg.warmup,
-                                 state0, lane_rates, lane_keys)
-        stats = jax.tree.map(np.asarray, state.stats)
-        wall = time.perf_counter() - t0
-        compiles = _jit_cache_size() - misses0
-        chips = self.net.num_chips * self._inj_frac
+        stats, wall, compiles = self._run_lanes(
+            lane_rates, lane_keys, self.lane0, per_lane_faults=False)
+        chips = self._chips(self.faults)
         lane = lambda i: jax.tree.map(lambda x: x[i], stats)
         results = [[finalize(lane(i * S + j), cfg, rates[i], chips)
                     for j in range(S)] for i in range(R)]
         return SweepResult(rates=rates, seeds=seeds, results=results,
                            compile_count=compiles, wall_s=wall)
+
+    def run_faults(self, offered_per_chip: float, fault_grid,
+                   seeds=None) -> SweepResult:
+        """Degraded-throughput grid: one lane per (fault set, seed), all at
+        the same offered load, in ONE compiled batched scan.
+
+        `fault_grid` is a list of rows; row i is either one `FaultSet`
+        (shared by every seed lane of that row) or a per-seed list
+        `[FaultSet, ...]` (e.g. independently sampled failures per seed).
+        Rows map to `SweepResult.results` rows; `fault_fracs[i]` records
+        row i's mean failed-link fraction.
+
+        When the sweep itself was constructed with `faults`, every grid
+        entry COMPOSES on top of that base set (an empty-FaultSet row
+        means "just the base faults", not "pristine"); an invalid
+        composition raises from `validate_faults`.
+        """
+        cfg = self.cfg
+        seeds = [cfg.seed] if seeds is None else [int(s) for s in seeds]
+        S = len(seeds)
+        base = self.faults
+        comp = (lambda f: f) if base is None else \
+            (lambda f: base.union(f))
+        rows = [[comp(f) for f in
+                 (list(fs) if isinstance(fs, (list, tuple)) else [fs] * S)]
+                for fs in fault_grid]
+        if not rows or any(len(r) != S for r in rows):
+            raise ValueError("fault_grid rows must match the seed count")
+        F = len(rows)
+        B = F * S
+        rate = self._rate_pkt(offered_per_chip)
+        lane_rates = jnp.full((B,), rate, dtype=jnp.float32)
+        lane_keys = jnp.stack(
+            [jax.random.PRNGKey(s) for _ in rows for s in seeds])
+        # FaultSet is frozen/hashable: build each distinct lane once even
+        # when a row shares one fault set across every seed lane
+        memo = {}
+        for f in (f for row in rows for f in row):
+            if f not in memo:
+                memo[f] = build_lane(self.net, cfg, f)
+        lanes = stack_lanes([memo[f] for row in rows for f in row])
+        stats, wall, compiles = self._run_lanes(
+            lane_rates, lane_keys, lanes, per_lane_faults=True)
+        lane = lambda i: jax.tree.map(lambda x: x[i], stats)
+        results = [[finalize(lane(i * S + j), cfg, offered_per_chip,
+                             self._chips(rows[i][j]))
+                    for j in range(S)] for i in range(F)]
+        fracs = [float(np.mean([f.frac_links_failed(self.net)
+                                for f in row])) for row in rows]
+        return SweepResult(rates=[offered_per_chip] * F, seeds=seeds,
+                           results=results, compile_count=compiles,
+                           wall_s=wall, fault_fracs=fracs)

@@ -12,6 +12,14 @@ whole cycle over a (rate x seed) lane axis, so any cross-packet coupling
 here would silently change batched results (guarded by
 tests/test_engine.py::test_route_fn_batch_pure).
 
+FAULT AWARENESS: the fault-dependent tables (parallel-global re-pick,
+per-W-group up*/down* next hops) are NOT closure constants — they live in
+the `fl` dict produced by `route_tables(net, vc_mode, faults)` and are an
+explicit first argument of the kernels (`make_route_kernel`), so a batched
+sweep can stack them over a lane axis and run a failure-rate x seed grid in
+one compile.  `make_route_fn` binds a kernel to one network's tables and
+keeps the historical 4-argument closure signature.
+
 Packet routing state ("meta" int32 bitfield):
   bits 0..2  cg_count  number of inter-C-group channels traversed so far
   bits 3..4  g_count   number of global channels traversed so far
@@ -30,7 +38,9 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from .topology import (EJECT, GLOBAL, INJECT, LOCAL, MESH, Network)
+from .topology import (EJECT, GLOBAL, INJECT, LOCAL, MESH, FaultSet,
+                       Network, validate_faults, wgroup_adjacency,
+                       _wired_global_links)
 
 # --- meta bitfield helpers ---------------------------------------------------
 
@@ -76,21 +86,70 @@ def num_vcs(kind: str, vc_mode: str, nonminimal: bool) -> int:
     raise ValueError(kind)
 
 
+# --- fault-dependent routing tables ------------------------------------------
+
+def route_tables(net: Network, vc_mode: str = "baseline",
+                 faults: FaultSet | None = None) -> dict:
+    """Fault-dependent routing tables (the `fl` pytree the kernels read).
+
+    Always contains the parallel-global-link re-pick tables
+    (`glob_cnt [g, g]`, `glob_idx [g, g, npar]`: flows spread over the
+    ALIVE parallel links of each W-group pair by destination hash); for the
+    up*/down* modes it adds the per-W-group tables recomputed on the
+    surviving graph (`ud_rank [g, NW]`, `ud_nh [g, NW, NW, 2]`).
+
+    For a pristine network the tables reproduce the un-faulted routing
+    bit-for-bit (`glob_idx` is the identity, `glob_cnt == glob_npar`).
+    The kernels take this dict as an explicit argument, so a batched sweep
+    can stack it over a lane axis and vmap one compiled step over lanes
+    with DIFFERENT fault sets (see engine/sweep.py).
+    """
+    faults = faults or FaultSet()
+    if not faults.is_empty:
+        validate_faults(net, faults, vc_mode)
+    ch_alive = faults.ch_alive(net)
+    g = net.meta["g"]
+    wired = _wired_global_links(net)                      # [g, g, npar]
+    npar = wired.shape[-1]
+    ok = (wired >= 0) & ch_alive[np.maximum(wired, 0)]
+    cnt = ok.sum(-1)
+    idx = np.zeros((g, g, npar), dtype=np.int64)
+    for w in range(g):
+        for u in range(g):
+            alive = np.flatnonzero(ok[w, u])
+            idx[w, u, :len(alive)] = alive
+    fl = dict(glob_cnt=jnp.asarray(np.maximum(cnt, 1)),
+              glob_idx=jnp.asarray(idx))
+    if net.meta["kind"] == "switchless" and vc_mode != "baseline":
+        rank, nh = build_updown_tables(net, faults=faults)
+        fl["ud_rank"] = jnp.asarray(rank)
+        fl["ud_nh"] = jnp.asarray(nh)
+    return fl
+
+
 # --- switch-less Dragonfly route function -----------------------------------
 
-def make_switchless_route_fn(net: Network, vc_mode: str = "baseline"):
-    """Returns route(cur_node, dest_term, mis_wg, meta) -> (out_ch, req_vc).
+def make_route_kernel(net: Network, vc_mode: str = "baseline"):
+    """Returns kernel(fl, cur_node, dest_term, mis_wg, meta)
+    -> (out_ch, req_vc, new_meta).
 
-    mis_wg == -1 means no (remaining) misroute; the simulator clears it when
-    the packet enters the intermediate W-group.  `out_ch` is a channel id
-    (MESH / LOCAL / GLOBAL / EJECT).  `req_vc` is the VC of the downstream
-    buffer the packet will occupy.
+    `fl` is the fault-dependent table dict of `route_tables` (an explicit
+    argument, NOT a closure constant, so the engine can vmap one compiled
+    kernel over per-lane fault sets).  mis_wg == -1 means no (remaining)
+    misroute; the simulator clears it when the packet enters the
+    intermediate W-group.  `out_ch` is a channel id (MESH / LOCAL / GLOBAL
+    / EJECT).  `req_vc` is the VC of the downstream buffer the packet will
+    occupy.
     """
+    if net.meta["kind"] != "switchless":
+        return _make_dragonfly_kernel(net)
     if vc_mode == "baseline":
         return _make_switchless_baseline(net)
     if vc_mode in ("updown", "updown_merged"):
         return _make_switchless_updown(net, vc_mode)
     raise ValueError(vc_mode)
+
+
 
 
 def _make_switchless_baseline(net: Network):
@@ -105,7 +164,6 @@ def _make_switchless_baseline(net: Network):
     eject_ch = jnp.asarray(t["eject_ch"])
     ext_out = jnp.asarray(t["ext_out"])
     local_port = jnp.asarray(t["local_port"])
-    glob_npar = jnp.asarray(t["glob_npar"])
     port_node_local = jnp.asarray(t["port_node_local"])
     term_node = jnp.asarray(t["term_node"])
     ch_type = jnp.asarray(net.ch_type)
@@ -118,7 +176,7 @@ def _make_switchless_baseline(net: Network):
     glob_tbl = jnp.stack([jnp.asarray(t["glob_route_cg"]),
                           jnp.asarray(t["glob_route_port"])], axis=-1)
 
-    def route_vc(cur, dest_term, mis_wg, meta):
+    def route_vc(fl, cur, dest_term, mis_wg, meta):
         dest_node = term_node[dest_term]
         dtbl = dnode_tbl[dest_node]
         wg_c = node_wg[cur]
@@ -134,8 +192,10 @@ def _make_switchless_baseline(net: Network):
         at_dest_cg = (cgg_c == cgg_d) & (~mis_active)
 
         # exit port selection (Alg. 1 steps); parallel global links per
-        # W-group pair are spread across flows by destination hash
-        par = dest_term % glob_npar[wg_c, tgt_wg]
+        # W-group pair are spread across flows by destination hash over the
+        # ALIVE links (fl re-picks around dead parallel globals)
+        par = fl["glob_idx"][wg_c, tgt_wg,
+                             dest_term % fl["glob_cnt"][wg_c, tgt_wg]]
         gtbl = glob_tbl[wg_c, tgt_wg, par]
         cg_gl = gtbl[..., 0]                         # owner of global channel
         port_gl = gtbl[..., 1]
@@ -165,57 +225,40 @@ def _make_switchless_baseline(net: Network):
 
         out_ch = jnp.where(at_target, out_at_target, out_mesh)
         new_meta = meta_update(meta, ch_type[out_ch])
-        is_ej = ch_type[out_ch] == 4
+        is_ej = ch_type[out_ch] == EJECT
         req_vc = jnp.where(is_ej, 0, meta_cg_count(new_meta))
         return out_ch, req_vc.astype(jnp.int32), new_meta
 
     return route_vc
 
 
-def build_updown_tables(net: Network, local_weight: int = 4):
-    """All-pairs up*/down* next-hop tables over one W-group graph.
+def _updown_single(NW: int, nbrs, alive: np.ndarray):
+    """up*/down* tables over ONE W-group graph restricted to alive routers.
 
-    Autonet-style: rank routers by BFS (depth, id) from router 0; a channel
-    u->w is *up* iff rank(w) < rank(u).  Legal paths take all up hops before
-    any down hop, which makes the channel dependency graph acyclic for ANY
-    topology — this is the provable fix for the paper's under-specified
-    Property 1 labeling on mesh C-groups (see DESIGN.md Deviations).
+    Autonet-style: rank routers by BFS (depth, id) from the lowest-id alive
+    router; a channel u->w is *up* iff rank(w) < rank(u).  Legal paths take
+    all up hops before any down hop, which makes the channel dependency
+    graph acyclic for ANY (sub)graph — so rebuilding the tables on a
+    degraded W-group preserves deadlock freedom by construction.
 
-    Returns (rank [NW], nh [NW, NW, 2]) where nh[u, v, phase] is the next
-    wg-local router towards v (phase 1 = a down hop was already taken).
+    Returns (rank [NW], nh [NW, NW, 2]); dead routers keep the trailing
+    ranks and -1 next-hops (they are never a source, hop, or target).
     """
-    meta = net.meta
-    ab, npc, R = meta["ab"], meta["nodes_per_cg"], meta["R"]
-    NW = ab * npc
-    t = net.tables
-    nbrs = [[] for _ in range(NW)]
-    for u in range(NW):
-        cg, loc = divmod(u, npc)
-        x, y = loc % R, loc // R
-        for dx, dy in ((0, -1), (1, 0), (0, 1), (-1, 0)):
-            nx, ny = x + dx, y + dy
-            if 0 <= nx < R and 0 <= ny < R:
-                nbrs[u].append((cg * npc + ny * R + nx, 1))
-    lp, pnl = t["local_port"], t["port_node_local"]
-    for c1 in range(ab):
-        for c2 in range(ab):
-            if c1 == c2:
-                continue
-            u = int(c1 * npc + pnl[lp[c1, c2]])
-            w = int(c2 * npc + pnl[lp[c2, c1]])
-            nbrs[u].append((w, local_weight))
-    # BFS rank from router 0
     depth = np.full(NW, -1)
-    depth[0] = 0
-    q = [0]
+    root = int(np.flatnonzero(alive)[0])
+    depth[root] = 0
+    q = [root]
     while q:
         u = q.pop(0)
         for w, _ in nbrs[u]:
             if depth[w] < 0:
                 depth[w] = depth[u] + 1
                 q.append(w)
-    assert (depth >= 0).all(), "W-group graph must be connected"
-    rank = np.argsort(np.argsort(depth * NW + np.arange(NW)))
+    assert (depth[alive] >= 0).all(), \
+        "surviving W-group graph must be connected"
+    # alive routers ordered by (depth, id); dead routers pushed to the end
+    key = np.where(alive, depth, NW) * NW + np.arange(NW)
+    rank = np.argsort(np.argsort(key))
 
     INF = 10**9
     f1 = np.full((NW, NW), INF, dtype=np.int64)   # down-phase distance
@@ -239,18 +282,51 @@ def build_updown_tables(net: Network, local_weight: int = 4):
                 upd = cand < f0[u]
                 f0[u][upd] = cand[upd]
                 nh0[u][upd] = w
-    assert (f0[~np.eye(NW, dtype=bool)] < INF).all(), "up*/down* must connect"
+    live = np.ix_(alive, alive)
+    assert (f0[live][~np.eye(int(alive.sum()), dtype=bool)] < INF).all(), \
+        "up*/down* must connect all alive routers"
     nh = np.stack([nh0, nh1], axis=-1)
     return rank.astype(np.int32), nh
+
+
+def build_updown_tables(net: Network, faults: FaultSet | None = None):
+    """Per-W-group all-pairs up*/down* next-hop tables.
+
+    Pristine W-groups share one table (computed once, tiled); W-groups
+    touched by `faults` get their tables recomputed on the surviving
+    subgraph, which is how the up*/down* modes route around dead mesh
+    channels, dead local links, and dead routers.
+
+    Returns (rank [g, NW], nh [g, NW, NW, 2]) where nh[wg, u, v, phase] is
+    the next wg-local router towards v (phase 1 = a down hop was already
+    taken).
+    """
+    meta = net.meta
+    ab, npc = meta["ab"], meta["nodes_per_cg"]
+    g = meta["g"]
+    NW = ab * npc
+    faults = faults or FaultSet()
+    # W-groups the fault set touches, straight from its members (dead
+    # routers, dead mesh/local channels); only those need a rebuild
+    touched = {int(r) // NW for r in faults.dead_routers}
+    touched |= {int(net.ch_src[c]) // NW for c in faults.dead_ch
+                if net.ch_type[c] in (MESH, LOCAL)}
+    pristine_adj, _ = wgroup_adjacency(net, wgs=[0])
+    base = _updown_single(NW, pristine_adj[0], np.ones(NW, dtype=bool))
+    rank = np.repeat(base[0][None], g, axis=0)
+    nh = np.repeat(base[1][None], g, axis=0)
+    if touched:
+        adj, alive = wgroup_adjacency(net, faults, wgs=touched)
+        for wg in sorted(touched):
+            rank[wg], nh[wg] = _updown_single(NW, adj[wg], alive[wg])
+    return rank, nh
 
 
 def _make_switchless_updown(net: Network, vc_mode: str):
     """W-group-wide up*/down* routing: 2 VCs minimal / 3 non-minimal
     ("updown"), or 2 VCs with misroutes restricted to W-groups below the
-    destination ("updown_merged")."""
-    rank_np, nh_np = build_updown_tables(net)
-    rank = jnp.asarray(rank_np)
-    nh = jnp.asarray(nh_np)
+    destination ("updown_merged").  The per-W-group rank/next-hop tables
+    come from `fl` (rebuilt on the surviving subgraph when faulted)."""
     t = net.tables
     node_wg = jnp.asarray(t["node_wg"])
     node_mesh_ch = jnp.asarray(t["node_mesh_ch"])
@@ -259,7 +335,6 @@ def _make_switchless_updown(net: Network, vc_mode: str):
     local_port = jnp.asarray(t["local_port"])
     glob_route_cg = jnp.asarray(t["glob_route_cg"])
     glob_route_port = jnp.asarray(t["glob_route_port"])
-    glob_npar = jnp.asarray(t["glob_npar"])
     port_node_local = jnp.asarray(t["port_node_local"])
     term_node = jnp.asarray(t["term_node"])
     ch_type = jnp.asarray(net.ch_type)
@@ -270,7 +345,8 @@ def _make_switchless_updown(net: Network, vc_mode: str):
     merged = vc_mode == "updown_merged"
     PHASE = 1 << 6
 
-    def route_vc(cur, dest_term, mis_wg, meta):
+    def route_vc(fl, cur, dest_term, mis_wg, meta):
+        rank, nh = fl["ud_rank"], fl["ud_nh"]
         dest_node = term_node[dest_term]
         wg_c = node_wg[cur]
         wg_d = node_wg[dest_node]
@@ -279,7 +355,8 @@ def _make_switchless_updown(net: Network, vc_mode: str):
         in_final = (wg_c == wg_d) & (~mis_active)
         u = cur % NW
 
-        par = dest_term % glob_npar[wg_c, tgt_wg]
+        par = fl["glob_idx"][wg_c, tgt_wg,
+                             dest_term % fl["glob_cnt"][wg_c, tgt_wg]]
         cg_gl = glob_route_cg[wg_c, tgt_wg, par]
         port_gl = glob_route_port[wg_c, tgt_wg, par]
         v_exit = cg_gl * npc + port_node_local[port_gl]
@@ -289,7 +366,7 @@ def _make_switchless_updown(net: Network, vc_mode: str):
                             ext_out[wg_c * ab + cg_gl, port_gl])
 
         phase = (meta >> 6) & 1
-        w = nh[u, v, phase]
+        w = nh[wg_c, u, v, phase]
         same_cg = (u // npc) == (w // npc)
         ux, uy = (u % npc) % R, (u % npc) // R
         wx, wy = (w % npc) % R, (w % npc) // R
@@ -302,15 +379,15 @@ def _make_switchless_updown(net: Network, vc_mode: str):
         out_ch = jnp.where(arrived, out_arr, out_step)
 
         new_meta = meta_update(meta, ch_type[out_ch])
-        went_down = phase | (rank[w] > rank[u])
-        is_glob = ch_type[out_ch] == 2  # GLOBAL resets the phase
+        went_down = phase | (rank[wg_c, w] > rank[wg_c, u])
+        is_glob = ch_type[out_ch] == GLOBAL  # GLOBAL resets the phase
         new_phase = jnp.where(is_glob, 0,
                               jnp.where(arrived, phase, went_down))
         new_meta = (new_meta & ~PHASE) | (new_phase.astype(jnp.int32) << 6)
 
         g = meta_g_count(new_meta)
         req_vc = jnp.minimum(g, 1) if merged else jnp.minimum(g, 2)
-        is_ej = ch_type[out_ch] == 4
+        is_ej = ch_type[out_ch] == EJECT
         req_vc = jnp.where(is_ej, 0, req_vc)
         return out_ch, req_vc.astype(jnp.int32), new_meta
 
@@ -319,7 +396,7 @@ def _make_switchless_updown(net: Network, vc_mode: str):
 
 # --- switch-based Dragonfly route function ----------------------------------
 
-def make_dragonfly_route_fn(net: Network, vc_mode: str = "baseline"):
+def _make_dragonfly_kernel(net: Network):
     t = net.tables
     node_grp = jnp.asarray(t["node_grp"])
     node_idx = jnp.asarray(t["node_idx"])
@@ -331,9 +408,7 @@ def make_dragonfly_route_fn(net: Network, vc_mode: str = "baseline"):
     term_slot = jnp.asarray(t["term_slot"])
     ch_type = jnp.asarray(net.ch_type)
 
-    glob_npar = jnp.asarray(t["glob_npar"])
-
-    def route_vc(cur, dest_term, mis_wg, meta):
+    def route_vc(fl, cur, dest_term, mis_wg, meta):
         dest_sw = term_node[dest_term]
         grp_c = node_grp[cur]
         grp_d = node_grp[dest_sw]
@@ -341,7 +416,8 @@ def make_dragonfly_route_fn(net: Network, vc_mode: str = "baseline"):
         tgt_grp = jnp.where(mis_active, mis_wg, grp_d)
 
         at_dest_sw = (cur == dest_sw) & (~mis_active)
-        par = dest_term % glob_npar[grp_c, tgt_grp]
+        par = fl["glob_idx"][grp_c, tgt_grp,
+                             dest_term % fl["glob_cnt"][grp_c, tgt_grp]]
         sw_gl = glob_route_sw[grp_c, tgt_grp, par]
         in_tgt = grp_c == tgt_grp
         peer_sw = jnp.where(in_tgt, dest_sw, sw_gl)
@@ -353,17 +429,23 @@ def make_dragonfly_route_fn(net: Network, vc_mode: str = "baseline"):
                       local_ch[cur, node_idx[peer_sw]]))
         new_meta = meta_update(meta, ch_type[out_ch])
         req_vc = meta_cg_count(new_meta)  # per-hop increment scheme
-        is_ej = ch_type[out_ch] == 4
+        is_ej = ch_type[out_ch] == EJECT
         req_vc = jnp.where(is_ej, 0, req_vc)
         return out_ch, req_vc.astype(jnp.int32), new_meta
 
     return route_vc
 
 
-def make_route_fn(net: Network, vc_mode: str = "baseline"):
-    if net.meta["kind"] == "switchless":
-        return make_switchless_route_fn(net, vc_mode)
-    return make_dragonfly_route_fn(net, vc_mode)
+def make_route_fn(net: Network, vc_mode: str = "baseline",
+                  faults: FaultSet | None = None):
+    """Route closure route(cur, dest_term, mis_wg, meta) over the
+    (possibly degraded) network: the kind-dispatched kernel bound to this
+    network's (possibly faulted) tables.  Minimal, non-minimal, and UGAL
+    modes all route around the faults via the rebuilt tables
+    (`route_tables`)."""
+    kernel = make_route_kernel(net, vc_mode)
+    fl = route_tables(net, vc_mode, faults)
+    return lambda cur, dest, mis, meta: kernel(fl, cur, dest, mis, meta)
 
 
 # --- offline path tracing + channel dependency graph ------------------------
@@ -440,18 +522,28 @@ def build_cdg(chans: np.ndarray, vcs: np.ndarray):
 
 def assert_deadlock_free(net: Network, vc_mode: str, nonminimal: bool,
                          rng: np.random.Generator, n_pairs: int = 4000,
-                         exhaustive_limit: int = 250_000) -> int:
-    """Trace flows and assert the CDG is acyclic.  Returns #edges checked."""
+                         exhaustive_limit: int = 250_000,
+                         faults: FaultSet | None = None) -> int:
+    """Trace flows and assert the CDG is acyclic.  Returns #edges checked.
+
+    With `faults`, flows run between alive terminals on the degraded
+    network; the trace additionally asserts no path crosses a dead channel
+    (re-proving deadlock freedom AND fault avoidance on the survivors).
+    """
     import networkx as nx
-    route_fn = make_route_fn(net, vc_mode)
+    route_fn = make_route_fn(net, vc_mode, faults)
     T = net.num_terminals
-    if T * T <= exhaustive_limit and not nonminimal:
-        s, d = np.divmod(np.arange(T * T), T)
+    terms = (np.arange(T) if faults is None
+             else np.flatnonzero(faults.term_alive(net)))
+    TA = len(terms)
+    if TA * TA <= exhaustive_limit and not nonminimal:
+        si, di = np.divmod(np.arange(TA * TA), TA)
+        s, d = terms[si], terms[di]
         keep = s != d
         s, d = s[keep], d[keep]
     else:
-        s = rng.integers(0, T, size=n_pairs)
-        d = rng.integers(0, T, size=n_pairs)
+        s = terms[rng.integers(0, TA, size=n_pairs)]
+        d = terms[rng.integers(0, TA, size=n_pairs)]
         keep = s != d
         s, d = s[keep], d[keep]
     if nonminimal:
@@ -472,6 +564,14 @@ def assert_deadlock_free(net: Network, vc_mode: str, nonminimal: bool,
     else:
         mis = np.full(len(s), -1, dtype=np.int64)
     chans, vcs, _ = trace_paths(net, route_fn, s, d, mis)
+    if faults is not None:
+        alive = faults.ch_alive(net)
+        used = chans[chans >= 0]
+        if not alive[used].all():
+            bad = np.unique(used[~alive[used]])
+            raise AssertionError(
+                f"faulted routing crossed dead channels {bad[:8]} "
+                f"({net.name}, vc_mode={vc_mode})")
     cdg = build_cdg(chans, vcs)
     if not nx.is_directed_acyclic_graph(cdg):
         cyc = nx.find_cycle(cdg)

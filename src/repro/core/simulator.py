@@ -35,11 +35,10 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import numpy as np
 import jax
 
-from .topology import Network
-from .engine.state import make_state as _engine_make_state
+from .topology import FaultSet, Network
+from .engine.state import build_lane, make_state as _engine_make_state
 from .engine.step import make_step, run_scan
 from .engine.stats import finalize
 from .engine.sweep import (BatchedSweep, SweepResult, offered_to_rate_pkt)
@@ -92,28 +91,38 @@ class Simulator:
     """
 
     def __init__(self, net: Network, cfg: SimConfig, pattern,
-                 inject_mask=None):
+                 inject_mask=None, faults: FaultSet | None = None):
         self.net, self.cfg = net, cfg
         self.terms_per_chip = net.num_terminals / net.num_chips
         self.step, self.consts = make_step(net, cfg, pattern, inject_mask)
         self.NV = self.consts["NV"]
-        n_inj = (int(np.asarray(inject_mask).sum()) if inject_mask is not None
-                 else net.num_terminals)
-        self._inj_frac = n_inj / net.num_terminals
+        self.faults = faults
+        self.lane = build_lane(net, cfg, faults)
         self._batched = BatchedSweep(net, cfg, pattern, inject_mask,
-                                     step=self.step, consts=self.consts)
+                                     step=self.step, consts=self.consts,
+                                     faults=faults, lane=self.lane)
 
-    def run(self, offered_per_chip: float, seed: int | None = None
-            ) -> SimResult:
+    def run(self, offered_per_chip: float, seed: int | None = None,
+            faults: FaultSet | None = None) -> SimResult:
+        """One offered rate, sequentially.  `faults` composes on top of
+        the instance fault set for this run only (same semantics as
+        `sweep_faults` grid entries) — fault data is a traced step
+        argument, so switching fault sets reuses the compiled scan."""
         cfg = self.cfg
         rate_pkt = offered_to_rate_pkt(offered_per_chip, cfg,
                                        self.terms_per_chip)
         state0 = _engine_make_state(self.net, cfg, self.NV)
         cycles = cfg.warmup + cfg.measure
         key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+        if faults is None:
+            lane, chips = self.lane, self._batched._chips(self.faults)
+        else:
+            if self.faults is not None:
+                faults = self.faults.union(faults)
+            lane = build_lane(self.net, cfg, faults)
+            chips = self._batched._chips(faults)
         state = run_scan(self.step, cycles, cfg.warmup,
-                         state0, jax.numpy.float32(rate_pkt), key)
-        chips = self.net.num_chips * self._inj_frac
+                         state0, jax.numpy.float32(rate_pkt), key, lane)
         return finalize(state.stats, cfg, offered_per_chip, chips)
 
     def sweep(self, rates, seeds=None) -> list[SimResult]:
@@ -127,6 +136,13 @@ class Simulator:
     def sweep_grid(self, rates, seeds=None) -> SweepResult:
         """Full (rate x seed) grid of `SimResult`s plus sweep metadata."""
         return self._batched.run(rates, seeds)
+
+    def sweep_faults(self, offered_per_chip: float, fault_grid,
+                     seeds=None) -> SweepResult:
+        """Degraded-throughput grid: one lane per (fault set, seed) at a
+        fixed offered load, all in one compiled batched scan (see
+        `BatchedSweep.run_faults`)."""
+        return self._batched.run_faults(offered_per_chip, fault_grid, seeds)
 
 
 def saturation_throughput(results: list[SimResult]) -> float:

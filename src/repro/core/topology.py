@@ -73,6 +73,377 @@ class Network:
 
 
 # ---------------------------------------------------------------------------
+# Fault injection: degraded wafers
+# ---------------------------------------------------------------------------
+#
+# Wafer-scale integration makes dead routers (known-good-die yield) and dead
+# links (post-bond defects) the norm, not the exception.  A `FaultSet` names
+# the dead channels and routers of one degraded network; the routing layer
+# (`routing.route_tables`) rebuilds its fault-dependent tables on the
+# surviving graph and the engine threads per-lane alive masks through the
+# phase pipeline (see docs/faults.md).  Faults are cold: they exist from
+# cycle 0, there is no mid-run link death.
+
+@dataclass(frozen=True)
+class FaultSet:
+    """Dead channels and dead routers of one degraded network.
+
+    `dead_ch` holds explicitly failed channel ids; `dead_routers` holds
+    failed router node ids.  A dead router implicitly kills every channel
+    incident to it (mesh/local/global in and out, plus the inject/eject
+    links of its terminals) — `ch_alive` folds both in.
+    """
+
+    dead_ch: tuple = ()
+    dead_routers: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "dead_ch",
+                           tuple(sorted(set(int(c) for c in self.dead_ch))))
+        object.__setattr__(
+            self, "dead_routers",
+            tuple(sorted(set(int(r) for r in self.dead_routers))))
+
+    @classmethod
+    def empty(cls) -> "FaultSet":
+        return cls()
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.dead_ch and not self.dead_routers
+
+    def union(self, other: "FaultSet") -> "FaultSet":
+        return FaultSet(self.dead_ch + other.dead_ch,
+                        self.dead_routers + other.dead_routers)
+
+    def node_alive(self, net: Network) -> np.ndarray:
+        """Bool [V]: router survives."""
+        alive = np.ones(net.num_nodes, dtype=bool)
+        if self.dead_routers:
+            alive[list(self.dead_routers)] = False
+        return alive
+
+    def ch_alive(self, net: Network) -> np.ndarray:
+        """Bool [E]: channel survives (explicit death + incident router
+        death; a terminal's inject channel dies with its router because its
+        `ch_dst` is the router, its eject because its `ch_src` is)."""
+        alive = np.ones(net.num_channels, dtype=bool)
+        if self.dead_ch:
+            alive[list(self.dead_ch)] = False
+        if self.dead_routers:
+            dr = np.asarray(self.dead_routers)
+            alive &= ~np.isin(net.ch_src, dr)
+            alive &= ~np.isin(net.ch_dst, dr)
+        return alive
+
+    def term_alive(self, net: Network) -> np.ndarray:
+        """Bool [T]: terminal can inject AND eject (its router, injection
+        channel, and ejection channel all survive).  A terminal with a
+        dead eject channel must count as dead in both directions —
+        otherwise it stays a legal destination whose packets can never
+        drain and head-of-line-block the router."""
+        ch_alive = self.ch_alive(net)
+        return (self.node_alive(net)[net.term_node]
+                & ch_alive[net.inject_ch]
+                & ch_alive[term_eject_channel(net)])
+
+    def frac_links_failed(self, net: Network) -> float:
+        """Fraction of fabric links (mesh/local/global) that are dead."""
+        fabric = net.ch_type <= GLOBAL
+        return float((~self.ch_alive(net))[fabric].sum() / fabric.sum())
+
+
+def term_eject_channel(net: Network) -> np.ndarray:
+    """int [T]: ejection channel id of each terminal (both builders wire
+    eject channel of terminal t with ch_dst == V + t).  Cached on
+    `net.tables` — it depends only on the network."""
+    cached = net.tables.get("_term_eject")
+    if cached is None:
+        te = np.full(net.num_terminals, -1, dtype=np.int64)
+        ejs = np.where(net.ch_type == EJECT)[0]
+        te[net.ch_dst[ejs] - net.num_nodes] = ejs
+        assert (te >= 0).all()
+        cached = net.tables["_term_eject"] = te
+    return cached
+
+
+def reverse_fabric_channel(net: Network) -> np.ndarray:
+    """int [E]: id of the opposite-direction mesh/local channel (-1 for
+    global/inject/eject or unpaired).  A physical wafer defect kills the
+    whole link bundle, i.e. both directions — samplers and validation use
+    this pairing to keep mesh/local faults symmetric.  Cached on
+    `net.tables` (the greedy samplers validate per candidate)."""
+    cached = net.tables.get("_rev_fabric")
+    if cached is not None:
+        return cached
+    rev = np.full(net.num_channels, -1, dtype=np.int64)
+    pair = {}
+    for e in np.where((net.ch_type == MESH) | (net.ch_type == LOCAL))[0]:
+        pair[(net.ch_src[e], net.ch_dst[e], net.ch_type[e])] = e
+    for (s, d, ty), e in pair.items():
+        r = pair.get((d, s, ty), -1)
+        rev[e] = r
+    net.tables["_rev_fabric"] = rev
+    return rev
+
+
+def _wired_global_links(net: Network) -> np.ndarray:
+    """int [g, g, npar] outgoing global channel id per (wg, peer, parallel
+    index), -1 where unwired.  Works for both network kinds; cached on
+    `net.tables`."""
+    cached = net.tables.get("_wired_glob")
+    if cached is not None:
+        return cached
+    t = net.tables
+    g = net.meta["g"]
+    if net.meta["kind"] == "switchless":
+        ab = net.meta["ab"]
+        cg = t["glob_route_cg"]                      # [g, g, npar]
+        port = t["glob_route_port"]
+        npar = cg.shape[-1]
+        out = np.full((g, g, npar), -1, dtype=np.int64)
+        for w in range(g):
+            for u in range(g):
+                if u == w:
+                    continue
+                for r in range(npar):
+                    if cg[w, u, r] < 0:
+                        continue
+                    ch = t["ext_out"][w * ab + cg[w, u, r], port[w, u, r]]
+                    out[w, u, r] = ch
+    else:
+        out = t["glob_out_ch"].copy()
+    net.tables["_wired_glob"] = out
+    return out
+
+
+def validate_faults(net: Network, faults: FaultSet,
+                    vc_mode: str = "updown",
+                    check_wgs=None) -> dict:
+    """Raise ValueError if `faults` leaves the network unroutable.
+
+    Invariants checked:
+      * at least one alive terminal;
+      * every wired W-group pair keeps >= 1 alive outgoing global link
+        (minimal routes re-pick among the surviving parallel links);
+      * mesh/local faults are direction-symmetric (a physical defect kills
+        the whole link bundle; one-directional death could leave the
+        W-group weakly but not strongly connected, which up*/down* cannot
+        route);
+      * the surviving (mesh + local) graph of every W-group is connected
+        over its alive routers (up*/down* tables are rebuilt on it);
+      * `vc_mode="baseline"` (deterministic XY + fixed local ports) only
+        tolerates GLOBAL-link faults — mesh/local/router faults need the
+        up*/down* modes, switch-based Dragonfly networks tolerate GLOBAL
+        faults only.
+
+    `check_wgs` restricts the (Python-BFS) W-group connectivity check to
+    the given W-group ids — the greedy samplers pass just the W-group a
+    candidate touches, which keeps sampling linear instead of quadratic
+    in the fault count.  `None` checks every W-group.
+
+    Returns a small summary dict (counts) on success.
+    """
+    ch_alive = faults.ch_alive(net)
+    term_alive = faults.term_alive(net)
+    if not term_alive.any():
+        raise ValueError("faults kill every terminal")
+    dead = ~ch_alive
+    rev = reverse_fabric_channel(net)
+    paired = rev >= 0
+    asym = paired & (dead != dead[np.maximum(rev, 0)])
+    if asym.any():
+        raise ValueError(
+            f"mesh/local faults must kill both directions of a link "
+            f"(channels {np.flatnonzero(asym)[:6]} died one-way)")
+    kind = net.meta["kind"]
+    nonglobal_dead = (dead & (net.ch_type != GLOBAL)).any() \
+        or bool(faults.dead_routers)
+    if kind == "dragonfly" and nonglobal_dead:
+        raise ValueError(
+            "switch-based Dragonfly fault model supports GLOBAL-link "
+            "faults only (local links have no alternative path)")
+    if kind == "switchless" and vc_mode == "baseline" and nonglobal_dead:
+        raise ValueError(
+            "vc_mode='baseline' routes deterministically inside W-groups "
+            "and only tolerates GLOBAL-link faults; use the up*/down* "
+            "modes for mesh/local/router faults")
+    # every wired W-group pair keeps an alive outgoing global link
+    g = net.meta["g"]
+    if g > 1:
+        wired = _wired_global_links(net)
+        alive_cnt = ((wired >= 0) & ch_alive[np.maximum(wired, 0)]).sum(-1)
+        wired_cnt = (wired >= 0).sum(-1)
+        bad = (wired_cnt > 0) & (alive_cnt == 0)
+        if bad.any():
+            w, u = np.argwhere(bad)[0]
+            raise ValueError(
+                f"faults kill every global link W-group {w} -> {u}")
+    # surviving W-group graphs stay connected over alive routers
+    if kind == "switchless":
+        for wg, comp in _wgroup_components(net, faults,
+                                           wgs=check_wgs).items():
+            if comp > 1:
+                raise ValueError(
+                    f"faults disconnect the surviving graph of W-group "
+                    f"{wg} ({comp} components)")
+    return dict(dead_channels=int(dead.sum()),
+                dead_routers=len(faults.dead_routers),
+                alive_terminals=int(term_alive.sum()))
+
+
+def wgroup_adjacency(net: Network, faults: FaultSet | None = None,
+                     wgs=None):
+    """Per-W-group alive adjacency over wg-local router ids.
+
+    Returns (adj, alive) where adj[wg] maps u -> list of (v, weight) over
+    surviving mesh/local channels and alive[wg] is the bool router-alive
+    mask, both in wg-local ids (u = node % (ab * nodes_per_cg)).  With
+    `wgs`, only those W-groups get adjacency lists (the rest stay empty)
+    — the incremental-validation fast path."""
+    assert net.meta["kind"] == "switchless"
+    faults = faults or FaultSet()
+    ab, npc = net.meta["ab"], net.meta["nodes_per_cg"]
+    NW = ab * npc
+    g = net.meta["g"]
+    ch_alive = faults.ch_alive(net)
+    node_alive = faults.node_alive(net)
+    intra = (net.ch_type == MESH) | (net.ch_type == LOCAL)
+    keep = intra & ch_alive
+    if wgs is not None:
+        keep &= np.isin(net.ch_src // NW, np.asarray(list(wgs)))
+    eids = np.where(keep)[0]
+    src, dst = net.ch_src[eids], net.ch_dst[eids]
+    wgt = np.where(net.ch_type[eids] == MESH, 1, 4)
+    adj = [[[] for _ in range(NW)] for _ in range(g)]
+    for s, d, w in zip(src, dst, wgt):
+        if node_alive[s] and node_alive[d]:
+            adj[s // NW][s % NW].append((d % NW, int(w)))
+    alive = node_alive.reshape(g, NW)
+    return adj, alive
+
+
+def _wgroup_components(net: Network, faults: FaultSet,
+                       wgs=None) -> dict:
+    """Connected-component count of the surviving graph, per W-group
+    (all of them, or just `wgs`)."""
+    wg_list = list(range(net.meta["g"])) if wgs is None else sorted(wgs)
+    adj, alive = wgroup_adjacency(net, faults, wgs=wg_list)
+    out = {}
+    for wg in wg_list:
+        al = alive[wg]
+        seen = ~al.copy()
+        comps = 0
+        for root in np.where(al)[0]:
+            if seen[root]:
+                continue
+            comps += 1
+            stack = [root]
+            seen[root] = True
+            while stack:
+                u = stack.pop()
+                for v, _ in adj[wg][u]:
+                    if not seen[v]:
+                        seen[v] = True
+                        stack.append(v)
+        out[wg] = comps
+    return out
+
+
+def _greedy_valid(net: Network, candidates, vc_mode: str,
+                  routers: bool = False,
+                  base: FaultSet | None = None) -> FaultSet:
+    """Accumulate faults one candidate at a time on top of `base`,
+    skipping any that would break `validate_faults` — degraded networks
+    stay routable by construction.  A non-router candidate may be a
+    channel id or a tuple of channel ids that die together (both
+    directions of a link).
+
+    Each step validates incrementally: the per-W-group connectivity BFS
+    only covers the W-group(s) the candidate touches (the vectorized
+    global/terminal/symmetry checks always run), so sampling stays
+    ~linear in the fault count instead of quadratic."""
+    cur = base or FaultSet()
+    if base is not None and not base.is_empty:
+        validate_faults(net, base, vc_mode)   # base checked in full once
+    switchless = net.meta["kind"] == "switchless"
+    NW = (net.meta["ab"] * net.meta["nodes_per_cg"]) if switchless else 1
+    for c in candidates:
+        if routers:
+            trial = FaultSet(cur.dead_ch, cur.dead_routers + (int(c),))
+            touched = {int(c) // NW} if switchless else None
+        else:
+            chs = tuple(int(x) for x in np.atleast_1d(c) if int(x) >= 0)
+            trial = FaultSet(cur.dead_ch + chs, cur.dead_routers)
+            touched = {int(net.ch_src[ch]) // NW for ch in chs
+                       if net.ch_type[ch] in (MESH, LOCAL)} \
+                if switchless else None
+        try:
+            validate_faults(net, trial, vc_mode, check_wgs=touched)
+        except ValueError:
+            continue
+        cur = trial
+    return cur
+
+
+def sample_link_faults(net: Network, frac: float,
+                       rng: np.random.Generator,
+                       types=(MESH, LOCAL, GLOBAL),
+                       vc_mode: str = "updown",
+                       base: FaultSet | None = None) -> FaultSet:
+    """Kill ~`frac` of the fabric links of the given types, uniformly at
+    random, skipping kills that would disconnect the surviving network.
+
+    Mesh/local links die as whole bundles (both directions at once, see
+    `reverse_fabric_channel`); global links die per direction.  `base`
+    composes on top of existing faults (the result includes them and
+    stays valid as a whole)."""
+    rev = reverse_fabric_channel(net)
+    cand = np.where(np.isin(net.ch_type, np.asarray(types))
+                    & ((rev < 0) | (np.arange(net.num_channels) < rev)))[0]
+    n = int(round(frac * len(cand)))
+    if n == 0:
+        return base or FaultSet()
+    picks = rng.choice(cand, size=min(n, len(cand)), replace=False)
+    return _greedy_valid(net, [(c, rev[c]) for c in picks], vc_mode,
+                         base=base)
+
+
+def sample_router_faults(net: Network, num: int,
+                         rng: np.random.Generator,
+                         vc_mode: str = "updown",
+                         base: FaultSet | None = None) -> FaultSet:
+    """Kill up to `num` whole routers (known-good-die yield loss), skipping
+    kills that would disconnect the surviving network."""
+    picks = rng.choice(net.num_nodes, size=min(num, net.num_nodes),
+                      replace=False)
+    return _greedy_valid(net, picks, vc_mode, routers=True, base=base)
+
+
+def sample_cluster_faults(net: Network, rng: np.random.Generator,
+                          num_clusters: int = 1, radius: int = 1,
+                          vc_mode: str = "updown",
+                          base: FaultSet | None = None) -> FaultSet:
+    """Clustered defect regions: kill the routers within Chebyshev
+    `radius` of a random centre router of a random C-group (defects on a
+    wafer are spatially correlated, not iid)."""
+    assert net.meta["kind"] == "switchless"
+    R = net.meta["R"]
+    npc = net.meta["nodes_per_cg"]
+    num_cg = net.meta["num_cgroups"]
+    picks = []
+    for _ in range(num_clusters):
+        cgg = int(rng.integers(0, num_cg))
+        cx, cy = int(rng.integers(0, R)), int(rng.integers(0, R))
+        for y in range(max(0, cy - radius), min(R, cy + radius + 1)):
+            for x in range(max(0, cx - radius), min(R, cx + radius + 1)):
+                picks.append(cgg * npc + y * R + x)
+    order = rng.permutation(len(picks))
+    return _greedy_valid(net, [picks[i] for i in order], vc_mode,
+                         routers=True, base=base)
+
+
+# ---------------------------------------------------------------------------
 # Switch-less Dragonfly on wafers
 # ---------------------------------------------------------------------------
 

@@ -9,8 +9,8 @@ from repro.core import topology as T
 from repro.core import traffic as TR
 from repro.core import engine
 from repro.core.engine import (BatchedSweep, Requests, SimState, SimStats,
-                               make_state, make_step)
-from repro.core.engine.sweep import run_scan_batched
+                               build_lane, make_state, make_step)
+from repro.core.engine import sweep as sweep_mod
 from repro.core.routing import make_route_fn
 from repro.core.simulator import SimConfig, Simulator
 
@@ -64,16 +64,18 @@ def test_route_fn_batch_pure(cgroup_net):
 
 def test_step_grants_at_most_one_winner_per_channel(cgroup_net):
     cfg = SimConfig(warmup=10, measure=10, vcs_per_class=2)
-    consts, route_fn = engine.build_consts(cgroup_net, cfg)
+    consts, route_kernel = engine.build_consts(cgroup_net, cfg)
     inject = engine.make_inject_fn(cgroup_net, cfg, consts, TR.uniform(cgroup_net))
-    arbitrate = engine.make_arbitrate_fn(cgroup_net, cfg, consts, route_fn)
+    arbitrate = engine.make_arbitrate_fn(cgroup_net, cfg, consts,
+                                         route_kernel)
+    fl = build_lane(cgroup_net, cfg)
     state = make_state(cgroup_net, cfg, consts["NV"])
     key = jax.random.PRNGKey(0)
     apply_moves = engine.make_apply_fn(cgroup_net, cfg, consts)
     for t in range(8):
         key, sub = jax.random.split(key)
-        state = inject(state, t, sub, jnp.float32(0.9))
-        req, win, won_ch = arbitrate(state, t)
+        state = inject(state, t, sub, jnp.float32(0.9), fl)
+        req, win, won_ch = arbitrate(state, t, fl)
         assert isinstance(req, Requests)
         # one winner per output channel
         outs = np.asarray(req.out)[np.asarray(win)]
@@ -90,21 +92,25 @@ def test_step_grants_at_most_one_winner_per_channel(cgroup_net):
 
 def test_batched_sweep_matches_sequential(cgroup_net):
     """Acceptance: >= 6 rates x 2 seeds, throughput/latency within 2% of
-    per-rate sequential Simulator.run, ONE jit compile for the whole sweep."""
-    cfg = SimConfig(warmup=100, measure=400, vcs_per_class=2)
+    per-rate sequential Simulator.run, ONE jit compile for the whole sweep.
+
+    The compile count comes from the module-level trace counter
+    (`sweep.compile_counter`), not the private jit `_cache_size` API, so
+    it cannot silently degrade to 0 on JAX versions without that API.
+    The cycle count (101 + 397) is unique in the suite, so this call can
+    never be a cache hit from an earlier test even without `clear_cache`.
+    """
+    cfg = SimConfig(warmup=101, measure=397, vcs_per_class=2)
     sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
     rates = [0.2, 0.5, 0.9, 1.4, 2.0, 2.6]
     seeds = (0, 1)
-    # the jit-cache introspection is a private JAX API; sweep.py degrades
-    # gracefully without it, and so does this assertion
-    has_cache_api = hasattr(run_scan_batched, "clear_cache") and \
-        hasattr(run_scan_batched, "_cache_size")
-    if has_cache_api:
-        run_scan_batched.clear_cache()
+    before = sweep_mod.compile_counter()
     grid = sim.sweep_grid(rates, seeds)
-    if has_cache_api:
-        assert grid.compile_count == 1
-        assert run_scan_batched._cache_size() == 1
+    assert grid.compile_count == 1
+    assert sweep_mod.compile_counter() - before == 1
+    # a second identical sweep is a cache hit: zero new compiles
+    grid2 = sim.sweep_grid(rates, seeds)
+    assert grid2.compile_count == 0
     for i, r in enumerate(rates):
         for j, s in enumerate(seeds):
             seq = sim.run(r, seed=s)
@@ -122,6 +128,68 @@ def test_sweep_rejects_overdriven_rate(cgroup_net):
     sweep = BatchedSweep(cgroup_net, cfg, TR.uniform(cgroup_net))
     with pytest.raises(ValueError):
         sweep.run([100.0])
+
+
+@pytest.fixture(scope="module")
+def multi_wg_net():
+    return T.build_switchless(
+        T.SwitchlessParams(a=2, b=2, m=2, n=4, noc=2, g=5), "engine-multiwg")
+
+
+def test_ugal_watch_pads_with_sentinel(multi_wg_net):
+    """Unused sensor slots are -1 (masked), never channel id 0."""
+    cfg = SimConfig(route_mode="ugal")
+    watch = np.asarray(engine.build_ugal_watch(multi_wg_net, cfg))
+    g = multi_wg_net.meta["g"]
+    for w in range(g):
+        for u in range(g):
+            sens = watch[w, u]
+            if w == u:
+                assert (sens == -1).all()
+                continue
+            # the first slot is the watched global link itself
+            assert sens[0] >= 0
+            assert multi_wg_net.ch_type[sens[0]] == T.GLOBAL
+            # once a slot is empty, the rest are empty too — and empty
+            # means the -1 sentinel, not channel 0
+            n = int((sens >= 0).sum())
+            assert (sens[n:] == -1).all()
+
+
+def test_ugal_congested_channel_zero_does_not_flip_nonmin(multi_wg_net):
+    """Regression: the old 0-padded sensor table added channel 0's buffered
+    occupancy to every entry with fewer than 5 feeders, so congestion on
+    channel 0 could flip `take_nonmin` for flows that never touch it."""
+    net = multi_wg_net
+    cfg = SimConfig(route_mode="ugal", vcs_per_class=1)
+    consts, _ = engine.build_consts(net, cfg)
+    gen_mis = engine.make_misroute_fn(net, cfg, consts)
+    fl = build_lane(net, cfg)
+    g = net.meta["g"]
+    T_ = net.num_terminals
+    # craft an adversarial sensor table: the minimal-path entry towards
+    # W-group `wd` has 4 empty (sentinel) slots, every other entry has 5
+    # real but EMPTY sensor channels.  With 0-padding, congestion on
+    # channel 0 inflates q_min by 4 x occ(0) while q_non stays 0, flipping
+    # the comparison; with the sentinel fix both stay 0.
+    wd = g - 1
+    empty = net.first_eject - 1      # a channel no crafted sensor watches
+    crafted = np.full((g, g, 5), empty, dtype=np.int64)
+    crafted[:, wd, 1:] = -1
+    fl = dict(fl, ugal_watch=jnp.asarray(crafted))
+    # every source sends to terminal 0 of W-group wd
+    tpw = net.meta["terms_per_wg"]
+    dest = jnp.full((T_,), wd * tpw, dtype=jnp.int32)
+    key = jax.random.PRNGKey(3)
+    quiet = jnp.zeros((net.num_channels, consts["NV"]), jnp.int32)
+    congested = quiet.at[0, :].set(cfg.buf_pkts)
+    mis_quiet = np.asarray(gen_mis(key, dest, quiet, fl))
+    mis_hot = np.asarray(gen_mis(key, dest, congested, fl))
+    src_wg = np.asarray(consts["term_wg"])
+    differ = src_wg != wd
+    # all-empty sensors -> minimal everywhere, congested channel 0 or not
+    assert (mis_quiet[differ] == -1).all()
+    np.testing.assert_array_equal(mis_hot, mis_quiet)
 
 
 def test_simulator_sweep_facade(cgroup_net):

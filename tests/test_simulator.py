@@ -25,7 +25,7 @@ def wgroup_nets():
 
 
 def test_conservation_and_low_load_delivery(cgroup_net):
-    cfg = SimConfig(warmup=300, measure=1200, vcs_per_class=2)
+    cfg = SimConfig(warmup=300, measure=800, vcs_per_class=2)
     sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
     r = sim.run(0.4)
     assert r.dropped_pkts == 0
@@ -37,7 +37,7 @@ def test_conservation_and_low_load_delivery(cgroup_net):
 
 def test_zero_load_latency_matches_hops(cgroup_net):
     """Latency at near-zero load ~= avg hop count x per-hop latency."""
-    cfg = SimConfig(warmup=300, measure=2000, vcs_per_class=2)
+    cfg = SimConfig(warmup=300, measure=1200, vcs_per_class=2)
     sim = Simulator(cgroup_net, cfg, TR.uniform(cgroup_net))
     r = sim.run(0.05)
     h = r.avg_hops_by_type
@@ -86,7 +86,7 @@ def test_switch_based_injection_cap(wgroup_nets):
 def test_switchless_wgroup_beats_switch_based(wgroup_nets):
     """Fig. 10(c): intra-W-group uniform saturation 1.2-2x switch-based."""
     swl, swb = wgroup_nets
-    cfg = SimConfig(warmup=500, measure=2000, vcs_per_class=2)
+    cfg = SimConfig(warmup=400, measure=1200, vcs_per_class=2)
     sat_l = saturation_throughput(
         Simulator(swl, cfg, TR.uniform(swl)).sweep([1.2, 1.6]))
     sat_b = saturation_throughput(
@@ -106,6 +106,7 @@ def test_ring_allreduce_bidirectional_gain(cgroup_net):
     assert sat_u > 1.8  # paper: ~2 flits/cycle/chip
 
 
+@pytest.mark.slow
 def test_nonminimal_routing_helps_worst_case():
     """Fig. 13: VAL routing beats minimal by a wide margin under the
     worst-case pattern on the full radix-16 network (one global link per
@@ -121,6 +122,7 @@ def test_nonminimal_routing_helps_worst_case():
     assert thr_val > 3.0 * thr_min
 
 
+@pytest.mark.slow
 def test_ugal_adaptive_best_of_both():
     """Beyond-paper: UGAL-G keeps minimal-level uniform throughput while
     recovering most of VAL's worst-case gain (min/VAL per Fig. 13)."""
@@ -138,6 +140,7 @@ def test_ugal_adaptive_best_of_both():
     assert res["ugal", "uni"] > 0.9 * res["min", "uni"]
 
 
+@pytest.mark.slow
 def test_hotspot_inject_mask():
     net = T.build_switchless(T.paper_radix16_switchless(g=8), "hot-net")
     pat, is_hot = TR.hotspot(net, num_hot=4, seed=0)
