@@ -3,28 +3,25 @@ vs. the fraction of failed fabric links.
 
 Wafer-scale integration makes dead links/routers the norm (known-good-die
 yield, post-bond defects), so the interesting number is not peak throughput
-but how gracefully the switch-less fabric degrades.  This benchmark samples
-one random link-failure `FaultSet` per (failure-rate, seed) lane, rebuilds
-fault-aware routing per lane, and runs the WHOLE failure-rate x seed grid
-as ONE compiled batched scan (`BatchedSweep.run_faults` stacks the per-lane
-fault tables and vmaps the shared step over them) — `compiles == 1` in the
-output is the proof.
+but how gracefully the switch-less fabric degrades.  The grid is the
+registered `bench_faults` scenario (repro.exp): one independently sampled
+link-failure `FaultSpec` population per failure rate, one lane per
+(failure rate, seed) with per-lane fault-aware routing tables, the WHOLE
+grid lowered to ONE compiled batched scan (`BatchedSweep.run_lanes` stacks
+the per-lane fault tables and vmaps the shared step over them) —
+`compiles == 1` in the output is the proof.
 
 Writes `BENCH_faults.json` (repo root) with the per-rate seed-averaged
 curve; `monotone_within_tol` checks that accepted throughput never
 *increases* materially as more links fail.
 
-    PYTHONPATH=src python benchmarks/bench_faults.py
+    python -m benchmarks.bench_faults           (repo root, pip install -e .)
+    PYTHONPATH=src python -m benchmarks.bench_faults       (no install)
 """
 from __future__ import annotations
 
 import json
 import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import numpy as np
 
 DEFAULT_FRACS = (0.0, 0.04, 0.08, 0.12, 0.16)
 DEFAULT_SEEDS = (0, 1)
@@ -36,31 +33,24 @@ MONOTONE_TOL = 0.03   # allowed non-monotone wiggle (flits/cycle/chip)
 
 def bench(fracs=DEFAULT_FRACS, seeds=DEFAULT_SEEDS,
           offered=DEFAULT_OFFERED, warmup=300, measure=1500) -> dict:
-    from repro.core import topology as T
-    from repro.core import traffic as TR
-    from repro.core.simulator import SimConfig, Simulator
+    from repro.exp import registry as SC
+    from repro.exp.runner import run_experiment
 
-    net = T.build_switchless(
-        T.SwitchlessParams(a=2, b=2, m=2, n=4, noc=2, g=5), "bench-faults")
-    cfg = SimConfig(warmup=warmup, measure=measure, vc_mode="updown",
-                    route_mode="min", vcs_per_class=2)
+    spec = SC.bench_faults_spec(fracs=fracs, seeds=seeds, offered=offered,
+                                warmup=warmup, measure=measure)
+    res = run_experiment(spec)
+    [grid] = res.grids
     fracs, seeds = list(fracs), list(seeds)
-    # one independently sampled fault set per (failure rate, seed) lane
-    fault_grid = [
-        [T.sample_link_faults(net, f, np.random.default_rng(1000 * i + s))
-         for s in seeds]
-        for i, f in enumerate(fracs)]
-    sim = Simulator(net, cfg, TR.uniform(net))
-    grid = sim.sweep_faults(offered, fault_grid, seeds=seeds)
 
-    rows = grid.mean_over_seeds()
-    thr = [r.throughput_per_chip for r in rows]
-    lat = [r.avg_latency for r in rows]
+    rows = res.rows()
+    thr = [r["throughput"] for r in rows]
+    lat = [r["latency"] for r in rows]
     monotone = all(thr[i + 1] <= thr[i] + MONOTONE_TOL
                    for i in range(len(thr) - 1))
     return dict(
         net="switchless a=2 b=2 m=2 n=4 g=5 (updown, minimal)",
-        channels=net.num_channels,
+        scenario=spec.name,
+        channels=grid.topology.build().num_channels,
         offered_per_chip=offered,
         requested_fracs=fracs,
         achieved_fracs=grid.fault_fracs,
@@ -69,14 +59,14 @@ def bench(fracs=DEFAULT_FRACS, seeds=DEFAULT_SEEDS,
         cycles_per_lane=warmup + measure,
         throughput_per_chip=thr,
         avg_latency=lat,
-        per_seed_throughput=[[grid.result(i, j).throughput_per_chip
+        per_seed_throughput=[[grid.result(i, 0, j).throughput_per_chip
                               for j in range(len(seeds))]
                              for i in range(len(fracs))],
-        delivered_pkts=[[grid.result(i, j).delivered_pkts
+        delivered_pkts=[[grid.result(i, 0, j).delivered_pkts
                          for j in range(len(seeds))]
                         for i in range(len(fracs))],
         compiles=grid.compile_count,
-        wall_s=grid.wall_s,
+        wall_s=res.wall_s,
         monotone_within_tol=monotone,
         monotone_tol=MONOTONE_TOL,
     )

@@ -1,12 +1,15 @@
 """Load-latency sweep benchmark: seed baseline vs. the batch-parallel engine.
 
-Times the same (rate x seed) sweep three ways on a small switch-less config:
+Times the same (rate x seed) sweep three ways on a small switch-less config
+(the registered `bench_sweep` scenario — every configuration here comes
+from its `ExperimentSpec`, see repro.exp):
 
   seed        the frozen PR-0 monolithic simulator (`seed_reference.py`),
               one jitted `lax.scan` per lane — what the paper-figure grid
               cost before this engine existed
   sequential  the modular engine, still one scan per lane (`Simulator.run`)
-  batched     all lanes vmapped into ONE jitted scan (`BatchedSweep`)
+  batched     all lanes lowered through `run_experiment` into ONE jitted
+              scan (`BatchedSweep.run_lanes`)
 
 and writes `BENCH_sweep.json` (repo root).  The headline `speedup` is
 batched vs. the seed baseline — the wall-clock the refactor actually bought
@@ -16,17 +19,14 @@ the batching itself.  `max_throughput_deviation` checks that the batched
 lanes reproduce per-rate sequential runs (they are bit-identical by
 construction).
 
-    PYTHONPATH=src python benchmarks/bench_sweep.py
+    python -m benchmarks.bench_sweep            (repo root, pip install -e .)
+    PYTHONPATH=src python -m benchmarks.bench_sweep        (no install)
 """
 from __future__ import annotations
 
 import json
 import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 DEFAULT_RATES = (0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4, 1.6)
 DEFAULT_SEEDS = (0, 1, 2)
@@ -34,34 +34,35 @@ DEFAULT_SEEDS = (0, 1, 2)
 
 def bench(rates=DEFAULT_RATES, seeds=DEFAULT_SEEDS,
           warmup=100, measure=500) -> dict:
-    from repro.core import topology as T
-    from repro.core import traffic as TR
-    from repro.core.simulator import SimConfig, Simulator
+    from repro.core.simulator import Simulator
+    from repro.exp import registry as SC
+    from repro.exp.runner import cells, run_experiment
     from benchmarks.seed_reference import SeedSimulator
 
-    net = T.build_switchless(
-        T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1), "bench-sweep")
-    cfg = SimConfig(warmup=warmup, measure=measure, vcs_per_class=2)
-    pattern = TR.uniform(net)
-    rates, seeds = list(rates), list(seeds)
+    spec = SC.bench_sweep_spec(rates=rates, seeds=seeds,
+                               warmup=warmup, measure=measure)
+    [cell] = list(cells(spec))   # one (topology, routing, traffic) grid
+    rates, seeds = list(spec.axes.rates), list(spec.axes.seeds)
     lanes = len(rates) * len(seeds)
     cycles_total = (warmup + measure) * lanes
 
-    # --- batched: whole sweep in one jitted scan ----------------------
-    sim = Simulator(net, cfg, pattern)
-    grid = sim.sweep_grid(rates, seeds)           # compile + run
-    compile_wall = grid.wall_s
-    grid = sim.sweep_grid(rates, seeds)           # steady-state timing
-    t_batched = grid.wall_s
+    # --- batched: the declarative lowering, whole sweep in one scan ---
+    res = run_experiment(spec)                    # compile + run
+    compile_wall = res.wall_s
+    first_compiles = res.max_compiles_per_grid
+    res = run_experiment(spec)                    # steady-state timing
+    t_batched = res.wall_s
+    grid = res.grids[0]
 
     # --- engine sequential: one scan per lane -------------------------
+    sim = Simulator(cell.net, cell.cfg, cell.pattern)
     sim.run(rates[0], seed=seeds[0])              # compile
     t0 = time.perf_counter()
     seq = {(r, s): sim.run(r, seed=s) for r in rates for s in seeds}
     t_seq = time.perf_counter() - t0
 
     # --- seed baseline: the pre-engine monolithic simulator -----------
-    seed_sim = SeedSimulator(net, cfg, pattern)
+    seed_sim = SeedSimulator(cell.net, cell.cfg, cell.pattern)
     seed_sim.run(rates[0])                        # compile
     t0 = time.perf_counter()
     for r in rates:
@@ -71,13 +72,14 @@ def bench(rates=DEFAULT_RATES, seeds=DEFAULT_SEEDS,
 
     max_dev = max(
         abs(seq[r, s].throughput_per_chip
-            - grid.result(i, j).throughput_per_chip)
+            - grid.result(0, i, j).throughput_per_chip)
         / max(seq[r, s].throughput_per_chip, 1e-9)
         for i, r in enumerate(rates) for j, s in enumerate(seeds))
 
     return dict(
         net="switchless a=1 b=1 m=2 n=6 (one C-group)",
-        channels=net.num_channels,
+        scenario=spec.name,
+        channels=cell.net.num_channels,
         rates=rates, seeds=seeds, lanes=lanes,
         cycles_per_lane=warmup + measure,
         seed_sequential_wall_s=t_seed,
@@ -88,6 +90,7 @@ def bench(rates=DEFAULT_RATES, seeds=DEFAULT_SEEDS,
         speedup_vs_engine_sequential=t_seq / t_batched,
         batched_cycles_per_s=cycles_total / t_batched,
         seed_cycles_per_s=cycles_total / t_seed,
+        first_call_compiles=first_compiles,         # 1: one compile per grid
         batched_compiles=grid.compile_count,        # 0: cache-hit on 2nd call
         max_throughput_deviation=max_dev,
     )

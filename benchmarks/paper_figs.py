@@ -2,67 +2,47 @@
 simulator.  Each function returns a list of result dicts; `benchmarks.run`
 prints them as CSV.
 
+Every figure is a registered scenario of the declarative experiment API
+(`repro.exp.registry`): the functions here fetch (or rebuild, for
+`fast=False` paper scale) the `ExperimentSpec`, lower it through
+`run_experiment` — one batched-engine compile per (topology, routing,
+traffic) grid — and reshape the seed-averaged records into the historical
+CSV row schema.  No hand-wired `Simulator` grid loops remain.
+
 Scales are reduced where noted (cycle counts / W-group counts) to fit the
 single-CPU-core container; the claims checked are the paper's qualitative
 and quantitative saturation ratios.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import topology as T
-from repro.core import traffic as TR
-from repro.core.simulator import SimConfig, Simulator
+from repro.exp import registry as SC
+from repro.exp.runner import run_experiment
 
 
-def _sweep(net, pattern, rates, cfg, inject_mask=None):
-    """Load-latency curve; all rates run as ONE batched jitted scan.
+def _run(spec):
+    return run_experiment(spec).rows()
 
-    The reported per-row wall_s is the whole-sweep wall-clock (including
-    the one-time jit compile) amortized over the rates: per-rate timings
-    don't exist in the batched path."""
-    sim = Simulator(net, cfg, pattern, inject_mask=inject_mask)
-    grid = sim.sweep_grid(rates)
-    dt = grid.wall_s / max(len(rates), 1)
-    return [(res, dt) for res in grid.mean_over_seeds()]
+
+def _figrows(fig, spec, **extra_keys):
+    """Lower `spec` and map its records to the CSV row schema."""
+    rows = []
+    for rec in _run(spec):
+        row = dict(fig=fig, topo=rec["topology"], pattern=rec["pattern"],
+                   offered=rec["offered"], throughput=rec["throughput"],
+                   latency=rec["latency"], wall_s=rec["wall_s"])
+        for k, src in extra_keys.items():
+            row[k] = rec[src]
+        rows.append(row)
+    return rows
 
 
 def fig10_local(fast=True):
     """Fig. 10(a-b): intra-C-group; (c-f): intra-W-group throughput."""
-    cyc = dict(warmup=400, measure=1200) if fast else \
-        dict(warmup=2000, measure=8000)
-    rows = []
-    # (a) intra-C-group, uniform + bit-reverse
-    p = T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1)
-    net = T.build_switchless(p, "cgroup")
-    cfg = SimConfig(vcs_per_class=4, **cyc)
-    for pname, pat in [("uniform", TR.uniform(net)),
-                       ("bit_reverse", TR.bit_reverse(net))]:
-        for res, dt in _sweep(net, pat, [1.0, 2.0, 3.0, 3.6], cfg):
-            rows.append(dict(
-                fig="10a", topo="switchless-cgroup", pattern=pname,
-                offered=res.offered_per_chip,
-                throughput=res.throughput_per_chip,
-                latency=res.avg_latency, wall_s=dt))
-    # (c-f) intra-W-group: switchless (1B/2B) vs switch-based
-    nets = [("switchless-1B", T.build_switchless(
-        T.SwitchlessParams(a=2, b=4, m=2, n=6, noc=2, g=1), "wg")),
-        ("switchless-2B", T.build_switchless(
-            T.SwitchlessParams(a=2, b=4, m=2, n=6, noc=2, g=1,
-                               cg_bw_mult=2), "wg2")),
-        ("switch-based", T.build_switch_dragonfly(
-            T.SwitchDragonflyParams(t=4, l=7, gl=1, g=1), "wgd"))]
-    cfg = SimConfig(vcs_per_class=2, **cyc)
-    for tname, net in nets:
-        for pname, pat in [("uniform", TR.uniform(net)),
-                           ("bit_transpose", TR.bit_transpose(net))]:
-            for res, dt in _sweep(net, pat, [0.5, 1.0, 1.5, 2.0], cfg):
-                rows.append(dict(
-                    fig="10cf", topo=tname, pattern=pname,
-                    offered=res.offered_per_chip,
-                    throughput=res.throughput_per_chip,
-                    latency=res.avg_latency, wall_s=dt))
-    return rows
+    return (_figrows("10a", SC.get_scenario("fig10a") if fast
+                     else SC.fig10a_spec(fast=False))
+            + _figrows("10cf", SC.get_scenario("fig10cf") if fast
+                       else SC.fig10cf_spec(fast=False)))
 
 
 def fig11_global(fast=True, g=None):
@@ -70,111 +50,45 @@ def fig11_global(fast=True, g=None):
 
     Full scale is g=41 (1312 chips); fast mode uses g=11 (352 chips),
     which preserves the 1B-vs-2B and switchless-vs-switch ordering."""
-    cyc = dict(warmup=300, measure=900) if fast else \
-        dict(warmup=2000, measure=8000)
-    g = g or (11 if fast else None)
-    rows = []
-    nets = [
-        ("switchless-1B", T.build_switchless(
-            T.paper_radix16_switchless(g=g), "g1B")),
-        ("switchless-2B", T.build_switchless(
-            T.paper_radix16_switchless(g=g, cg_bw_mult=2), "g2B")),
-        ("switch-based", T.build_switch_dragonfly(
-            T.paper_radix16_dragonfly(g=g), "gdf")),
-    ]
-    cfg = SimConfig(vcs_per_class=2, **cyc)
-    for tname, net in nets:
-        for pname, mk in [("uniform", TR.uniform),
-                          ("bit_reverse", TR.bit_reverse)]:
-            for res, dt in _sweep(net, mk(net), [0.4, 0.7, 1.0], cfg):
-                rows.append(dict(
-                    fig="11", topo=tname, pattern=pname,
-                    offered=res.offered_per_chip,
-                    throughput=res.throughput_per_chip,
-                    latency=res.avg_latency, wall_s=dt))
-    return rows
+    spec = (SC.get_scenario("fig11") if fast and g is None
+            else SC.fig11_spec(fast=fast, g=g))
+    return _figrows("11", spec)
 
 
 def fig12_scalability(fast=True):
     """Fig. 12: radix-32-class network (reduced W-group count on CPU)."""
-    g = 5 if fast else 29
-    cyc = dict(warmup=250, measure=600) if fast else \
-        dict(warmup=1000, measure=4000)
-    rows = []
-    nets = [
-        ("switchless-1B", T.build_switchless(
-            T.paper_radix32_switchless(g=g), "r32")),
-        ("switchless-2B", T.build_switchless(
-            T.paper_radix32_switchless(g=g, cg_bw_mult=2), "r32b")),
-        ("switch-based", T.build_switch_dragonfly(
-            T.paper_radix32_dragonfly(g=g), "r32d")),
-    ]
-    cfg = SimConfig(vcs_per_class=2, **cyc)
-    for tname, net in nets:
-        for res, dt in _sweep(net, TR.uniform(net), [0.4, 0.8], cfg):
-            rows.append(dict(
-                fig="12", topo=tname, pattern="uniform",
-                offered=res.offered_per_chip,
-                throughput=res.throughput_per_chip,
-                latency=res.avg_latency, wall_s=dt))
-    return rows
+    return _figrows("12", SC.get_scenario("fig12") if fast
+                    else SC.fig12_spec(fast=False))
 
 
 def fig13_misrouting(fast=True):
     """Fig. 13: minimal vs non-minimal (VAL / UGAL) on hotspot + WC."""
-    cyc = dict(warmup=300, measure=800) if fast else \
-        dict(warmup=2000, measure=8000)
-    net = T.build_switchless(T.paper_radix16_switchless(), "mis16")
+    spec = SC.get_scenario("fig13") if fast else SC.fig13_spec(fast=False)
     rows = []
-    wc = TR.worst_case(net)
-    hot, mask = TR.hotspot(net, num_hot=4, seed=0)
-    for mode in ("min", "val", "ugal"):
-        cfg = SimConfig(route_mode=mode, vcs_per_class=2, **cyc)
-        for res, dt in _sweep(net, wc, [0.2, 0.5], cfg):
-            rows.append(dict(fig="13", pattern="worst_case", mode=mode,
-                             offered=res.offered_per_chip,
-                             throughput=res.throughput_per_chip,
-                             latency=res.avg_latency, wall_s=dt))
-        for res, dt in _sweep(net, hot, [0.2, 0.5], cfg,
-                              inject_mask=mask):
-            rows.append(dict(fig="13", pattern="hotspot", mode=mode,
-                             offered=res.offered_per_chip,
-                             throughput=res.throughput_per_chip,
-                             latency=res.avg_latency, wall_s=dt))
+    for rec in _run(spec):
+        # historical schema: bare pattern name, mode column
+        rows.append(dict(fig="13", pattern=rec["pattern_name"],
+                         mode=rec["route_mode"],
+                         offered=rec["offered"],
+                         throughput=rec["throughput"],
+                         latency=rec["latency"], wall_s=rec["wall_s"]))
     return rows
 
 
 def fig14_allreduce(fast=True):
     """Fig. 14: ring AllReduce within C-group and W-group."""
-    cyc = dict(warmup=400, measure=1200) if fast else \
-        dict(warmup=2000, measure=8000)
+    specs = ((SC.get_scenario(n) for n in
+              ("fig14_cgroup_switchless", "fig14_cgroup_switch",
+               "fig14_wgroup")) if fast else SC.fig14_specs(fast=False))
     rows = []
-    cases = [
-        ("cgroup-switchless", T.build_switchless(
-            T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1), "arc"), 4),
-        ("cgroup-switch", T.build_switch_dragonfly(
-            T.SwitchDragonflyParams(t=4, l=0, gl=0, g=1), "ars"), 2),
-        ("wgroup-switchless", T.build_switchless(
-            T.SwitchlessParams(a=2, b=4, m=2, n=6, noc=2, g=1), "arw"), 2),
-        ("wgroup-switchless-2B", T.build_switchless(
-            T.SwitchlessParams(a=2, b=4, m=2, n=6, noc=2, g=1,
-                               cg_bw_mult=2), "arw2"), 2),
-        ("wgroup-switch", T.build_switch_dragonfly(
-            T.SwitchDragonflyParams(t=4, l=7, gl=1, g=1), "arwd"), 2),
-    ]
-    for tname, net, vpc in cases:
-        cfg = SimConfig(vcs_per_class=vpc, **cyc)
-        for bi in (False, True):
-            pat = TR.ring_allreduce(net, bidirectional=bi)
-            rates = [1.0, 2.0, 3.0, 3.8] if "cgroup" in tname \
-                else [0.6, 1.0, 1.6, 2.2]
-            for res, dt in _sweep(net, pat, rates, cfg):
-                rows.append(dict(
-                    fig="14", topo=tname,
-                    pattern="bi-ring" if bi else "uni-ring",
-                    offered=res.offered_per_chip,
-                    throughput=res.throughput_per_chip,
-                    latency=res.avg_latency, wall_s=dt))
+    for spec in specs:
+        for rec in _run(spec):
+            bi = rec["pattern_params"].get("bidirectional", False)
+            rows.append(dict(
+                fig="14", topo=rec["topology"],
+                pattern="bi-ring" if bi else "uni-ring",
+                offered=rec["offered"], throughput=rec["throughput"],
+                latency=rec["latency"], wall_s=rec["wall_s"]))
     return rows
 
 
@@ -182,31 +96,22 @@ def fig15_energy(fast=True):
     """Fig. 15: average energy per transmission from simulated hop counts
     (Table II constants)."""
     from repro.core import analytical as A
-    cyc = dict(warmup=300, measure=800) if fast else \
-        dict(warmup=1000, measure=4000)
+    spec = SC.get_scenario("fig15") if fast else SC.fig15_spec(fast=False)
+    mesh, local, glob, inj, ej = T.CH_TYPE_NAMES
     rows = []
-    for mode in ("min", "val"):
-        for tname, net, term_onchip in [
-            ("switchless", T.build_switchless(
-                T.paper_radix16_switchless(g=9), "e16"), True),
-            ("switch-based", T.build_switch_dragonfly(
-                T.paper_radix16_dragonfly(g=9), "e16d"), False),
-        ]:
-            cfg = SimConfig(route_mode=mode, vcs_per_class=2, **cyc)
-            sim = Simulator(net, cfg, TR.uniform(net))
-            res = sim.run(0.3)
-            h = res.avg_hops_by_type
-            mesh, local, glob, inj, ej = T.CH_TYPE_NAMES
-            hops = {name: h[name] for name in (mesh, local, glob)}
-            if term_onchip:
-                hops["term_onchip"] = h[inj] + h[ej]
-            else:
-                hops["term_cable"] = h[inj] + h[ej]
-            e = A.energy_per_packet_pj_per_bit(hops)
-            rows.append(dict(fig="15", topo=tname, mode=mode,
-                             energy_pj_per_bit=e,
-                             avg_hops=sum(h.values()),
-                             latency=res.avg_latency))
+    for rec in _run(spec):
+        h = rec["avg_hops_by_type"]
+        hops = {name: h[name] for name in (mesh, local, glob)}
+        # switch-less terminals reach their router on-chip; the baseline's
+        # terminal-to-switch hop is a cable
+        key = ("term_onchip" if rec["topo_kind"] == "switchless"
+               else "term_cable")
+        hops[key] = h[inj] + h[ej]
+        e = A.energy_per_packet_pj_per_bit(hops)
+        rows.append(dict(fig="15", topo=rec["topology"],
+                         mode=rec["route_mode"], energy_pj_per_bit=e,
+                         avg_hops=sum(h.values()),
+                         latency=rec["latency"]))
     return rows
 
 

@@ -19,13 +19,10 @@ from __future__ import annotations
 import glob
 import json
 import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from repro.configs.base import shape_by_name  # noqa: E402
-from repro.configs.registry import get_config  # noqa: E402
-from repro.core.cost_model import (HBM_BW, ICI_BW_PER_LINK,  # noqa: E402
+from repro.configs.base import shape_by_name
+from repro.configs.registry import get_config
+from repro.core.cost_model import (HBM_BW, ICI_BW_PER_LINK,
                                    PEAK_FLOPS_BF16, switchless_wafer_fabric)
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",

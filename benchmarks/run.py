@@ -1,13 +1,16 @@
 """Benchmark harness: one function per paper table/figure + kernel
 microbenchmarks + the dry-run roofline.  Prints ``name,us_per_call,
-derived`` CSV rows."""
+derived`` CSV rows.
+
+    python -m benchmarks.run                 (repo root, pip install -e .)
+    PYTHONPATH=src python -m benchmarks.run              (no install)
+"""
 from __future__ import annotations
 
 import os
 import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import traceback
 
 
 def _emit(name, us, derived):
@@ -22,7 +25,9 @@ def bench_paper_figs(fast=True):
         t0 = time.perf_counter()
         try:
             rows = fn(fast) if fn is not PF.table3_case_study else fn()
-        except Exception as e:  # keep the harness going
+        except Exception as e:  # keep the harness going, but say WHERE
+            print(f"--- {fn.__name__} failed ---", file=sys.stderr)
+            traceback.print_exc(file=sys.stderr)
             _emit(fn.__name__, 0.0, f"ERROR:{e!r}")
             continue
         dt = (time.perf_counter() - t0) * 1e6

@@ -1,20 +1,17 @@
 """Quickstart: build the paper's switch-less Dragonfly, check the
-analytical model, run a small simulation, and price a training step on the
-wafer fabric.
+analytical model, run a small simulation through the declarative
+experiment API, and price a training step on the wafer fabric.
 
-    PYTHONPATH=src python examples/quickstart.py
+Run from the repo root (after `pip install -e .`, or with the
+single fallback `PYTHONPATH=src` when not installed):
+
+    python -m examples.quickstart
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-
 from repro.core import analytical as A
 from repro.core import topology as T
-from repro.core import traffic as TR
 from repro.core.cost_model import roofline, switchless_wafer_fabric
-from repro.core.simulator import SimConfig, Simulator
+from repro.exp import (ExperimentSpec, RoutingSpec, SweepAxes,
+                       TopologySpec, TrafficSpec, run_experiment)
 
 
 def main():
@@ -24,16 +21,24 @@ def main():
     for k, v in A.summarize(params).items():
         print(f"  {k:10s} = {v}")
 
-    net = T.build_switchless(T.SwitchlessParams(a=1, b=1, m=2, n=6,
-                                                noc=2, g=1), "cgroup")
+    # 2. a declarative experiment: one C-group under uniform traffic.
+    # The spec is plain data (hashable, JSON round-trippable); the runner
+    # lowers the whole load-latency curve to ONE batched jitted scan.
+    spec = ExperimentSpec(
+        name="quickstart",
+        topologies=TopologySpec.switchless(a=1, b=1, m=2, n=6, noc=2, g=1,
+                                           label="cgroup"),
+        traffics=TrafficSpec("uniform"),
+        routings=RoutingSpec(vcs_per_class=4),
+        axes=SweepAxes(rates=(1.0, 2.0, 3.0), warmup=300, measure=900))
+    net = spec.topologies[0].build()
     print(f"\n== intra-C-group simulation ({net.num_nodes} routers) ==")
-    sim = Simulator(net, SimConfig(warmup=300, measure=900,
-                                   vcs_per_class=4), TR.uniform(net))
-    # the whole load-latency curve runs as ONE batched jitted scan
-    for r in sim.sweep([1.0, 2.0, 3.0]):
-        print(f"  offered {r.offered_per_chip:.1f} flits/cyc/chip -> accepted "
-              f"{r.throughput_per_chip:.2f}, latency {r.avg_latency:.1f} cyc")
-    print("  (paper Fig. 10(a): saturation ~3.0)")
+    result = run_experiment(spec)
+    for rec in result.rows():
+        print(f"  offered {rec['offered']:.1f} flits/cyc/chip -> accepted "
+              f"{rec['throughput']:.2f}, latency {rec['latency']:.1f} cyc")
+    print(f"  (paper Fig. 10(a): saturation ~3.0; "
+          f"compiles={result.compile_counts})")
 
     # 3. price a minicpm-2b training step on the wafer fabric
     from benchmarks.roofline import analytic_cell

@@ -1,14 +1,12 @@
 """Batched serving driver: prefill + greedy decode with KV/state caches
 over batched requests (the serve_step the decode dry-run cells lower).
 
-    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+Run from the repo root (after `pip install -e .`, or `PYTHONPATH=src`):
+
+    python -m examples.serve_lm --arch recurrentgemma-2b
 """
 import argparse
-import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,9 @@
 for a few hundred steps on the synthetic pipeline with checkpointing and
 fault tolerance enabled.
 
-    PYTHONPATH=src python examples/train_lm.py --steps 300
+Run from the repo root (after `pip install -e .`, or `PYTHONPATH=src`):
+
+    python -m examples.train_lm --steps 300
 
 On CPU this uses a width/depth-reduced config (~100M params at full vocab)
 and a host mesh; on a real pod the same driver takes --arch minicpm-2b
@@ -10,10 +12,6 @@ with the production mesh.
 """
 import argparse
 import dataclasses
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.checkpoint.checkpointing import Checkpointer
 from repro.configs.registry import get_config

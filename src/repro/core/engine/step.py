@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..topology import Network
+from ..traffic import as_pattern
 from .apply import make_apply_fn
 from .arbitrate import make_arbitrate_fn
 from .inject import make_inject_fn
@@ -28,7 +29,12 @@ from .stats import accumulate, zero_stats
 
 def make_step(net: Network, cfg, pattern, inject_mask=None):
     """Returns (step, consts);
-    step(state, (t, key, rate_pkt, fl)) -> (state, None)."""
+    step(state, (t, key, rate_pkt, fl)) -> (state, None).
+
+    `pattern` may be a bare sampler or a normalized `TrafficPattern`
+    pair; a pattern-borne inject mask (e.g. hotspot's hot-source mask)
+    composes with the explicit `inject_mask` argument."""
+    pattern, inject_mask = as_pattern(pattern, inject_mask)
     consts, route_kernel = build_consts(net, cfg)
     inject = make_inject_fn(net, cfg, consts, pattern, inject_mask)
     arbitrate = make_arbitrate_fn(net, cfg, consts, route_kernel)

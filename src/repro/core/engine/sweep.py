@@ -18,6 +18,13 @@ tables, `state.build_lane`) is an explicit step argument, lanes may carry
 DIFFERENT fault sets — `run_faults` stacks one lane per (fault set, seed)
 and runs a whole failure-rate x seed grid of degraded networks in the same
 single compile (see benchmarks/bench_faults.py).
+
+`run_lanes` is the fully general axis: every lane is an independent
+(offered rate, seed, fault set) triple, so rate sweeps, seed replication,
+and fault grids are all the same one-compile dispatch.  `run` and
+`run_faults` are reshaping conveniences over it, and the declarative
+experiment runner (`repro.exp.runner`) lowers every `ExperimentSpec` grid
+to exactly one `run_lanes` call.
 """
 from __future__ import annotations
 
@@ -29,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from ..topology import FaultSet, Network
+from ..traffic import as_pattern
 from .state import build_lane, make_state, stack_lanes
 from .stats import finalize, zero_stats
 from .step import make_step
@@ -154,16 +162,17 @@ class BatchedSweep:
                  step=None, consts=None, faults: FaultSet | None = None,
                  lane=None):
         self.net, self.cfg = net, cfg
+        pattern = as_pattern(pattern, inject_mask)
         if step is None:
-            step, consts = make_step(net, cfg, pattern, inject_mask)
+            step, consts = make_step(net, cfg, pattern)
         self.step, self.consts = step, consts
         self.NV = consts["NV"]
         self.faults = faults
         self.lane0 = build_lane(net, cfg, faults) if lane is None else lane
         self.terms_per_chip = net.num_terminals / net.num_chips
         self._inj_mask = (np.ones(net.num_terminals, dtype=bool)
-                          if inject_mask is None
-                          else np.asarray(inject_mask).astype(bool))
+                          if pattern.inject_mask is None
+                          else np.asarray(pattern.inject_mask).astype(bool))
 
     def _rate_pkt(self, offered_per_chip: float) -> float:
         return offered_to_rate_pkt(offered_per_chip, self.cfg,
@@ -215,27 +224,72 @@ class BatchedSweep:
         wall = time.perf_counter() - t0
         return stats, wall, compile_counter() - compiles0
 
+    def run_lanes(self, lanes):
+        """The fully general lane axis: one compiled batched scan over an
+        arbitrary list of `(offered_per_chip, seed, FaultSet | None)` lane
+        triples.
+
+        Each lane's fault set COMPOSES on top of the sweep's base `faults`
+        (`None` means "just the base faults").  When every composed lane
+        ends up with the same fault set the shared-lane fast path is used
+        (the fault pytree broadcasts instead of stacking), otherwise each
+        distinct fault set builds its lane tables once and the step vmaps
+        over the stacked lane axis — either way ONE `run_scan_batched`
+        dispatch, at most one jit compile.
+
+        Returns `(results, wall_s, compiles, fault_sets)` where `results`
+        is one `SimResult` per lane (in order) and `fault_sets` holds the
+        composed per-lane fault sets (None = pristine).
+        """
+        cfg = self.cfg
+        lanes = list(lanes)
+        if not lanes:
+            raise ValueError("run_lanes needs >= 1 lane")
+        base = self.faults
+        fsets = []
+        for _, _, f in lanes:
+            if f is None:
+                fsets.append(base)
+            elif base is None:
+                fsets.append(f)
+            else:
+                fsets.append(base.union(f))
+        lane_rates = jnp.asarray([self._rate_pkt(r) for r, _, _ in lanes],
+                                 dtype=jnp.float32)
+        lane_keys = jnp.stack(
+            [jax.random.PRNGKey(int(s)) for _, s, _ in lanes])
+        if len(set(fsets)) == 1:
+            lane_data = (self.lane0 if fsets[0] == base
+                         else build_lane(self.net, cfg, fsets[0]))
+            per_lane = False
+        else:
+            # FaultSet is frozen/hashable: build each distinct lane once
+            # even when many lanes share one fault set
+            memo = {}
+            for f in fsets:
+                if f not in memo:
+                    memo[f] = build_lane(self.net, cfg, f)
+            lane_data = stack_lanes([memo[f] for f in fsets])
+            per_lane = True
+        stats, wall, compiles = self._run_lanes(
+            lane_rates, lane_keys, lane_data, per_lane_faults=per_lane)
+        pick = lambda i: jax.tree.map(lambda x: x[i], stats)
+        results = [finalize(pick(i), cfg, lanes[i][0], self._chips(fsets[i]))
+                   for i in range(len(lanes))]
+        return results, wall, compiles, fsets
+
     def run(self, rates, seeds=None) -> SweepResult:
         cfg = self.cfg
         rates = [float(r) for r in rates]
         seeds = [cfg.seed] if seeds is None else [int(s) for s in seeds]
         R, S = len(rates), len(seeds)
-        B = R * S
-        if B == 0:
+        if R * S == 0:
             raise ValueError(
                 f"sweep needs >= 1 rate and >= 1 seed (got {R} rates, "
                 f"{S} seeds)")
-        lane_rates = jnp.asarray(
-            [self._rate_pkt(r) for r in rates for _ in seeds],
-            dtype=jnp.float32)
-        lane_keys = jnp.stack(
-            [jax.random.PRNGKey(s) for _ in rates for s in seeds])
-        stats, wall, compiles = self._run_lanes(
-            lane_rates, lane_keys, self.lane0, per_lane_faults=False)
-        chips = self._chips(self.faults)
-        lane = lambda i: jax.tree.map(lambda x: x[i], stats)
-        results = [[finalize(lane(i * S + j), cfg, rates[i], chips)
-                    for j in range(S)] for i in range(R)]
+        flat, wall, compiles, _ = self.run_lanes(
+            [(r, s, None) for r in rates for s in seeds])
+        results = [[flat[i * S + j] for j in range(S)] for i in range(R)]
         return SweepResult(rates=rates, seeds=seeds, results=results,
                            compile_count=compiles, wall_s=wall)
 
@@ -258,35 +312,18 @@ class BatchedSweep:
         cfg = self.cfg
         seeds = [cfg.seed] if seeds is None else [int(s) for s in seeds]
         S = len(seeds)
-        base = self.faults
-        comp = (lambda f: f) if base is None else \
-            (lambda f: base.union(f))
-        rows = [[comp(f) for f in
-                 (list(fs) if isinstance(fs, (list, tuple)) else [fs] * S)]
+        rows = [list(fs) if isinstance(fs, (list, tuple)) else [fs] * S
                 for fs in fault_grid]
         if not rows or any(len(r) != S for r in rows):
             raise ValueError("fault_grid rows must match the seed count")
         F = len(rows)
-        B = F * S
-        rate = self._rate_pkt(offered_per_chip)
-        lane_rates = jnp.full((B,), rate, dtype=jnp.float32)
-        lane_keys = jnp.stack(
-            [jax.random.PRNGKey(s) for _ in rows for s in seeds])
-        # FaultSet is frozen/hashable: build each distinct lane once even
-        # when a row shares one fault set across every seed lane
-        memo = {}
-        for f in (f for row in rows for f in row):
-            if f not in memo:
-                memo[f] = build_lane(self.net, cfg, f)
-        lanes = stack_lanes([memo[f] for row in rows for f in row])
-        stats, wall, compiles = self._run_lanes(
-            lane_rates, lane_keys, lanes, per_lane_faults=True)
-        lane = lambda i: jax.tree.map(lambda x: x[i], stats)
-        results = [[finalize(lane(i * S + j), cfg, offered_per_chip,
-                             self._chips(rows[i][j]))
-                    for j in range(S)] for i in range(F)]
-        fracs = [float(np.mean([f.frac_links_failed(self.net)
-                                for f in row])) for row in rows]
+        flat, wall, compiles, fsets = self.run_lanes(
+            [(offered_per_chip, seeds[j], rows[i][j])
+             for i in range(F) for j in range(S)])
+        results = [[flat[i * S + j] for j in range(S)] for i in range(F)]
+        fracs = [float(np.mean(
+            [0.0 if f is None else f.frac_links_failed(self.net)
+             for f in fsets[i * S:(i + 1) * S]])) for i in range(F)]
         return SweepResult(rates=[offered_per_chip] * F, seeds=seeds,
                            results=results, compile_count=compiles,
                            wall_s=wall, fault_fracs=fracs)

@@ -11,6 +11,12 @@ The cycle itself is implemented by the modular engine under
 ``sweep`` that now executes the whole load-latency curve as ONE batched
 `lax.scan` via ``engine.sweep.BatchedSweep``.
 
+``Simulator`` is the imperative compatibility facade.  New scenario code
+should describe runs declaratively with ``repro.exp`` (``ExperimentSpec``
+-> ``run_experiment``), which lowers topology x traffic x routing x fault
+grids onto the same engine with one compile per grid; benchmarks and
+examples in this repo construct their runs that way.
+
 Microarchitecture model
   * input-queued routers, virtual cut-through at packet granularity
     (PKT flits move together; a packet is visible downstream after the
@@ -52,7 +58,7 @@ class SimConfig:
     vcs_per_class: int = 2    # physical VCs per deadlock class (HOL relief)
     warmup: int = 2000
     measure: int = 8000
-    vc_mode: str = "baseline"          # "baseline" | "reduced" | "reduced_restricted"
+    vc_mode: str = "baseline"          # "baseline" | "updown" | "updown_merged"
     route_mode: str = "min"            # "min" | "val" | "val_restricted" | "ugal"
     ugal_threshold: int = 3
     seed: int = 0
@@ -92,13 +98,15 @@ class Simulator:
 
     def __init__(self, net: Network, cfg: SimConfig, pattern,
                  inject_mask=None, faults: FaultSet | None = None):
+        from .traffic import as_pattern
         self.net, self.cfg = net, cfg
         self.terms_per_chip = net.num_terminals / net.num_chips
-        self.step, self.consts = make_step(net, cfg, pattern, inject_mask)
+        pattern = as_pattern(pattern, inject_mask)  # mask rides the pattern
+        self.step, self.consts = make_step(net, cfg, pattern)
         self.NV = self.consts["NV"]
         self.faults = faults
         self.lane = build_lane(net, cfg, faults)
-        self._batched = BatchedSweep(net, cfg, pattern, inject_mask,
+        self._batched = BatchedSweep(net, cfg, pattern,
                                      step=self.step, consts=self.consts,
                                      faults=faults, lane=self.lane)
 

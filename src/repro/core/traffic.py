@@ -3,14 +3,63 @@
 A pattern is a closure `sample(key, t) -> dest[T]` giving, for every source
 terminal, the destination terminal it would use for a packet generated this
 cycle.  Permutation patterns ignore the key.
+
+Normalized protocol: every public factory returns a `TrafficPattern`
+`(sample, inject_mask)` pair (this fixed the historical asymmetry where
+`hotspot` returned a bare tuple while everything else returned a bare
+sampler).  `TrafficPattern` is itself callable (it delegates to `sample`),
+so legacy call sites that treat the factory result as the sampler keep
+working; sites that care about masked injection (hotspot confines sources
+to the hot W-groups) unpack the pair or use `as_pattern`.  `PATTERNS` is
+the by-name registry the declarative experiment layer (`repro.exp`)
+resolves `TrafficSpec`s against via `make_pattern`.
 """
 from __future__ import annotations
+
+import inspect
+from typing import Callable, NamedTuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from .topology import Network
+
+
+class TrafficPattern(NamedTuple):
+    """Normalized traffic pattern: per-lane sampler + optional source mask.
+
+    `sample(key, t) -> dest[T]`; `inject_mask` is a bool [T] numpy array of
+    terminals allowed to inject, or None for "all terminals".  The tuple is
+    callable (delegates to `sample`) so it can be passed anywhere a bare
+    sampler was accepted.
+    """
+
+    sample: Callable
+    inject_mask: object = None
+
+    def __call__(self, key, t):
+        return self.sample(key, t)
+
+
+def as_pattern(pattern, inject_mask=None) -> TrafficPattern:
+    """Normalize a sampler / (sample, mask) pair into a `TrafficPattern`.
+
+    An explicit `inject_mask` composes (AND) with the pattern's own mask,
+    so masking a hotspot pattern further restricts the hot sources.
+    Idempotent on already-normalized patterns.
+    """
+    if isinstance(pattern, TrafficPattern):
+        sample, mask = pattern.sample, pattern.inject_mask
+    elif isinstance(pattern, tuple):
+        sample, mask = pattern
+    else:
+        sample, mask = pattern, None
+    if inject_mask is not None:
+        extra = np.asarray(inject_mask).astype(bool)
+        mask = extra if mask is None \
+            else np.asarray(mask).astype(bool) & extra
+    return TrafficPattern(sample, mask)
 
 
 def _bits(n: int) -> int:
@@ -25,7 +74,7 @@ def _guard(dest: np.ndarray, T: int) -> np.ndarray:
     return np.where(dest >= T, src, dest)
 
 
-def uniform(net: Network):
+def uniform(net: Network) -> TrafficPattern:
     T = net.num_terminals
 
     def sample(key, t):
@@ -33,16 +82,16 @@ def uniform(net: Network):
         d = jax.random.randint(key, (T,), 0, T - 1)
         return jnp.where(d >= src, d + 1, d)  # uniform over T-1 others
 
-    return sample
+    return TrafficPattern(sample)
 
 
-def _perm_pattern(dest_np: np.ndarray):
+def _perm_pattern(dest_np: np.ndarray) -> TrafficPattern:
     dest = jnp.asarray(dest_np)
 
     def sample(key, t):
         return dest
 
-    return sample
+    return TrafficPattern(sample)
 
 
 def bit_reverse(net: Network):
@@ -77,16 +126,23 @@ def bit_transpose(net: Network):
 
 
 def _terms_per_group(net: Network) -> int:
-    return net.meta.get("terms_per_wg", net.meta.get("terms_per_grp"))
+    for key in ("terms_per_wg", "terms_per_grp"):
+        if key in net.meta:
+            return net.meta[key]
+    raise KeyError(
+        "group-structured traffic needs net.meta['terms_per_wg'] "
+        "(switchless) or net.meta['terms_per_grp'] (dragonfly); "
+        f"neither is set (meta keys: {sorted(net.meta)})")
 
 
 def _num_groups(net: Network) -> int:
     return net.meta["g"]
 
 
-def hotspot(net: Network, num_hot: int = 4, seed: int = 0):
+def hotspot(net: Network, num_hot: int = 4, seed: int = 0) -> TrafficPattern:
     """Communication confined to `num_hot` of the W-groups (Sec. V-A3b):
-    sources in hot groups send to random terminals of the other hot groups."""
+    sources in hot groups send to random terminals of the other hot groups.
+    The returned pattern carries the hot-source `inject_mask`."""
     g = _num_groups(net)
     tpg = _terms_per_group(net)
     rng = np.random.default_rng(seed)
@@ -106,10 +162,10 @@ def hotspot(net: Network, num_hot: int = 4, seed: int = 0):
         # communications within four of all W-groups").
         return dest
 
-    return sample, np.asarray(is_hot)
+    return TrafficPattern(sample, np.asarray(is_hot))
 
 
-def worst_case(net: Network):
+def worst_case(net: Network) -> TrafficPattern:
     """Adversarial WC: node in W-group i sends to random node of W-group
     i+1 (Sec. V-A3b / Kim et al.)."""
     g = _num_groups(net)
@@ -121,10 +177,10 @@ def worst_case(net: Network):
         off = jax.random.randint(key, (T,), 0, tpg)
         return ((src_wg + 1) % g) * tpg + off
 
-    return sample
+    return TrafficPattern(sample)
 
 
-def ring_allreduce(net: Network, bidirectional: bool = False):
+def ring_allreduce(net: Network, bidirectional: bool = False) -> TrafficPattern:
     """Ring AllReduce traffic (Sec. V-A3c): chip i sends to chip (i+1) mod C
     (uni) or alternates between (i-1) and (i+1) (bi).
 
@@ -166,7 +222,7 @@ def ring_allreduce(net: Network, bidirectional: bool = False):
             coin = jax.random.bernoulli(key, 0.5, (T,))
             return jnp.where(coin, nxt_j, prv_j)
 
-    return sample
+    return TrafficPattern(sample)
 
 
 def batched(sample):
@@ -176,6 +232,8 @@ def batched(sample):
     This is the contract the batch-parallel engine relies on: patterns are
     pure per-lane functions of their key, so a `vmap` over the key axis is
     the whole lift.  Permutation patterns (key-independent) broadcast."""
+    if isinstance(sample, TrafficPattern):
+        sample = sample.sample
     return jax.vmap(sample, in_axes=(0, None))
 
 
@@ -184,10 +242,35 @@ def split_lanes(key, num_lanes: int):
     return jax.random.split(key, num_lanes)
 
 
+# By-name registry: factory(net, **params) -> TrafficPattern.  This is the
+# resolution surface of `repro.exp.TrafficSpec` — register new patterns
+# here and they become addressable from declarative experiment specs.
 PATTERNS = {
     "uniform": uniform,
     "bit_reverse": bit_reverse,
     "bit_shuffle": bit_shuffle,
     "bit_transpose": bit_transpose,
     "worst_case": worst_case,
+    "hotspot": hotspot,
+    "ring_allreduce": ring_allreduce,
 }
+
+
+def validate_pattern_params(name: str, params: dict) -> None:
+    """Raise ValueError for an unknown pattern name or parameters that do
+    not bind to the factory's signature (spec-construction-time check)."""
+    if name not in PATTERNS:
+        raise ValueError(
+            f"unknown traffic pattern {name!r}; registered: "
+            f"{sorted(PATTERNS)}")
+    try:
+        inspect.signature(PATTERNS[name]).bind(None, **params)
+    except TypeError as e:
+        raise ValueError(f"bad params for pattern {name!r}: {e}") from None
+
+
+def make_pattern(net: Network, name: str, **params) -> TrafficPattern:
+    """Resolve a registered pattern by name (normalized protocol: always a
+    `TrafficPattern` pair, mask included)."""
+    validate_pattern_params(name, params)
+    return as_pattern(PATTERNS[name](net, **params))

@@ -1,0 +1,27 @@
+"""Declarative experiment API (see docs/experiments.md).
+
+Specs describe the paper's scenario grids (topology x traffic x routing x
+faults x rates x seeds) as frozen, JSON-round-trippable dataclasses; the
+registry names the paper's Fig. 10-15 grids plus benchmark/smoke grids;
+the runner lowers any spec onto the batch-parallel engine with one compile
+per grid.
+
+    from repro.exp import get_scenario, run_experiment
+    result = run_experiment(get_scenario("fig10a"))
+    for row in result.rows(): ...
+
+CLI: ``python -m repro.exp.run --scenario smoke``.
+"""
+from .spec import (ExperimentSpec, FaultSpec, RoutingSpec, SweepAxes,
+                   TopologySpec, TrafficSpec)
+from .registry import (get_scenario, list_scenarios, register_scenario)
+from .runner import (Cell, ExperimentResult, GridResult, cells,
+                     clear_caches, run_experiment)
+
+__all__ = [
+    "ExperimentSpec", "FaultSpec", "RoutingSpec", "SweepAxes",
+    "TopologySpec", "TrafficSpec",
+    "get_scenario", "list_scenarios", "register_scenario",
+    "Cell", "ExperimentResult", "GridResult", "cells", "clear_caches",
+    "run_experiment",
+]

@@ -1,0 +1,210 @@
+"""Lower an `ExperimentSpec` onto the batch-parallel engine.
+
+`run_experiment(spec)` iterates the outer-product cells
+(topology x routing x traffic) and runs each cell's whole lane grid
+(faults x rates x seeds) as ONE `BatchedSweep.run_lanes` dispatch — at
+most one jit compile per grid, by construction.  Cells that share an
+identical step function (same topology, routing, traffic, and cycle
+budget) reuse one compiled `BatchedSweep` through a process-wide cache,
+so re-running a spec (or running a spec that overlaps an earlier one)
+costs zero new compiles.
+
+`cells(spec)` exposes the same lowering without running anything — the
+hook benchmarks use to build sequential/legacy baselines from the exact
+(net, cfg, pattern) a spec denotes.
+"""
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import numpy as np
+
+from ..core.engine.sweep import BatchedSweep, SweepResult
+from ..core.simulator import SimConfig, SimResult
+from ..core.topology import Network
+from ..core.traffic import TrafficPattern
+from .spec import (ExperimentSpec, FaultSpec, RoutingSpec, SweepAxes,
+                   TopologySpec, TrafficSpec)
+
+# Process-wide compiled-sweep cache: one `BatchedSweep` (hence one engine
+# step closure, hence one jit cache entry) per distinct cell.  Keyed by
+# the specs themselves — they are frozen/hashable, that's the point.
+_SWEEP_CACHE: dict = {}
+# Sampled fault sets, keyed by (topology, fault spec, vc_mode, lane seed):
+# greedy-validated sampling is the slow part, and the same population is
+# reused across every routing/traffic cell that shares a vc_mode.
+_FAULT_CACHE: dict = {}
+
+
+def clear_caches() -> None:
+    """Drop the compiled-sweep, fault-sample, and built-network caches
+    (tests / memory)."""
+    from . import spec as _spec
+    _SWEEP_CACHE.clear()
+    _FAULT_CACHE.clear()
+    _spec._NET_CACHE.clear()
+
+
+class Cell(NamedTuple):
+    """One lowered outer-product cell of an experiment."""
+
+    topology: TopologySpec
+    routing: RoutingSpec
+    traffic: TrafficSpec
+    net: Network
+    cfg: SimConfig
+    pattern: TrafficPattern
+
+
+def cells(spec: ExperimentSpec):
+    """Yield the lowered (net, cfg, pattern) cells of `spec`, in run
+    order (topology-major, then routing, then traffic)."""
+    for topo in spec.topologies:
+        net = topo.build()
+        for routing in spec.routings:
+            cfg = routing.to_simconfig(spec.axes)
+            for traffic in spec.traffics:
+                yield Cell(topo, routing, traffic, net, cfg,
+                           traffic.resolve(net))
+
+
+@dataclass
+class GridResult:
+    """One cell's (faults x rates x seeds) grid of `SimResult`s."""
+
+    topology: TopologySpec
+    routing: RoutingSpec
+    traffic: TrafficSpec
+    rates: list
+    seeds: list
+    fault_labels: list          # [F]
+    fault_fracs: list           # [F] mean failed-link fraction over seeds
+    results: list               # [F][R][S] of SimResult
+    compile_count: int = 0
+    wall_s: float = 0.0
+
+    def result(self, fault_idx: int, rate_idx: int,
+               seed_idx: int = 0) -> SimResult:
+        return self.results[fault_idx][rate_idx][seed_idx]
+
+    def sweep_result(self, fault_idx: int = 0) -> SweepResult:
+        """One fault row as a legacy `SweepResult` (rate x seed grid)."""
+        return SweepResult(rates=list(self.rates), seeds=list(self.seeds),
+                           results=self.results[fault_idx],
+                           compile_count=self.compile_count,
+                           wall_s=self.wall_s)
+
+
+@dataclass
+class ExperimentResult:
+    """All grids of one experiment plus flat, seed-averaged records."""
+
+    spec: ExperimentSpec
+    grids: list = field(default_factory=list)
+
+    @property
+    def wall_s(self) -> float:
+        return sum(g.wall_s for g in self.grids)
+
+    @property
+    def compile_counts(self) -> list:
+        return [g.compile_count for g in self.grids]
+
+    @property
+    def max_compiles_per_grid(self) -> int:
+        return max(self.compile_counts, default=0)
+
+    def rows(self) -> list:
+        """Seed-averaged records, one per (grid, fault, rate) — the flat
+        table benchmarks print and the CLI serializes.  `wall_s` is the
+        grid wall-clock amortized over its rows (per-lane timings don't
+        exist in a batched dispatch)."""
+        out = []
+        for g in self.grids:
+            F, R = len(g.fault_labels), len(g.rates)
+            dt = g.wall_s / max(F * R, 1)
+            for fi in range(F):
+                for ri, res in enumerate(g.sweep_result(fi)
+                                         .mean_over_seeds()):
+                    out.append(dict(
+                        scenario=self.spec.name,
+                        topology=g.topology.label,
+                        topo_kind=g.topology.kind,
+                        pattern=g.traffic.label,
+                        pattern_name=g.traffic.pattern,
+                        pattern_params=dict(g.traffic.params),
+                        route_mode=g.routing.route_mode,
+                        vc_mode=g.routing.vc_mode,
+                        fault=g.fault_labels[fi],
+                        fault_frac=g.fault_fracs[fi],
+                        offered=g.rates[ri],
+                        throughput=res.throughput_per_chip,
+                        latency=res.avg_latency,
+                        delivered_pkts=res.delivered_pkts,
+                        generated_pkts=res.generated_pkts,
+                        dropped_pkts=res.dropped_pkts,
+                        avg_hops_by_type=res.avg_hops_by_type,
+                        compile_count=g.compile_count,
+                        wall_s=dt))
+        return out
+
+
+def _fault_rows(spec: ExperimentSpec, topo: TopologySpec, net: Network,
+                vc_mode: str):
+    """[F][S] composed fault sets (None = pristine), memoized."""
+    rows = []
+    for f in spec.axes.faults:
+        row = []
+        for s in spec.axes.seeds:
+            key = (topo, f, vc_mode, s if f.per_seed else None)
+            if key not in _FAULT_CACHE:
+                _FAULT_CACHE[key] = f.sample(net, vc_mode, s)
+            row.append(_FAULT_CACHE[key])
+        rows.append(row)
+    return rows
+
+
+def run_experiment(spec: ExperimentSpec, verbose: bool = False
+                   ) -> ExperimentResult:
+    """Run every grid of `spec`; each grid is one batched-engine dispatch
+    (compile_count <= 1 per grid, == 0 on shared-compile reuse)."""
+    axes = spec.axes
+    rates, seeds = list(axes.rates), list(axes.seeds)
+    R, S, F = len(rates), len(seeds), len(axes.faults)
+    result = ExperimentResult(spec)
+    for cell in cells(spec):
+        key = (cell.topology, cell.routing, cell.traffic,
+               axes.warmup, axes.measure, seeds[0])
+        sweep = _SWEEP_CACHE.get(key)
+        if sweep is None:
+            sweep = _SWEEP_CACHE[key] = BatchedSweep(
+                cell.net, cell.cfg, cell.pattern)
+        frows = _fault_rows(spec, cell.topology, cell.net,
+                            cell.routing.vc_mode)
+        lanes = [(r, s, frows[fi][si])
+                 for fi in range(F)
+                 for r in rates
+                 for si, s in enumerate(seeds)]
+        if verbose:
+            print(f"[exp:{spec.name}] {cell.topology.label} "
+                  f"{cell.routing.label} {cell.traffic.label}: "
+                  f"{len(lanes)} lanes ...", file=sys.stderr, flush=True)
+        flat, wall, compiles, fsets = sweep.run_lanes(lanes)
+        results = [[[flat[(fi * R + ri) * S + si] for si in range(S)]
+                    for ri in range(R)] for fi in range(F)]
+        fracs = [float(np.mean(
+            [0.0 if f is None else f.frac_links_failed(cell.net)
+             for f in fsets[fi * R * S:(fi * R * S) + S]]))
+            for fi in range(F)]
+        result.grids.append(GridResult(
+            topology=cell.topology, routing=cell.routing,
+            traffic=cell.traffic, rates=rates, seeds=seeds,
+            fault_labels=[f.label for f in axes.faults],
+            fault_fracs=fracs, results=results,
+            compile_count=compiles, wall_s=wall))
+        if verbose:
+            print(f"[exp:{spec.name}]   done in {wall:.1f}s "
+                  f"(compiles={compiles})", file=sys.stderr, flush=True)
+    return result

@@ -1,0 +1,271 @@
+"""Declarative experiment API: construction-time validation, JSON
+round-trips across every registered scenario, and runner parity with the
+legacy imperative `Simulator.sweep` path (lane-for-lane, one compile per
+grid)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.simulator import SimConfig, Simulator
+from repro.exp import (ExperimentSpec, FaultSpec, RoutingSpec, SweepAxes,
+                       TopologySpec, TrafficSpec)
+from repro.exp import registry
+from repro.exp.runner import cells, run_experiment
+
+
+# ---------------------------------------------------------------------------
+# Construction-time validation
+# ---------------------------------------------------------------------------
+
+def _minimal_spec(**kw):
+    base = dict(
+        name="t",
+        topologies=TopologySpec.switchless(a=1, b=1, m=2, n=6, noc=2, g=1),
+        traffics=TrafficSpec("uniform"),
+        routings=RoutingSpec(),
+        axes=SweepAxes(rates=(0.5,), warmup=10, measure=20))
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def test_topology_spec_validates():
+    with pytest.raises(ValueError):
+        TopologySpec("mesh3d")                       # unknown kind
+    with pytest.raises(ValueError):
+        TopologySpec.switchless(a=1)                 # missing fields
+    with pytest.raises(ValueError):
+        TopologySpec.switchless(a=1, b=1, m=2, n=6, noc=2, g=99)  # g range
+    with pytest.raises(ValueError):
+        TopologySpec.preset("radix99_switchless")    # unknown preset
+
+
+def test_topology_spec_canonicalizes_defaults():
+    """Specs naming the same network compare equal whether or not
+    defaults were spelled out."""
+    a = TopologySpec.switchless(a=1, b=1, m=2, n=6, noc=2, g=1, label="x")
+    b = TopologySpec.switchless(a=1, b=1, m=2, n=6, noc=2, g=1,
+                                cg_bw_mult=1, lr_latency=8, label="x")
+    assert a == b and hash(a) == hash(b)
+
+
+def test_traffic_spec_validates():
+    with pytest.raises(ValueError):
+        TrafficSpec("nope")
+    with pytest.raises(ValueError):
+        TrafficSpec("hotspot", params=(("bogus_param", 1),))
+    # param order canonicalizes
+    a = TrafficSpec("hotspot", params=(("seed", 0), ("num_hot", 4)))
+    b = TrafficSpec("hotspot", params=(("num_hot", 4), ("seed", 0)))
+    assert a == b and hash(a) == hash(b)
+
+
+def test_routing_spec_validates():
+    with pytest.raises(ValueError):
+        RoutingSpec(route_mode="teleport")
+    with pytest.raises(ValueError):
+        RoutingSpec(vc_mode="reduced")
+    # updown_merged requires restricted misrouting
+    with pytest.raises(ValueError):
+        RoutingSpec(vc_mode="updown_merged", route_mode="val")
+    RoutingSpec(vc_mode="updown_merged", route_mode="val_restricted")
+    with pytest.raises(ValueError):
+        RoutingSpec(buf_pkts=0)
+
+
+def test_fault_spec_validates():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="gremlins")
+    with pytest.raises(ValueError):
+        FaultSpec(kind="links", frac=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(kind="links", types=("optical",))
+    with pytest.raises(ValueError):
+        FaultSpec(kind="routers", num=-1)
+
+
+def test_sweep_axes_validate():
+    with pytest.raises(ValueError):
+        SweepAxes(rates=())
+    with pytest.raises(ValueError):
+        SweepAxes(rates=(0.5,), seeds=())
+    with pytest.raises(ValueError):
+        SweepAxes(rates=(-0.1,))
+    with pytest.raises(ValueError):
+        SweepAxes(rates=(0.5,), measure=0)
+
+
+def test_cross_axis_validation():
+    # dragonfly baseline cannot take an up*/down* VC scheme
+    with pytest.raises(ValueError):
+        _minimal_spec(topologies=TopologySpec.dragonfly(t=4, l=0, gl=0, g=1),
+                      routings=RoutingSpec(vc_mode="updown"))
+    # mesh/local faults need an up*/down* vc_mode on switchless
+    with pytest.raises(ValueError):
+        _minimal_spec(axes=SweepAxes(
+            rates=(0.5,), faults=(FaultSpec(kind="links", frac=0.05),),
+            warmup=10, measure=20))
+    # GLOBAL-only faults are fine under baseline (need a multi-W-group net)
+    _minimal_spec(
+        topologies=TopologySpec.switchless(a=2, b=2, m=2, n=4, noc=2, g=5),
+        axes=SweepAxes(rates=(0.5,),
+                       faults=(FaultSpec(kind="links", frac=0.05,
+                                         types=("global",)),),
+                       warmup=10, measure=20))
+    # clustered wafer defects only exist on switchless
+    with pytest.raises(ValueError):
+        _minimal_spec(topologies=TopologySpec.dragonfly(t=4, l=0, gl=0, g=1),
+                      axes=SweepAxes(rates=(0.5,),
+                                     faults=(FaultSpec(kind="clusters"),),
+                                     warmup=10, measure=20))
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+def test_every_registered_scenario_round_trips():
+    names = registry.list_scenarios()
+    assert {"fig10a", "fig11", "fig13", "bench_faults",
+            "smoke"} <= set(names)
+    for name in names:
+        spec = registry.get_scenario(name)
+        wire = json.loads(json.dumps(spec.to_dict()))   # via real JSON
+        back = ExperimentSpec.from_dict(wire)
+        assert back == spec, name
+        assert hash(back) == hash(spec), name
+
+
+def test_from_dict_rejects_future_schema():
+    d = registry.get_scenario("smoke").to_dict()
+    d["version"] = 999
+    with pytest.raises(ValueError):
+        ExperimentSpec.from_dict(d)
+
+
+def test_register_scenario_rejects_duplicates():
+    spec = registry.get_scenario("smoke")
+    with pytest.raises(ValueError):
+        registry.register_scenario(spec)
+    registry.register_scenario(spec, replace=True)  # idempotent escape
+
+
+# ---------------------------------------------------------------------------
+# Lowering / runner parity
+# ---------------------------------------------------------------------------
+
+def test_cells_enumerates_outer_product():
+    spec = registry.get_scenario("fig10cf")
+    cs = list(cells(spec))
+    assert len(cs) == spec.num_grids == 6      # 3 topologies x 2 traffics
+    assert cs[0].net.meta["kind"] == "switchless"
+    assert cs[-1].net.meta["kind"] == "dragonfly"
+    # hotspot cells resolve to a masked pattern
+    hot = next(c for c in cells(registry.get_scenario("fig13"))
+               if c.traffic.pattern == "hotspot")
+    assert hot.pattern.inject_mask is not None
+    assert hot.pattern.inject_mask.dtype == bool
+
+
+def test_run_experiment_matches_legacy_sweep_lane_for_lane():
+    """Acceptance: a registered Fig. 10 scenario lowered via
+    `run_experiment` reproduces the legacy `Simulator.sweep` grid
+    lane-for-lane, with exactly ONE compile per (rate x seed) grid."""
+    spec = registry.get_scenario("smoke_fig10a")
+    res = run_experiment(spec)
+    assert [g.compile_count for g in res.grids] == [1, 1]  # one per grid
+    rates, seeds = list(spec.axes.rates), list(spec.axes.seeds)
+    for grid, cell in zip(res.grids, cells(spec)):
+        sim = Simulator(cell.net, cell.cfg, cell.pattern)
+        legacy = sim.sweep_grid(rates, seeds)
+        for i in range(len(rates)):
+            for j in range(len(seeds)):
+                mine, ref = grid.result(0, i, j), legacy.result(i, j)
+                assert mine.throughput_per_chip == pytest.approx(
+                    ref.throughput_per_chip, rel=1e-9)
+                assert mine.avg_latency == pytest.approx(
+                    ref.avg_latency, rel=1e-9)
+                assert mine.delivered_pkts == ref.delivered_pkts
+        # seed-averaged rows match the Simulator.sweep list contract
+        mean_legacy = sim.sweep(rates, seeds)
+        mean_mine = grid.sweep_result(0).mean_over_seeds()
+        for a, b in zip(mean_mine, mean_legacy):
+            assert a.throughput_per_chip == pytest.approx(
+                b.throughput_per_chip, rel=1e-9)
+    # re-running the same spec reuses every compiled step: zero compiles
+    res2 = run_experiment(spec)
+    assert res2.compile_counts == [0, 0]
+    assert res2.grids[0].result(0, 0, 0).delivered_pkts == \
+        res.grids[0].result(0, 0, 0).delivered_pkts
+
+
+def test_fault_grid_single_compile_and_degradation():
+    """A (fault x rate x seed) grid lowers to one compile; the degraded
+    row delivers less than the pristine row; per-lane fault sets come
+    from the spec's seeded sampling streams."""
+    spec = registry.get_scenario("smoke_faults")
+    res = run_experiment(spec)
+    [grid] = res.grids
+    assert grid.compile_count == 1
+    assert grid.fault_labels == ["pristine", "links:0.08"]
+    assert grid.fault_fracs[0] == 0.0
+    assert grid.fault_fracs[1] > 0.0
+    pristine = [grid.result(0, 0, j).delivered_pkts for j in range(2)]
+    degraded = [grid.result(1, 0, j).delivered_pkts for j in range(2)]
+    assert sum(degraded) < sum(pristine)
+    # per_seed sampling: seed lanes of the faulty row differ
+    f0 = spec.axes.faults[1].sample(grid.topology.build(), "updown", 0)
+    f1 = spec.axes.faults[1].sample(grid.topology.build(), "updown", 1)
+    assert f0 != f1
+
+
+# ---------------------------------------------------------------------------
+# Normalized traffic protocol + satellite regressions
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_net():
+    return T.build_switchless(
+        T.SwitchlessParams(a=2, b=1, m=2, n=4, noc=2, g=2), "exp-traffic")
+
+
+def test_every_pattern_returns_normalized_pair(small_net):
+    import jax
+    key = jax.random.PRNGKey(0)
+    for name in TR.PATTERNS:
+        pat = TR.make_pattern(small_net, name)
+        assert isinstance(pat, TR.TrafficPattern)
+        sample, mask = pat                     # uniform unpack contract
+        assert callable(sample)
+        assert mask is None or (np.asarray(mask).dtype == bool
+                                and mask.shape == (small_net.num_terminals,))
+        d = np.asarray(pat(key, 0))            # callable contract
+        assert d.shape == (small_net.num_terminals,)
+        assert (0 <= d).all() and (d < small_net.num_terminals).all()
+    # the historical asymmetry: hotspot's mask now rides the pattern
+    assert TR.make_pattern(small_net, "hotspot",
+                           num_hot=2).inject_mask is not None
+
+
+def test_as_pattern_composes_masks(small_net):
+    T_ = small_net.num_terminals
+    pat = TR.make_pattern(small_net, "hotspot", num_hot=2, seed=0)
+    extra = np.zeros(T_, dtype=bool)
+    extra[:4] = True
+    combined = TR.as_pattern(pat, extra)
+    np.testing.assert_array_equal(
+        combined.inject_mask, np.asarray(pat.inject_mask) & extra)
+    # idempotent on normalized patterns
+    again = TR.as_pattern(combined)
+    np.testing.assert_array_equal(again.inject_mask, combined.inject_mask)
+
+
+def test_terms_per_group_missing_meta_raises():
+    """Regression: used to return None and blow up later as a confusing
+    TypeError inside the pattern factory."""
+    import types
+    fake = types.SimpleNamespace(meta={"g": 2})
+    with pytest.raises(KeyError, match="terms_per_wg.*terms_per_grp"):
+        TR._terms_per_group(fake)
