@@ -34,6 +34,7 @@ MONOTONE_TOL = 0.03   # allowed non-monotone wiggle (flits/cycle/chip)
 def bench(fracs=DEFAULT_FRACS, seeds=DEFAULT_SEEDS,
           offered=DEFAULT_OFFERED, warmup=300, measure=1500) -> dict:
     from repro.exp import registry as SC
+    from repro.exp.provenance import provenance
     from repro.exp.runner import run_experiment
 
     spec = SC.bench_faults_spec(fracs=fracs, seeds=seeds, offered=offered,
@@ -69,6 +70,7 @@ def bench(fracs=DEFAULT_FRACS, seeds=DEFAULT_SEEDS,
         wall_s=res.wall_s,
         monotone_within_tol=monotone,
         monotone_tol=MONOTONE_TOL,
+        provenance=provenance(spec),
     )
 
 

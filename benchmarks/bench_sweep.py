@@ -36,6 +36,7 @@ def bench(rates=DEFAULT_RATES, seeds=DEFAULT_SEEDS,
           warmup=100, measure=500) -> dict:
     from repro.core.simulator import Simulator
     from repro.exp import registry as SC
+    from repro.exp.provenance import provenance
     from repro.exp.runner import cells, run_experiment
     from benchmarks.seed_reference import SeedSimulator
 
@@ -93,6 +94,7 @@ def bench(rates=DEFAULT_RATES, seeds=DEFAULT_SEEDS,
         first_call_compiles=first_compiles,         # 1: one compile per grid
         batched_compiles=grid.compile_count,        # 0: cache-hit on 2nd call
         max_throughput_deviation=max_dev,
+        provenance=provenance(spec),
     )
 
 

@@ -13,9 +13,18 @@ numbers under-count by the layer count; the artifacts keep both and the
 smoke-scale validation (tests) checks the analytic model against unrolled
 HLO.  Collective bytes additionally come from the partitioned HLO with
 metadata-based loop scaling, reported side by side.
+
+Like every other benchmark, the run is described by a spec
+(`repro.exp.roofline.RooflineSpec`: mesh tag, fabric model, bandwidth
+multiplier, artifact dir) instead of hand-wired call sites:
+
+    python -m benchmarks.roofline
+    python -m benchmarks.roofline --mesh multi --fabric flat
+    python -m benchmarks.roofline --spec my_roofline.json
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -23,7 +32,8 @@ import os
 from repro.configs.base import shape_by_name
 from repro.configs.registry import get_config
 from repro.core.cost_model import (HBM_BW, ICI_BW_PER_LINK,
-                                   PEAK_FLOPS_BF16, switchless_wafer_fabric)
+                                   PEAK_FLOPS_BF16)
+from repro.exp.roofline import RooflineSpec
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun")
@@ -144,7 +154,7 @@ def roofline_row(art: dict, fabric=None) -> dict:
     compute_s = a["model_flops"] / (chips * PEAK_FLOPS_BF16)
     memory_s = a["hbm_bytes"] / (chips * HBM_BW)
     coll_flat = sum(a["coll_per_chip"].values()) / ICI_BW_PER_LINK
-    wf = fabric or switchless_wafer_fabric()
+    wf = fabric or RooflineSpec().build_fabric()
     coll_wafer = sum(wf.collective_seconds(ax, b)
                      for ax, b in a["coll_per_chip"].items())
     hlo_coll = sum(art.get("collectives", {}).get("by_axis", {}).values())
@@ -169,18 +179,28 @@ def roofline_row(art: dict, fabric=None) -> dict:
     }
 
 
-def load_rows(mesh="single"):
+def run_spec(spec: RooflineSpec) -> list:
+    """Lower a `RooflineSpec` to its roofline rows: read the matching
+    dry-run artifacts and price every ok cell on the spec's fabric."""
+    art_dir = spec.artifacts_dir or ART_DIR
+    fabric = spec.build_fabric()
     rows = []
-    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}*.json"))):
+    for path in sorted(glob.glob(os.path.join(art_dir,
+                                              f"*__{spec.mesh}*.json"))):
         art = json.load(open(path))
         if art.get("status") == "ok":
-            rows.append(roofline_row(art))
+            rows.append(roofline_row(art, fabric=fabric))
         else:
             rows.append({"arch": art["arch"], "shape": art["shape"],
                          "mesh": art["mesh"], "status": art.get("status"),
                          "reason": art.get("reason",
                                            art.get("error", ""))[:60]})
     return rows
+
+
+def load_rows(mesh="single"):
+    """Historical entry point: the default spec at the given mesh tag."""
+    return run_spec(RooflineSpec(mesh=mesh))
 
 
 def format_table(rows) -> str:
@@ -201,12 +221,28 @@ def format_table(rows) -> str:
     return "\n".join(out)
 
 
-def main():
-    for mesh in ("single", "multi"):
-        rows = load_rows(mesh)
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spec", default=None,
+                    help="path to a RooflineSpec JSON file")
+    ap.add_argument("--mesh", default=None, choices=("single", "multi"),
+                    help="one mesh tag (default: both)")
+    ap.add_argument("--fabric", default="switchless",
+                    choices=("switchless", "flat"))
+    ap.add_argument("--cg-bw-mult", type=float, default=1.0)
+    args = ap.parse_args(argv)
+    if args.spec:
+        with open(args.spec) as f:
+            specs = [RooflineSpec.from_dict(json.load(f))]
+    else:
+        meshes = (args.mesh,) if args.mesh else ("single", "multi")
+        specs = [RooflineSpec(mesh=m, fabric=args.fabric,
+                              cg_bw_mult=args.cg_bw_mult) for m in meshes]
+    for spec in specs:
+        rows = run_spec(spec)
         if not rows:
             continue
-        print(f"\n### Roofline ({mesh}-pod)\n")
+        print(f"\n### Roofline ({spec.mesh}-pod, {spec.fabric} fabric)\n")
         print(format_table(rows))
 
 

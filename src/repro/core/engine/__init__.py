@@ -13,7 +13,8 @@ in a single jitted `lax.scan`.  `repro.core.simulator` is the thin
 compatibility facade over this package.
 """
 from .state import (SimState, SimStats, build_consts, build_lane,
-                    make_state, stack_lanes)
+                    epoch_index, is_scheduled, lane_epoch, make_state,
+                    resolve_epoch, stack_lanes)
 from .arbitrate import Requests, make_arbitrate_fn
 from .inject import (make_inject_fn, make_misroute_fn, build_ugal_watch,
                      ugal_queue_len)
@@ -25,6 +26,7 @@ from .sweep import (BatchedSweep, SweepResult, compile_counter,
 
 __all__ = [
     "SimState", "SimStats", "Requests", "build_consts", "build_lane",
+    "epoch_index", "is_scheduled", "lane_epoch", "resolve_epoch",
     "make_state", "stack_lanes", "make_arbitrate_fn", "make_inject_fn",
     "make_misroute_fn", "build_ugal_watch", "ugal_queue_len",
     "make_apply_fn", "accumulate", "finalize", "zero_stats", "make_step",

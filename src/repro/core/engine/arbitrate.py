@@ -112,12 +112,16 @@ def age_based_grant(req: Requests, state: SimState, consts, buf_pkts: int,
 
     `ch_alive` (the lane's fault mask) makes dead channels ungrantable —
     fault-aware routing never requests one, so this is defence in depth
-    that also covers hand-built states in tests.
+    that also covers hand-built states in tests.  A request for the -1
+    non-channel (a packet STRANDED by a warm fault: its router or target
+    died mid-run, see the updown kernel) is likewise never granted — the
+    packet stays buffered and accounted in-flight.
     """
     E = consts["E"]
     is_ej = req.otype == EJECT
     credit = req.ovc_count < buf_pkts
-    ok = req.valid & (state.ch_busy[req.out] == 0) & (credit | is_ej)
+    ok = req.valid & (req.out >= 0) \
+        & (state.ch_busy[req.out] == 0) & (credit | is_ej)
     if ch_alive is not None:
         ok = ok & ch_alive[req.out]
 

@@ -92,6 +92,16 @@ def make_misroute_fn(net: Network, cfg, consts):
     must visit first (cleared by the apply phase on entry).  The UGAL
     sensor table comes from the per-lane `fl` dict so faulted lanes watch
     their surviving links.
+
+    Fault-aware adaptive stage (all non-minimal modes): a candidate
+    intermediate W-group is masked out unless BOTH misroute hops
+    (source -> candidate, candidate -> destination) keep an alive global
+    link (`fl["glob_ok"]`), and under UGAL the candidate's sensed queue is
+    inflated by `fl["wg_penalty"]` — an additive congestion penalty
+    proportional to the fraction of the candidate W-group's internal
+    channels that died — so traffic is biased away from W-groups whose
+    up*/down* connectivity is degraded.  Both tables are identity on a
+    pristine network, leaving fault-free decisions bit-for-bit unchanged.
     """
     T = consts["T"]
     num_wg = consts["num_wg"]
@@ -108,16 +118,23 @@ def make_misroute_fn(net: Network, cfg, consts):
                          (cand + 1) % num_wg, cand)
         cand = jnp.where((cand == wg_s) | (cand == wg_d),
                          (cand + 1) % num_wg, cand)
+        # fault-aware candidate mask: both misroute hops must keep an
+        # alive global link on the current epoch's surviving network
+        ok_path = fl["glob_ok"][wg_s, jnp.maximum(cand, 0)] \
+            & fl["glob_ok"][jnp.maximum(cand, 0), wg_d]
+        cand = jnp.where(ok_path, cand, -1)
         if cfg.route_mode == "val_restricted":
             # only misroute to W-groups strictly below the destination
-            ok = (cand < wg_d) & (cand != wg_s)
+            ok = (cand < wg_d) & (cand != wg_s) & (cand >= 0)
             cand = jnp.where(ok, cand, -1)
         if cfg.route_mode == "ugal":
             glob_watch = fl["ugal_watch"]
             occ = b_count.sum(axis=1)  # [E] total buffered packets
             q_min = ugal_queue_len(occ, glob_watch[wg_s, jnp.maximum(wg_d, 0)])
             q_non = ugal_queue_len(occ, glob_watch[wg_s, jnp.maximum(cand, 0)])
-            take_nonmin = q_min > 2 * q_non + cfg.ugal_threshold
+            q_non = q_non + fl["wg_penalty"][jnp.maximum(cand, 0)]
+            take_nonmin = (q_min > 2 * q_non + cfg.ugal_threshold) \
+                & (cand >= 0)
             cand = jnp.where(take_nonmin, cand, -1)
         return jnp.where(differ, cand, -1).astype(jnp.int32)
 

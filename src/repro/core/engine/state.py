@@ -19,7 +19,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..topology import NUM_CH_TYPES, FaultSet, Network
+from ..topology import (NUM_CH_TYPES, FaultSchedule, FaultSet, Network,
+                        glob_pair_alive, wg_channel_alive_frac)
 from ..routing import make_route_kernel, num_vcs, route_tables
 
 INF32 = jnp.int32(2**31 - 1)
@@ -134,17 +135,46 @@ def build_consts(net: Network, cfg):
     return consts, route_kernel
 
 
-def build_lane(net: Network, cfg, faults: FaultSet | None = None) -> dict:
-    """Per-lane fault data (the `fl` pytree): alive masks + fault-dependent
-    routing tables (+ UGAL sensors when adaptive routing is on).
+# additive UGAL congestion penalty per unit of W-group degradation: a
+# candidate intermediate W-group that lost fraction d of its internal
+# (mesh + local) channels reads round(SCALE * d) extra buffered packets on
+# its sensor, biasing the adaptive misroute away from degraded W-groups.
+# Zero on a pristine network, so fault-free UGAL decisions are unchanged.
+UGAL_WG_PENALTY_SCALE = 16
 
-    One lane describes ONE degraded (or pristine) network.  The dict is a
-    JAX pytree with a fixed structure per (net, cfg), so `stack_lanes` can
-    prepend a lane axis and `run_scan_batched` can vmap the step over lanes
-    carrying DIFFERENT fault sets in a single compile.  The `SimState`
-    itself needs no fault information: buffers start empty and dead
-    channels simply never grant.
+
+def build_lane(net: Network, cfg,
+               faults: FaultSet | FaultSchedule | None = None) -> dict:
+    """Per-lane fault data (the `fl` pytree): alive masks + fault-dependent
+    routing tables (+ adaptive-misroute tables for the non-minimal modes,
+    + UGAL sensors when adaptive routing is on).
+
+    One lane describes ONE degraded (or pristine) network.  With a
+    `FaultSchedule` the lane is EPOCH-STACKED: every array carries a
+    leading `[P]` epoch axis plus an `epoch_start [P]` int32 vector, and
+    the step resolves the active epoch by the traced cycle number
+    (`resolve_epoch`) before the phases run — mid-run link death is just
+    the epoch index advancing.
+
+    The dict is a JAX pytree with a fixed structure per (net, cfg,
+    schedule shape), so `stack_lanes` can prepend a lane axis and
+    `run_scan_batched` can vmap the step over lanes carrying DIFFERENT
+    fault sets (or schedules) in a single compile.  The `SimState` itself
+    needs no fault information: buffers start empty and dead channels
+    simply never grant.
     """
+    if isinstance(faults, FaultSchedule):
+        from ..routing import stack_epoch_dicts
+        starts, fl = stack_epoch_dicts(
+            [_build_epoch(net, cfg, f) for _, f in faults.epochs],
+            (c for c, _ in faults.epochs))
+        fl["epoch_start"] = starts
+        return fl
+    return _build_epoch(net, cfg, faults)
+
+
+def _build_epoch(net: Network, cfg, faults: FaultSet | None) -> dict:
+    """The flat (single-epoch) lane dict for one cold fault set."""
     from .inject import build_ugal_watch  # local import: step imports both
     faults = faults or FaultSet()
     fl = dict(
@@ -152,11 +182,64 @@ def build_lane(net: Network, cfg, faults: FaultSet | None = None) -> dict:
         term_alive=jnp.asarray(faults.term_alive(net)),
     )
     fl.update(route_tables(net, cfg.vc_mode, faults))
+    if cfg.route_mode != "min":
+        # fault-aware adaptive misroute stage: candidate intermediate
+        # W-groups must keep alive global connectivity on both misroute
+        # hops, and degraded W-groups are biased against in proportion to
+        # their lost internal channels (see inject.make_misroute_fn)
+        fl["glob_ok"] = jnp.asarray(glob_pair_alive(net, faults))
+        frac = wg_channel_alive_frac(net, faults)
+        fl["wg_penalty"] = jnp.asarray(
+            np.round(UGAL_WG_PENALTY_SCALE * (1.0 - frac)).astype(np.int32))
     if cfg.route_mode == "ugal":
         fl["ugal_watch"] = build_ugal_watch(net, cfg, faults)
     return fl
 
 
+def is_scheduled(fl: dict) -> bool:
+    """True when the lane dict is epoch-stacked (carries `epoch_start`)."""
+    return "epoch_start" in fl
+
+
+def epoch_index(fl: dict, t):
+    """Traced index of the epoch in effect at cycle `t` (int32 scalar)."""
+    return (jnp.sum(t >= fl["epoch_start"]) - 1).astype(jnp.int32)
+
+
+def lane_epoch(fl: dict, idx):
+    """Slice one epoch out of an epoch-stacked lane dict; `idx` may be a
+    traced scalar (the gather on the leading axis stays jit/vmap-legal)."""
+    return {k: v[idx] for k, v in fl.items() if k != "epoch_start"}
+
+
+def resolve_epoch(fl: dict, t):
+    """The lane's fault data in effect at cycle `t`: a no-op for flat
+    (cold) lanes, an epoch gather for scheduled ones.  The branch is
+    trace-time (pytree structure is static under jit)."""
+    if not is_scheduled(fl):
+        return fl
+    return lane_epoch(fl, epoch_index(fl, t))
+
+
 def stack_lanes(lanes: list[dict]) -> dict:
-    """Stack per-lane fault dicts into one lane-axis pytree [B, ...]."""
+    """Stack per-lane fault dicts into one lane-axis pytree [B, ...].
+
+    Epoch-stacked lanes with differing epoch counts are padded to the
+    longest schedule by repeating their final epoch with an unreachable
+    onset cycle, so heterogeneous warm-fault grids still stack into one
+    dense `[B, P, ...]` pytree (and one compile)."""
+    if lanes and is_scheduled(lanes[0]):
+        P = max(int(l["epoch_start"].shape[0]) for l in lanes)
+        lanes = [_pad_epochs(l, P) for l in lanes]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
+
+
+def _pad_epochs(fl: dict, P: int) -> dict:
+    p = P - int(fl["epoch_start"].shape[0])
+    if p == 0:
+        return fl
+    out = {k: jnp.concatenate([v] + [v[-1:]] * p) for k, v in fl.items()
+           if k != "epoch_start"}
+    out["epoch_start"] = jnp.concatenate(
+        [fl["epoch_start"], jnp.full((p,), INF32, dtype=jnp.int32)])
+    return out

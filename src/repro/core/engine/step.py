@@ -23,7 +23,7 @@ from ..traffic import as_pattern
 from .apply import make_apply_fn
 from .arbitrate import make_arbitrate_fn
 from .inject import make_inject_fn
-from .state import build_consts
+from .state import build_consts, resolve_epoch
 from .stats import accumulate, zero_stats
 
 
@@ -33,7 +33,14 @@ def make_step(net: Network, cfg, pattern, inject_mask=None):
 
     `pattern` may be a bare sampler or a normalized `TrafficPattern`
     pair; a pattern-borne inject mask (e.g. hotspot's hot-source mask)
-    composes with the explicit `inject_mask` argument."""
+    composes with the explicit `inject_mask` argument.
+
+    When `fl` is epoch-stacked (a `FaultSchedule` lane, see
+    `state.build_lane`), the step first resolves the traced epoch index
+    from `t` and hands the phases that epoch's alive masks and routing
+    tables — mid-run link death is the epoch index advancing, and every
+    in-flight packet is re-routed on the surviving subgraph from the next
+    cycle on (buffered packets are preserved, never dropped)."""
     pattern, inject_mask = as_pattern(pattern, inject_mask)
     consts, route_kernel = build_consts(net, cfg)
     inject = make_inject_fn(net, cfg, consts, pattern, inject_mask)
@@ -42,6 +49,7 @@ def make_step(net: Network, cfg, pattern, inject_mask=None):
 
     def step(state, t_key_rate_fl):
         t, key, rate_pkt, fl = t_key_rate_fl
+        fl = resolve_epoch(fl, t)
         state = inject(state, t, key, rate_pkt, fl)
         req, win, won_ch = arbitrate(state, t, fl)
         stats = accumulate(state.stats, req, win, consts, t)

@@ -35,7 +35,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..topology import FaultSet, Network
+from ..topology import (FaultSchedule, FaultSet, Network, as_fault_schedule,
+                        compose_faults, final_faults)
 from ..traffic import as_pattern
 from .state import build_lane, make_state, stack_lanes
 from .stats import finalize, zero_stats
@@ -178,9 +179,11 @@ class BatchedSweep:
         return offered_to_rate_pkt(offered_per_chip, self.cfg,
                                    self.terms_per_chip)
 
-    def _chips(self, faults: FaultSet | None) -> float:
+    def _chips(self, faults) -> float:
         """Accepted-throughput divisor: chips weighted by the fraction of
-        terminals that actually inject (mask AND alive)."""
+        terminals that actually inject (mask AND alive).  A schedule
+        reports its FINAL epoch — the steady-state degraded network."""
+        faults = final_faults(faults)
         alive = (self._inj_mask if faults is None
                  else self._inj_mask & faults.term_alive(self.net))
         return self.net.num_chips * alive.sum() / self.net.num_terminals
@@ -226,34 +229,34 @@ class BatchedSweep:
 
     def run_lanes(self, lanes):
         """The fully general lane axis: one compiled batched scan over an
-        arbitrary list of `(offered_per_chip, seed, FaultSet | None)` lane
-        triples.
+        arbitrary list of `(offered_per_chip, seed, faults)` lane triples,
+        where `faults` is a `FaultSet`, a warm `FaultSchedule`, or None.
 
-        Each lane's fault set COMPOSES on top of the sweep's base `faults`
-        (`None` means "just the base faults").  When every composed lane
-        ends up with the same fault set the shared-lane fast path is used
-        (the fault pytree broadcasts instead of stacking), otherwise each
-        distinct fault set builds its lane tables once and the step vmaps
-        over the stacked lane axis — either way ONE `run_scan_batched`
-        dispatch, at most one jit compile.
+        Each lane's fault state COMPOSES on top of the sweep's base
+        `faults` (`None` means "just the base faults").  When any lane
+        carries a `FaultSchedule`, EVERY lane is promoted to a schedule
+        (cold sets become single-epoch schedules) so the lane pytrees
+        share one epoch-stacked structure — a mixed warm/cold
+        (rates x seeds x schedules) grid still stacks into one dense
+        batch.  When every composed lane ends up with the same fault state
+        the shared-lane fast path is used (the fault pytree broadcasts
+        instead of stacking), otherwise each distinct state builds its
+        lane tables once and the step vmaps over the stacked lane axis —
+        either way ONE `run_scan_batched` dispatch, at most one jit
+        compile.
 
         Returns `(results, wall_s, compiles, fault_sets)` where `results`
         is one `SimResult` per lane (in order) and `fault_sets` holds the
-        composed per-lane fault sets (None = pristine).
+        composed per-lane fault states (None = pristine).
         """
         cfg = self.cfg
         lanes = list(lanes)
         if not lanes:
             raise ValueError("run_lanes needs >= 1 lane")
         base = self.faults
-        fsets = []
-        for _, _, f in lanes:
-            if f is None:
-                fsets.append(base)
-            elif base is None:
-                fsets.append(f)
-            else:
-                fsets.append(base.union(f))
+        fsets = [compose_faults(base, f) for _, _, f in lanes]
+        if any(isinstance(f, FaultSchedule) for f in fsets):
+            fsets = [as_fault_schedule(f) for f in fsets]
         lane_rates = jnp.asarray([self._rate_pkt(r) for r, _, _ in lanes],
                                  dtype=jnp.float32)
         lane_keys = jnp.stack(
@@ -298,11 +301,12 @@ class BatchedSweep:
         """Degraded-throughput grid: one lane per (fault set, seed), all at
         the same offered load, in ONE compiled batched scan.
 
-        `fault_grid` is a list of rows; row i is either one `FaultSet`
-        (shared by every seed lane of that row) or a per-seed list
-        `[FaultSet, ...]` (e.g. independently sampled failures per seed).
-        Rows map to `SweepResult.results` rows; `fault_fracs[i]` records
-        row i's mean failed-link fraction.
+        `fault_grid` is a list of rows; row i is either one `FaultSet` /
+        warm `FaultSchedule` (shared by every seed lane of that row) or a
+        per-seed list `[FaultSet | FaultSchedule, ...]` (e.g.
+        independently sampled failures per seed).  Rows map to
+        `SweepResult.results` rows; `fault_fracs[i]` records row i's mean
+        failed-link fraction (a schedule reports its final epoch).
 
         When the sweep itself was constructed with `faults`, every grid
         entry COMPOSES on top of that base set (an empty-FaultSet row
@@ -322,7 +326,8 @@ class BatchedSweep:
              for i in range(F) for j in range(S)])
         results = [[flat[i * S + j] for j in range(S)] for i in range(F)]
         fracs = [float(np.mean(
-            [0.0 if f is None else f.frac_links_failed(self.net)
+            [0.0 if f is None
+             else final_faults(f).frac_links_failed(self.net)
              for f in fsets[i * S:(i + 1) * S]])) for i in range(F)]
         return SweepResult(rates=[offered_per_chip] * F, seeds=seeds,
                            results=results, compile_count=compiles,

@@ -1,0 +1,48 @@
+"""Routing for the switch-less Dragonfly (paper Sec. IV) and the
+switch-based baseline — as a package of pluggable pipeline stages.
+
+Layout (the 581-line module this package replaced kept all of this in one
+file; the public API is unchanged — `make_route_fn`, `route_tables`,
+`assert_deadlock_free` et al. import exactly as before):
+
+    vcs.py        VC schemes (`num_vcs`) + the packet meta bitfield
+    tables.py     fault-dependent routing tables (`route_tables`,
+                  `build_updown_tables`) and their per-epoch stacking for
+                  time-varying `FaultSchedule`s (`stack_epoch_tables`)
+    kernels/      one module per scheme (baseline XY / up*-down* /
+                  switch-based dragonfly), all obeying the same
+                  batch-pure `kernel(fl, cur, dest, mis, meta)` protocol
+    pipeline.py   `RoutePipeline` (the protocol object) + the historical
+                  `make_route_kernel` / `make_route_fn` entry points
+    verify.py     offline path tracing, CDG construction, and the
+                  deadlock-freedom proofs — per fault set
+                  (`assert_deadlock_free`) and per epoch of a schedule
+                  (`assert_schedule_deadlock_free`)
+
+FAULT AWARENESS: the fault-dependent tables (parallel-global re-pick,
+per-W-group up*/down* next hops) are NOT closure constants — they live in
+the `fl` dict produced by `route_tables(net, vc_mode, faults)` and are an
+explicit first argument of the kernels, so a batched sweep can stack them
+over a lane axis (different fault sets per lane) or an epoch axis (a
+`FaultSchedule`'s mid-run link deaths) and run the whole grid in one
+compile.  `make_route_fn` binds a kernel to one network's tables and keeps
+the historical 4-argument closure signature.
+"""
+from .vcs import (PHASE_BIT, meta_cg_count, meta_g_count, meta_update,
+                  meta_via_ext, num_vcs)
+from .tables import (build_updown_tables, route_tables, stack_epoch_dicts,
+                     stack_epoch_tables, _updown_single)
+from .pipeline import (RoutePipeline, make_pipeline, make_route_fn,
+                       make_route_kernel)
+from .verify import (assert_deadlock_free, assert_schedule_deadlock_free,
+                     build_cdg, trace_paths)
+
+__all__ = [
+    "PHASE_BIT", "meta_cg_count", "meta_g_count", "meta_update",
+    "meta_via_ext", "num_vcs",
+    "build_updown_tables", "route_tables", "stack_epoch_dicts",
+    "stack_epoch_tables",
+    "RoutePipeline", "make_pipeline", "make_route_fn", "make_route_kernel",
+    "assert_deadlock_free", "assert_schedule_deadlock_free", "build_cdg",
+    "trace_paths",
+]

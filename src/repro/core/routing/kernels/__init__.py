@@ -1,0 +1,22 @@
+"""Route kernels, one module per scheme.
+
+Every kernel obeys the same `RoutePipeline` calling convention
+(`kernel(fl, cur, dest_term, mis_wg, meta)`, see `..pipeline`): the
+fault-dependent tables `fl` are an explicit argument, never a closure
+constant, so the engine can vmap one compiled kernel over per-lane fault
+sets and select among per-epoch tables of a `FaultSchedule` by a traced
+epoch index.
+
+BATCH PURITY CONTRACT: a kernel may only gather from the static tables it
+closes over (and the `fl` dict it is handed); it must never reduce over,
+reshape, or branch on the shape of its packet-vector arguments.
+`engine.sweep.BatchedSweep` vmaps the whole cycle over a (rate x seed x
+fault) lane axis, so any cross-packet coupling here would silently change
+batched results (guarded by tests/test_engine.py::test_route_fn_batch_pure).
+"""
+from .baseline import make_baseline_kernel
+from .updown import make_updown_kernel
+from .dragonfly import make_dragonfly_kernel
+
+__all__ = ["make_baseline_kernel", "make_updown_kernel",
+           "make_dragonfly_kernel"]

@@ -1,0 +1,88 @@
+"""Switch-less Dragonfly baseline kernel: Alg. 1 with XY in-C-group
+routing; VC = #C-groups entered (4 VCs minimal / 6 non-minimal)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...topology import EJECT, Network
+from ..vcs import meta_cg_count, meta_update
+
+
+def make_baseline_kernel(net: Network):
+    """kernel(fl, cur, dest_term, mis_wg, meta) -> (out_ch, req_vc, meta')."""
+    t = net.tables
+    node_wg = jnp.asarray(t["node_wg"])
+    node_cg = jnp.asarray(t["node_cg"])
+    node_cgg = jnp.asarray(t["node_cg_global"])
+    node_x = jnp.asarray(t["node_x"])
+    node_y = jnp.asarray(t["node_y"])
+    node_mesh_ch = jnp.asarray(t["node_mesh_ch"])
+    eject_ch = jnp.asarray(t["eject_ch"])
+    ext_out = jnp.asarray(t["ext_out"])
+    local_port = jnp.asarray(t["local_port"])
+    port_node_local = jnp.asarray(t["port_node_local"])
+    term_node = jnp.asarray(t["term_node"])
+    ch_type = jnp.asarray(net.ch_type)
+    R = net.meta["R"]
+    nodes_per_cg = net.meta["nodes_per_cg"]
+    # packed gathers: destination-indexed node record and the (cg, port)
+    # record of the global exit — one dynamic row gather each instead of
+    # three/two (row count, not width, is what CPU gather loops pay for)
+    dnode_tbl = jnp.stack([node_wg, node_cgg, node_cg], axis=-1)   # [V, 3]
+    glob_tbl = jnp.stack([jnp.asarray(t["glob_route_cg"]),
+                          jnp.asarray(t["glob_route_port"])], axis=-1)
+
+    def route_vc(fl, cur, dest_term, mis_wg, meta):
+        dest_node = term_node[dest_term]
+        dtbl = dnode_tbl[dest_node]
+        wg_c = node_wg[cur]
+        wg_d = dtbl[..., 0]
+        mis_active = mis_wg >= 0
+        tgt_wg = jnp.where(mis_active, mis_wg, wg_d)
+        cg_c = node_cg[cur]
+        cgg_c = node_cgg[cur]
+        cgg_d = dtbl[..., 1]
+        cg_d = dtbl[..., 2]
+
+        in_tgt_wg = wg_c == tgt_wg          # mis cleared on entry => == wg_d
+        at_dest_cg = (cgg_c == cgg_d) & (~mis_active)
+
+        # exit port selection (Alg. 1 steps); parallel global links per
+        # W-group pair are spread across flows by destination hash over the
+        # ALIVE links (fl re-picks around dead parallel globals)
+        par = fl["glob_idx"][wg_c, tgt_wg,
+                             dest_term % fl["glob_cnt"][wg_c, tgt_wg]]
+        gtbl = glob_tbl[wg_c, tgt_wg, par]
+        cg_gl = gtbl[..., 0]                         # owner of global channel
+        port_gl = gtbl[..., 1]
+        at_global_cg = cg_c == cg_gl
+        peer_cg = jnp.where(in_tgt_wg, cg_d, cg_gl)
+        port_lc = local_port[cg_c, peer_cg]
+        use_global = (~in_tgt_wg) & at_global_cg
+        port = jnp.where(use_global, port_gl, port_lc)
+        to_terminal = at_dest_cg
+
+        tgt_local = jnp.where(to_terminal,
+                              dest_node % nodes_per_cg,
+                              port_node_local[port])
+        cur_local = cur % nodes_per_cg
+        at_target = cur_local == tgt_local
+        out_at_target = jnp.where(to_terminal, eject_ch[cur],
+                                  ext_out[cgg_c, port])
+
+        # XY (dimension-order): x first, then y.  DIRS = (N, E, S, W).
+        tx = tgt_local % R
+        ty = tgt_local // R
+        x = node_x[cur]
+        y = node_y[cur]
+        dir_xy = jnp.where(
+            x != tx, jnp.where(tx > x, 1, 3), jnp.where(ty > y, 2, 0))
+        out_mesh = node_mesh_ch[cur, dir_xy]
+
+        out_ch = jnp.where(at_target, out_at_target, out_mesh)
+        new_meta = meta_update(meta, ch_type[out_ch])
+        is_ej = ch_type[out_ch] == EJECT
+        req_vc = jnp.where(is_ej, 0, meta_cg_count(new_meta))
+        return out_ch, req_vc.astype(jnp.int32), new_meta
+
+    return route_vc

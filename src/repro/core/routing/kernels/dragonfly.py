@@ -1,0 +1,49 @@
+"""Switch-based Dragonfly kernel (the paper's baseline, Kim et al. 2008):
+minimal l-g-l with optional Valiant group misroute; per-hop VC increment."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...topology import EJECT, Network
+from ..vcs import meta_cg_count, meta_update
+
+
+def make_dragonfly_kernel(net: Network):
+    """kernel(fl, cur, dest_term, mis_wg, meta) -> (out_ch, req_vc, meta')."""
+    t = net.tables
+    node_grp = jnp.asarray(t["node_grp"])
+    node_idx = jnp.asarray(t["node_idx"])
+    local_ch = jnp.asarray(t["local_ch"])
+    glob_route_sw = jnp.asarray(t["glob_route_sw"])
+    glob_out_ch = jnp.asarray(t["glob_out_ch"])
+    eject_sw_term = jnp.asarray(t["eject_sw_term"])
+    term_node = jnp.asarray(t["term_node"])
+    term_slot = jnp.asarray(t["term_slot"])
+    ch_type = jnp.asarray(net.ch_type)
+
+    def route_vc(fl, cur, dest_term, mis_wg, meta):
+        dest_sw = term_node[dest_term]
+        grp_c = node_grp[cur]
+        grp_d = node_grp[dest_sw]
+        mis_active = mis_wg >= 0
+        tgt_grp = jnp.where(mis_active, mis_wg, grp_d)
+
+        at_dest_sw = (cur == dest_sw) & (~mis_active)
+        par = fl["glob_idx"][grp_c, tgt_grp,
+                             dest_term % fl["glob_cnt"][grp_c, tgt_grp]]
+        sw_gl = glob_route_sw[grp_c, tgt_grp, par]
+        in_tgt = grp_c == tgt_grp
+        peer_sw = jnp.where(in_tgt, dest_sw, sw_gl)
+        use_global = (~in_tgt) & (cur == sw_gl)
+
+        out_ch = jnp.where(
+            at_dest_sw, eject_sw_term[cur, term_slot[dest_term]],
+            jnp.where(use_global, glob_out_ch[grp_c, tgt_grp, par],
+                      local_ch[cur, node_idx[peer_sw]]))
+        new_meta = meta_update(meta, ch_type[out_ch])
+        req_vc = meta_cg_count(new_meta)  # per-hop increment scheme
+        is_ej = ch_type[out_ch] == EJECT
+        req_vc = jnp.where(is_ej, 0, req_vc)
+        return out_ch, req_vc.astype(jnp.int32), new_meta
+
+    return route_vc

@@ -1,0 +1,97 @@
+"""Switch-less up*/down* kernels: W-group-wide up*/down* routing over the
+per-W-group rank/next-hop tables of `fl` (rebuilt on the surviving
+subgraph when faulted).  2 VCs minimal / 3 non-minimal ("updown"), or
+2 VCs with misroutes restricted to W-groups below the destination
+("updown_merged")."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...topology import EJECT, GLOBAL, Network
+from ..vcs import PHASE_BIT, meta_g_count, meta_update
+
+
+def make_updown_kernel(net: Network, vc_mode: str):
+    """kernel(fl, cur, dest_term, mis_wg, meta) -> (out_ch, req_vc, meta')."""
+    t = net.tables
+    node_wg = jnp.asarray(t["node_wg"])
+    node_mesh_ch = jnp.asarray(t["node_mesh_ch"])
+    eject_ch = jnp.asarray(t["eject_ch"])
+    ext_out = jnp.asarray(t["ext_out"])
+    local_port = jnp.asarray(t["local_port"])
+    glob_route_cg = jnp.asarray(t["glob_route_cg"])
+    glob_route_port = jnp.asarray(t["glob_route_port"])
+    port_node_local = jnp.asarray(t["port_node_local"])
+    term_node = jnp.asarray(t["term_node"])
+    ch_type = jnp.asarray(net.ch_type)
+    R = net.meta["R"]
+    npc = net.meta["nodes_per_cg"]
+    ab = net.meta["ab"]
+    NW = ab * npc
+    merged = vc_mode == "updown_merged"
+
+    def route_vc(fl, cur, dest_term, mis_wg, meta):
+        rank, nh = fl["ud_rank"], fl["ud_nh"]
+        dest_node = term_node[dest_term]
+        wg_c = node_wg[cur]
+        wg_d = node_wg[dest_node]
+        mis_active = mis_wg >= 0
+        tgt_wg = jnp.where(mis_active, mis_wg, wg_d)
+        in_final = (wg_c == wg_d) & (~mis_active)
+        u = cur % NW
+
+        par = fl["glob_idx"][wg_c, tgt_wg,
+                             dest_term % fl["glob_cnt"][wg_c, tgt_wg]]
+        cg_gl = glob_route_cg[wg_c, tgt_wg, par]
+        port_gl = glob_route_port[wg_c, tgt_wg, par]
+        v_exit = cg_gl * npc + port_node_local[port_gl]
+        v = jnp.where(in_final, dest_node % NW, v_exit)
+        arrived = u == v
+        out_arr = jnp.where(in_final, eject_ch[cur],
+                            ext_out[wg_c * ab + cg_gl, port_gl])
+
+        phase = (meta >> 6) & 1
+        # one row gather pulls both phases' next hops; select by phase.
+        # WARM-FAULT RECOVERY: when an epoch swap rebuilt the tables, a
+        # packet that had already taken a down hop may find its down-only
+        # continuation gone (nh == -1) — restart it on the full up*/down*
+        # path (phase 0), which reaches every alive target of a connected
+        # surviving W-group.  If even that is -1 (the packet sits at a
+        # router that died, or its target died), the packet STRANDS: it
+        # emits the -1 non-channel, which arbitration never grants, so it
+        # stays buffered and accounted in-flight instead of corrupting a
+        # gather.  Cold lanes never take either branch.
+        nh_uv = nh[wg_c, u, v]                     # [..., 2]
+        w_ph = jnp.where(phase == 1, nh_uv[..., 1], nh_uv[..., 0])
+        restart = w_ph < 0
+        w = jnp.where(restart, nh_uv[..., 0], w_ph)
+        phase = jnp.where(restart, 0, phase)
+        stranded = w < 0
+        w = jnp.maximum(w, 0)                      # safe gather index only
+        same_cg = (u // npc) == (w // npc)
+        ux, uy = (u % npc) % R, (u % npc) // R
+        wx, wy = (w % npc) % R, (w % npc) // R
+        dir_idx = jnp.where(wy < uy, 0, jnp.where(wx > ux, 1,
+                  jnp.where(wy > uy, 2, 3)))
+        out_mesh = node_mesh_ch[cur, dir_idx]
+        out_local = ext_out[wg_c * ab + u // npc,
+                            local_port[u // npc, w // npc]]
+        out_step = jnp.where(same_cg, out_mesh, out_local)
+        out_ch = jnp.where(arrived, out_arr, out_step)
+        out_ch = jnp.where(stranded & ~arrived, -1, out_ch)
+
+        new_meta = meta_update(meta, ch_type[out_ch])
+        went_down = phase | (rank[wg_c, w] > rank[wg_c, u])
+        is_glob = ch_type[out_ch] == GLOBAL  # GLOBAL resets the phase
+        new_phase = jnp.where(is_glob, 0,
+                              jnp.where(arrived, phase, went_down))
+        new_meta = (new_meta & ~PHASE_BIT) \
+            | (new_phase.astype(jnp.int32) << 6)
+
+        g = meta_g_count(new_meta)
+        req_vc = jnp.minimum(g, 1) if merged else jnp.minimum(g, 2)
+        is_ej = ch_type[out_ch] == EJECT
+        req_vc = jnp.where(is_ej, 0, req_vc)
+        return out_ch, req_vc.astype(jnp.int32), new_meta
+
+    return route_vc

@@ -1,0 +1,98 @@
+"""`RoutePipeline`: the single protocol every route kernel plugs into.
+
+A pipeline is (network, vc_mode, kernel) where the kernel is a pure,
+batch-pure function
+
+    kernel(fl, cur_node, dest_term, mis_wg, meta) -> (out_ch, req_vc, meta')
+
+whose fault-dependent tables `fl` are an explicit traced argument (the
+dict of `tables.route_tables`).  Because the kernel never closes over
+fault state, the same compiled kernel serves:
+
+  * the pristine network (`fl` from `route_tables(net, vc_mode)`),
+  * one cold fault set per lane (lane-stacked `fl`, `engine.sweep`),
+  * a time-varying `FaultSchedule` — `epoch_tables` stacks one table set
+    per epoch and the engine selects the active epoch's slice by a traced
+    epoch index before calling the kernel.
+
+`make_route_kernel` / `make_route_fn` keep the historical functional API;
+`make_pipeline` returns the pipeline object new code should prefer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from ..topology import FaultSchedule, FaultSet, Network
+from .kernels import (make_baseline_kernel, make_dragonfly_kernel,
+                      make_updown_kernel)
+from .tables import route_tables, stack_epoch_tables
+from .vcs import num_vcs
+
+
+@dataclass(frozen=True, eq=False)
+class RoutePipeline:
+    """One network's routing scheme as a pluggable pipeline stage."""
+
+    net: Network = field(repr=False)
+    vc_mode: str
+    kernel: Callable = field(repr=False)
+
+    def num_vcs(self, nonminimal: bool) -> int:
+        """Deadlock classes this scheme needs (before `vcs_per_class`)."""
+        return num_vcs(self.net.meta["kind"], self.vc_mode, nonminimal)
+
+    def tables(self, faults: FaultSet | None = None) -> dict:
+        """Fault-dependent tables for one epoch (pristine when None)."""
+        return route_tables(self.net, self.vc_mode, faults)
+
+    def epoch_tables(self, schedule: FaultSchedule) -> tuple:
+        """(epoch_start [P], epoch-stacked tables) for a warm schedule."""
+        return stack_epoch_tables(self.net, self.vc_mode, schedule)
+
+    def bind(self, faults: FaultSet | None = None):
+        """Historical 4-argument closure over one epoch's tables."""
+        fl = self.tables(faults)
+        kernel = self.kernel
+        return lambda cur, dest, mis, meta: kernel(fl, cur, dest, mis, meta)
+
+    def __call__(self, fl, cur, dest_term, mis_wg, meta):
+        return self.kernel(fl, cur, dest_term, mis_wg, meta)
+
+
+def make_pipeline(net: Network, vc_mode: str = "baseline") -> RoutePipeline:
+    """Kind-dispatched `RoutePipeline` for one network."""
+    if net.meta["kind"] != "switchless":
+        kernel = make_dragonfly_kernel(net)
+    elif vc_mode == "baseline":
+        kernel = make_baseline_kernel(net)
+    elif vc_mode in ("updown", "updown_merged"):
+        kernel = make_updown_kernel(net, vc_mode)
+    else:
+        raise ValueError(vc_mode)
+    return RoutePipeline(net=net, vc_mode=vc_mode, kernel=kernel)
+
+
+def make_route_kernel(net: Network, vc_mode: str = "baseline"):
+    """Returns kernel(fl, cur_node, dest_term, mis_wg, meta)
+    -> (out_ch, req_vc, new_meta).
+
+    `fl` is the fault-dependent table dict of `route_tables` (an explicit
+    argument, NOT a closure constant, so the engine can vmap one compiled
+    kernel over per-lane fault sets).  mis_wg == -1 means no (remaining)
+    misroute; the simulator clears it when the packet enters the
+    intermediate W-group.  `out_ch` is a channel id (MESH / LOCAL / GLOBAL
+    / EJECT).  `req_vc` is the VC of the downstream buffer the packet will
+    occupy.
+    """
+    return make_pipeline(net, vc_mode).kernel
+
+
+def make_route_fn(net: Network, vc_mode: str = "baseline",
+                  faults: FaultSet | None = None):
+    """Route closure route(cur, dest_term, mis_wg, meta) over the
+    (possibly degraded) network: the kind-dispatched kernel bound to this
+    network's (possibly faulted) tables.  Minimal, non-minimal, and UGAL
+    modes all route around the faults via the rebuilt tables
+    (`route_tables`)."""
+    return make_pipeline(net, vc_mode).bind(faults)

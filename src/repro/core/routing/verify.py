@@ -1,0 +1,167 @@
+"""Offline verification: path tracing, the channel-dependency graph, and
+the deadlock-freedom proofs — per fault set and per epoch of a
+`FaultSchedule`.
+
+Route functions are pure, vectorizable jnp functions usable both inside
+the jitted simulator and (via numpy inputs) by the hop-by-hop tracer here
+that builds the CDG for the deadlock-freedom tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..topology import EJECT, FaultSchedule, FaultSet, Network
+from .pipeline import make_route_fn
+
+
+def trace_paths(net: Network, route_fn, src_terms: np.ndarray,
+                dst_terms: np.ndarray, mis_wgs: np.ndarray,
+                max_hops: int | None = None):
+    """Walk packets hop-by-hop with no contention.
+
+    Returns (channels [B, H], vcs [B, H], lengths [B]) with -1 padding.
+    """
+    import jax
+    B = len(src_terms)
+    if max_hops is None:
+        R = net.meta.get("R", 2)
+        max_hops = 8 * (4 * R + 4) + 16
+    term_node = net.term_node
+    node_wg_tbl = net.tables.get("node_wg", net.tables.get("node_grp"))
+    ch_dst = net.ch_dst
+    ch_typ = net.ch_type
+
+    step = jax.jit(lambda cur, dst, mis, meta: route_fn(cur, dst, mis, meta))
+
+    cur = term_node[src_terms].copy()
+    meta = np.zeros(B, dtype=np.int32)
+    mis = mis_wgs.astype(np.int32).copy()
+    # misroute is pointless/undefined if src and dst share the W-group
+    same = node_wg_tbl[term_node[src_terms]] == node_wg_tbl[term_node[dst_terms]]
+    mis = np.where(same, -1, mis)
+    done = np.zeros(B, dtype=bool)
+    chans = np.full((B, max_hops), -1, dtype=np.int64)
+    vcs = np.full((B, max_hops), -1, dtype=np.int32)
+    for hstep in range(max_hops):
+        if done.all():
+            break
+        out_ch, vc, new_meta = map(np.asarray, step(
+            jnp.asarray(cur), jnp.asarray(dst_terms), jnp.asarray(mis),
+            jnp.asarray(meta)))
+        act = ~done
+        chans[act, hstep] = out_ch[act]
+        vcs[act, hstep] = vc[act]
+        nxt = ch_dst[out_ch]
+        is_eject = ch_typ[out_ch] == EJECT
+        # clear mis on entering the intermediate W-group
+        entered_mis = (mis >= 0) & (node_wg_tbl[np.clip(nxt, 0, net.num_nodes - 1)] == mis) \
+            & ~is_eject
+        mis = np.where(act & entered_mis, -1, mis)
+        meta = np.where(act, new_meta, meta)
+        cur = np.where(act & ~is_eject, nxt, cur)
+        done = done | (act & is_eject)
+    if not done.all():
+        bad = np.where(~done)[0][:5]
+        raise RuntimeError(
+            f"paths did not terminate within {max_hops} hops; e.g. "
+            f"src={src_terms[bad]}, dst={dst_terms[bad]}, mis={mis_wgs[bad]}")
+    lengths = (chans >= 0).sum(axis=1)
+    return chans, vcs, lengths
+
+
+def build_cdg(chans: np.ndarray, vcs: np.ndarray):
+    """Channel-dependency graph over (channel, vc) pairs from traced paths."""
+    import networkx as nx
+    B, H = chans.shape
+    g = nx.DiGraph()
+    c0, v0 = chans[:, :-1], vcs[:, :-1]
+    c1, v1 = chans[:, 1:], vcs[:, 1:]
+    valid = (c0 >= 0) & (c1 >= 0)
+    a = np.stack([c0[valid], v0[valid], c1[valid], v1[valid]], axis=1)
+    a = np.unique(a, axis=0)
+    g.add_edges_from(((int(r[0]), int(r[1])), (int(r[2]), int(r[3])))
+                     for r in a)
+    return g
+
+
+def assert_deadlock_free(net: Network, vc_mode: str, nonminimal: bool,
+                         rng: np.random.Generator, n_pairs: int = 4000,
+                         exhaustive_limit: int = 250_000,
+                         faults: FaultSet | None = None) -> int:
+    """Trace flows and assert the CDG is acyclic.  Returns #edges checked.
+
+    With `faults`, flows run between alive terminals on the degraded
+    network; the trace additionally asserts no path crosses a dead channel
+    (re-proving deadlock freedom AND fault avoidance on the survivors).
+    """
+    import networkx as nx
+    route_fn = make_route_fn(net, vc_mode, faults)
+    T = net.num_terminals
+    terms = (np.arange(T) if faults is None
+             else np.flatnonzero(faults.term_alive(net)))
+    TA = len(terms)
+    if TA * TA <= exhaustive_limit and not nonminimal:
+        si, di = np.divmod(np.arange(TA * TA), TA)
+        s, d = terms[si], terms[di]
+        keep = s != d
+        s, d = s[keep], d[keep]
+    else:
+        s = terms[rng.integers(0, TA, size=n_pairs)]
+        d = terms[rng.integers(0, TA, size=n_pairs)]
+        keep = s != d
+        s, d = s[keep], d[keep]
+    if nonminimal:
+        wg_tbl = net.tables.get("node_wg", net.tables.get("node_grp"))
+        g = int(wg_tbl.max()) + 1
+        wg_s = wg_tbl[net.term_node[s]]
+        wg_d = wg_tbl[net.term_node[d]]
+        if vc_mode == "updown_merged":
+            # misroute only to W-groups strictly below the destination
+            hi = np.maximum(wg_d, 1)
+            mis = rng.integers(0, hi)
+            bad = (mis == wg_s) | (mis == wg_d) | (wg_d == 0)
+            mis = np.where(bad, -1, mis)
+        else:
+            mis = rng.integers(0, g, size=len(s))
+            bad = (mis == wg_s) | (mis == wg_d)
+            mis = np.where(bad, -1, mis)
+    else:
+        mis = np.full(len(s), -1, dtype=np.int64)
+    chans, vcs, _ = trace_paths(net, route_fn, s, d, mis)
+    if faults is not None:
+        alive = faults.ch_alive(net)
+        used = chans[chans >= 0]
+        if not alive[used].all():
+            bad = np.unique(used[~alive[used]])
+            raise AssertionError(
+                f"faulted routing crossed dead channels {bad[:8]} "
+                f"({net.name}, vc_mode={vc_mode})")
+    cdg = build_cdg(chans, vcs)
+    if not nx.is_directed_acyclic_graph(cdg):
+        cyc = nx.find_cycle(cdg)
+        raise AssertionError(
+            f"CDG cycle for {net.name} vc_mode={vc_mode} "
+            f"nonmin={nonminimal}: {cyc[:12]}")
+    return cdg.number_of_edges()
+
+
+def assert_schedule_deadlock_free(net: Network, vc_mode: str,
+                                  nonminimal: bool,
+                                  rng: np.random.Generator,
+                                  schedule: FaultSchedule,
+                                  n_pairs: int = 4000) -> list:
+    """`assert_deadlock_free` re-proven for EVERY epoch of a warm-fault
+    schedule: each epoch's surviving network must be deadlock-free and
+    fault-avoiding on its own.  (Packets in flight across an epoch
+    boundary are re-routed on the new epoch's tables, so acyclicity per
+    epoch is the invariant the engine's drain semantics rely on.)
+
+    Returns the per-epoch CDG edge counts.
+    """
+    edges = []
+    for cycle, faults in schedule.epochs:
+        edges.append(assert_deadlock_free(
+            net, vc_mode, nonminimal, rng, n_pairs=n_pairs,
+            faults=None if faults.is_empty else faults))
+    return edges

@@ -43,7 +43,7 @@ from dataclasses import dataclass, field
 
 import jax
 
-from .topology import FaultSet, Network
+from .topology import FaultSchedule, FaultSet, Network, compose_faults
 from .engine.state import build_lane, make_state as _engine_make_state
 from .engine.step import make_step, run_scan
 from .engine.stats import finalize
@@ -97,7 +97,8 @@ class Simulator:
     """
 
     def __init__(self, net: Network, cfg: SimConfig, pattern,
-                 inject_mask=None, faults: FaultSet | None = None):
+                 inject_mask=None,
+                 faults: FaultSet | FaultSchedule | None = None):
         from .traffic import as_pattern
         self.net, self.cfg = net, cfg
         self.terms_per_chip = net.num_terminals / net.num_chips
@@ -111,11 +112,13 @@ class Simulator:
                                      faults=faults, lane=self.lane)
 
     def run(self, offered_per_chip: float, seed: int | None = None,
-            faults: FaultSet | None = None) -> SimResult:
-        """One offered rate, sequentially.  `faults` composes on top of
-        the instance fault set for this run only (same semantics as
-        `sweep_faults` grid entries) — fault data is a traced step
-        argument, so switching fault sets reuses the compiled scan."""
+            faults: FaultSet | FaultSchedule | None = None) -> SimResult:
+        """One offered rate, sequentially.  `faults` (a cold set or a warm
+        schedule) composes on top of the instance fault state for this run
+        only (same semantics as `sweep_faults` grid entries) — fault data
+        is a traced step argument, so switching fault sets reuses the
+        compiled scan (a schedule's epoch-stacked lane compiles once per
+        epoch-count shape)."""
         cfg = self.cfg
         rate_pkt = offered_to_rate_pkt(offered_per_chip, cfg,
                                        self.terms_per_chip)
@@ -125,8 +128,7 @@ class Simulator:
         if faults is None:
             lane, chips = self.lane, self._batched._chips(self.faults)
         else:
-            if self.faults is not None:
-                faults = self.faults.union(faults)
+            faults = compose_faults(self.faults, faults)
             lane = build_lane(self.net, cfg, faults)
             chips = self._batched._chips(faults)
         state = run_scan(self.step, cycles, cfg.warmup,

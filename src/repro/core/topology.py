@@ -81,8 +81,11 @@ class Network:
 # the dead channels and routers of one degraded network; the routing layer
 # (`routing.route_tables`) rebuilds its fault-dependent tables on the
 # surviving graph and the engine threads per-lane alive masks through the
-# phase pipeline (see docs/faults.md).  Faults are cold: they exist from
-# cycle 0, there is no mid-run link death.
+# phase pipeline (see docs/faults.md).  A `FaultSet` alone is a COLD fault
+# population (broken before cycle 0); a `FaultSchedule` sequences fault
+# epochs over time — links dying mid-run while traffic is in flight — and
+# is validated per epoch so the surviving network stays routable at every
+# stage.
 
 @dataclass(frozen=True)
 class FaultSet:
@@ -151,6 +154,177 @@ class FaultSet:
         """Fraction of fabric links (mesh/local/global) that are dead."""
         fabric = net.ch_type <= GLOBAL
         return float((~self.ch_alive(net))[fabric].sum() / fabric.sum())
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """Time-varying fault state: an ordered list of `(cycle, FaultSet)`
+    epochs.  Epoch i's fault set is the FULL fault state in effect from
+    `epochs[i][0]` until the next epoch's onset cycle (not a delta), so
+    warm faults are monotone-growing sets whose union history is explicit.
+
+    The first epoch must start at cycle 0 (a pristine network is the
+    single epoch `(0, FaultSet())`; a cold fault set is `cold(faults)`).
+    Hashable and equality-comparable like `FaultSet`, so batched sweeps
+    can memoize per-schedule lane tables.
+    """
+
+    epochs: tuple = ((0, FaultSet()),)
+
+    def __post_init__(self):
+        eps = []
+        for c, f in self.epochs:
+            if isinstance(f, (list, tuple)):
+                f = FaultSet(*f)
+            if not isinstance(f, FaultSet):
+                raise ValueError(f"epoch fault entry {f!r} is not a FaultSet")
+            eps.append((int(c), f))
+        if not eps:
+            raise ValueError("a FaultSchedule needs >= 1 epoch")
+        if eps[0][0] != 0:
+            raise ValueError(
+                f"the first epoch must start at cycle 0, got {eps[0][0]}")
+        cycles = [c for c, _ in eps]
+        if any(b <= a for a, b in zip(cycles, cycles[1:])):
+            raise ValueError(
+                f"epoch onset cycles must be strictly increasing: {cycles}")
+        object.__setattr__(self, "epochs", tuple(eps))
+
+    @classmethod
+    def cold(cls, faults: "FaultSet | None" = None) -> "FaultSchedule":
+        """The single-epoch schedule equivalent to a cold fault set."""
+        return cls(((0, faults or FaultSet()),))
+
+    @property
+    def num_epochs(self) -> int:
+        return len(self.epochs)
+
+    @property
+    def final(self) -> FaultSet:
+        """The fault state of the last epoch (the most degraded network —
+        throughput divisors and failed-link fractions report this one)."""
+        return self.epochs[-1][1]
+
+    @property
+    def is_static(self) -> bool:
+        """True when every epoch carries the same fault set (the schedule
+        is equivalent to a cold `FaultSet` — the parity baseline)."""
+        return all(f == self.epochs[0][1] for _, f in self.epochs)
+
+    @property
+    def is_empty(self) -> bool:
+        return all(f.is_empty for _, f in self.epochs)
+
+    def epoch_at(self, cycle: int) -> int:
+        """Index of the epoch in effect at `cycle` (host-side mirror of
+        the engine's traced epoch selection)."""
+        idx = 0
+        for i, (c, _) in enumerate(self.epochs):
+            if cycle >= c:
+                idx = i
+        return idx
+
+    def union_base(self, base: "FaultSet | None") -> "FaultSchedule":
+        """Compose a base (cold) fault set into every epoch."""
+        if base is None or base.is_empty:
+            return self
+        return FaultSchedule(tuple((c, f.union(base))
+                                   for c, f in self.epochs))
+
+    def validate(self, net: Network, vc_mode: str = "updown") -> list:
+        """`validate_faults` per epoch — the surviving network must stay
+        routable at EVERY stage of the schedule.  Returns the per-epoch
+        summary dicts."""
+        out = []
+        for c, f in self.epochs:
+            try:
+                out.append(validate_faults(net, f, vc_mode)
+                           if not f.is_empty
+                           else dict(dead_channels=0, dead_routers=0,
+                                     alive_terminals=net.num_terminals))
+            except ValueError as e:
+                raise ValueError(
+                    f"schedule epoch at cycle {c} is unroutable: {e}"
+                ) from None
+        return out
+
+
+def as_fault_schedule(f) -> FaultSchedule:
+    """Promote None / `FaultSet` / `FaultSchedule` to a `FaultSchedule`."""
+    if f is None:
+        return FaultSchedule.cold()
+    if isinstance(f, FaultSet):
+        return FaultSchedule.cold(f)
+    if isinstance(f, FaultSchedule):
+        return f
+    raise TypeError(f"expected FaultSet/FaultSchedule/None, got {type(f)}")
+
+
+def final_faults(f) -> "FaultSet | None":
+    """The steady-state fault set of None / `FaultSet` / `FaultSchedule`
+    (None stays None; a schedule reports its last epoch)."""
+    if f is None or isinstance(f, FaultSet):
+        return f
+    return f.final
+
+
+def compose_faults(base, extra):
+    """Compose two fault states (None / `FaultSet` / `FaultSchedule`).
+
+    Set x set unions; if either side is a schedule the result is a
+    schedule over the merged onset cycles, each epoch the union of the
+    states the two sides hold at that cycle."""
+    if extra is None:
+        return base
+    if base is None:
+        return extra
+    if isinstance(base, FaultSchedule) or isinstance(extra, FaultSchedule):
+        bs, es = as_fault_schedule(base), as_fault_schedule(extra)
+        cycles = sorted({c for c, _ in bs.epochs}
+                        | {c for c, _ in es.epochs})
+        return FaultSchedule(tuple(
+            (c, bs.epochs[bs.epoch_at(c)][1]
+                .union(es.epochs[es.epoch_at(c)][1])) for c in cycles))
+    return base.union(extra)
+
+
+def wg_channel_alive_frac(net: Network, faults: "FaultSet | None"
+                          ) -> np.ndarray:
+    """float [g]: surviving fraction of each W-group's internal
+    (mesh + local) channels — the `weight` the fault-aware adaptive
+    misroute stage uses to bias candidate intermediate W-groups away from
+    degraded groups.  1.0 everywhere on a pristine network; the
+    switch-based Dragonfly counts its intra-group local channels."""
+    g = net.meta["g"]
+    faults = faults or FaultSet()
+    ch_alive = faults.ch_alive(net)
+    intra = (net.ch_type == MESH) | (net.ch_type == LOCAL)
+    if net.meta["kind"] == "switchless":
+        NW = net.meta["ab"] * net.meta["nodes_per_cg"]
+        grp = net.ch_src // NW
+    else:
+        grp = net.ch_src // net.meta["spg"]
+    out = np.ones(g, dtype=np.float64)
+    for w in range(g):
+        sel = intra & (grp == w)
+        if sel.any():
+            out[w] = ch_alive[sel].sum() / sel.sum()
+    return out
+
+
+def glob_pair_alive(net: Network, faults: "FaultSet | None") -> np.ndarray:
+    """bool [g, g]: the (w -> u) W-group pair keeps >= 1 alive wired
+    global link (diagonal and unwired pairs read True — they are never a
+    misroute hop).  Masks the adaptive misroute candidate set."""
+    g = net.meta["g"]
+    faults = faults or FaultSet()
+    if g <= 1:
+        return np.ones((g, g), dtype=bool)
+    ch_alive = faults.ch_alive(net)
+    wired = _wired_global_links(net)
+    any_wired = (wired >= 0).any(-1)
+    any_alive = ((wired >= 0) & ch_alive[np.maximum(wired, 0)]).any(-1)
+    return ~any_wired | any_alive
 
 
 def term_eject_channel(net: Network) -> np.ndarray:

@@ -17,11 +17,13 @@ from .spec import (ExperimentSpec, FaultSpec, RoutingSpec, SweepAxes,
 from .registry import (get_scenario, list_scenarios, register_scenario)
 from .runner import (Cell, ExperimentResult, GridResult, cells,
                      clear_caches, run_experiment)
+from .provenance import provenance, spec_hash
+from .roofline import RooflineSpec
 
 __all__ = [
     "ExperimentSpec", "FaultSpec", "RoutingSpec", "SweepAxes",
-    "TopologySpec", "TrafficSpec",
+    "TopologySpec", "TrafficSpec", "RooflineSpec",
     "get_scenario", "list_scenarios", "register_scenario",
     "Cell", "ExperimentResult", "GridResult", "cells", "clear_caches",
-    "run_experiment",
+    "run_experiment", "provenance", "spec_hash",
 ]

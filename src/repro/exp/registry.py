@@ -15,24 +15,38 @@ from .spec import (ExperimentSpec, FaultSpec, RoutingSpec, SweepAxes,
                    TopologySpec, TrafficSpec)
 
 _SCENARIOS: dict = {}
+_BUILDERS: dict = {}
 
 
-def register_scenario(spec: ExperimentSpec, *,
-                      replace: bool = False) -> ExperimentSpec:
+def register_scenario(spec: ExperimentSpec, *, replace: bool = False,
+                      builder=None) -> ExperimentSpec:
     """Register `spec` under `spec.name`; duplicate names raise unless
-    `replace=True`."""
+    `replace=True`.  `builder` is the scenario's scale factory
+    (`builder(fast=...) -> ExperimentSpec`), which backs the CLI's
+    `--fast` / `--full` axis; scenarios without one only run at their
+    registered default scale."""
     if spec.name in _SCENARIOS and not replace:
         raise ValueError(f"scenario {spec.name!r} already registered")
     _SCENARIOS[spec.name] = spec
+    if builder is not None:
+        _BUILDERS[spec.name] = builder
     return spec
 
 
-def get_scenario(name: str) -> ExperimentSpec:
-    try:
-        return _SCENARIOS[name]
-    except KeyError:
+def get_scenario(name: str, fast: bool | None = None) -> ExperimentSpec:
+    """The registered spec (default), or the scenario rebuilt through its
+    `*_spec(fast=...)` builder when `fast` is given."""
+    if name not in _SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; registered: "
-                       f"{list_scenarios()}") from None
+                       f"{list_scenarios()}")
+    if fast is None:
+        return _SCENARIOS[name]
+    builder = _BUILDERS.get(name)
+    if builder is None:
+        raise KeyError(
+            f"scenario {name!r} has no fast/full builder; run it without "
+            f"--fast/--full (builders exist for: {sorted(_BUILDERS)})")
+    return builder(fast=fast)
 
 
 def list_scenarios() -> list:
@@ -263,11 +277,80 @@ def smoke_faults_spec() -> ExperimentSpec:
                        warmup=67, measure=241))
 
 
+# ---------------------------------------------------------------------------
+# Warm faults (time-varying `FaultSchedule`s: links die mid-run)
+# ---------------------------------------------------------------------------
+
+def smoke_warm_faults_spec() -> ExperimentSpec:
+    """Warm-fault smoke: a quarter of the global links die at cycle 151
+    while traffic is in flight, adaptive (UGAL) routing re-routes the
+    survivors.  Tier-1 + CI fixture for the time-varying fault path (one
+    grid, one compile, 2-epoch schedules).  Global-only faults keep the
+    schedule routable under ALL THREE vc_modes, which is what the
+    per-epoch deadlock-freedom test sweeps."""
+    return ExperimentSpec(
+        name="smoke_warm_faults",
+        topologies=TopologySpec.switchless(
+            a=2, b=2, m=2, n=4, noc=2, g=5, label="smoke-warm"),
+        traffics=TrafficSpec("uniform"),
+        routings=RoutingSpec(route_mode="ugal", vc_mode="baseline",
+                             vcs_per_class=1),
+        axes=SweepAxes(rates=(0.5,), seeds=(0, 1),
+                       faults=(FaultSpec(),
+                               FaultSpec(kind="links", types=("global",),
+                                         frac=0.25, seed=2, onsets=(151,))),
+                       warmup=71, measure=311),
+        notes="warm faults: 25% of global links die mid-run (smoke)")
+
+
+def yield_curve_spec(fast: bool = True, fracs=(0.15, 0.3, 0.45),
+                     offered: float = 0.8) -> ExperimentSpec:
+    """Yield-vs-throughput on the paper's radix-32-class network (2B
+    on-wafer bandwidth): a growing fraction of the global links dies
+    MID-RUN under adversarial (worst-case) traffic, minimal vs. adaptive
+    (UGAL) routing.  Minimal routing pays the dead parallel links of each
+    W-group pair directly; the fault-aware adaptive stage re-routes
+    around them, so delivered throughput degrades more gracefully —
+    `benchmarks/bench_yield.py` records the two curves in
+    BENCH_yield.json.  Fast scale: g=3 W-groups, short cycles; full:
+    g=9, paper-scale cycle budget."""
+    g = 3 if fast else 9
+    wm = (120, 480) if fast else (800, 3200)
+    onset = wm[0] + wm[1] // 4
+    return ExperimentSpec(
+        name="yield_curve",
+        topologies=TopologySpec.preset("radix32_switchless", g=g,
+                                       cg_bw_mult=2,
+                                       label="radix32-switchless-2B"),
+        traffics=TrafficSpec("worst_case"),
+        routings=(RoutingSpec(route_mode="min", vc_mode="baseline",
+                              vcs_per_class=1),
+                  RoutingSpec(route_mode="ugal", vc_mode="baseline",
+                              vcs_per_class=1)),
+        axes=SweepAxes(
+            rates=(offered,), seeds=(0, 1),
+            faults=(FaultSpec(),) + tuple(
+                FaultSpec(kind="links", types=("global",), frac=f,
+                          seed=7 + i, onsets=(onset,))
+                for i, f in enumerate(fracs)),
+            warmup=wm[0], measure=wm[1]),
+        notes="yield curve: global links die mid-run, minimal vs adaptive")
+
+
 def _register_defaults() -> None:
-    for spec in (fig10a_spec(), fig10cf_spec(), fig11_spec(), fig12_spec(),
-                 fig13_spec(), *fig14_specs(), fig15_spec(),
-                 bench_sweep_spec(), bench_faults_spec(), smoke_spec(),
-                 smoke_fig10a_spec(), smoke_faults_spec()):
+    register_scenario(fig10a_spec(), builder=fig10a_spec)
+    register_scenario(fig10cf_spec(), builder=fig10cf_spec)
+    register_scenario(fig11_spec(), builder=fig11_spec)
+    register_scenario(fig12_spec(), builder=fig12_spec)
+    register_scenario(fig13_spec(), builder=fig13_spec)
+    for i, spec in enumerate(fig14_specs()):
+        register_scenario(spec,
+                          builder=lambda fast=True, _i=i: fig14_specs(fast)[_i])
+    register_scenario(fig15_spec(), builder=fig15_spec)
+    register_scenario(yield_curve_spec(), builder=yield_curve_spec)
+    for spec in (bench_sweep_spec(), bench_faults_spec(), smoke_spec(),
+                 smoke_fig10a_spec(), smoke_faults_spec(),
+                 smoke_warm_faults_spec()):
         register_scenario(spec)
 
 

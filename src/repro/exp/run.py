@@ -2,14 +2,19 @@
 
     python -m repro.exp.run --list
     python -m repro.exp.run --scenario smoke
+    python -m repro.exp.run --scenario fig11 --fast
     python -m repro.exp.run --scenario fig10a --out BENCH_fig10a.json
     python -m repro.exp.run --spec my_experiment.json
 
 A registered scenario is executed FROM ITS JSON FORM (serialize ->
 deserialize -> run), so every CLI invocation also proves the spec
 round-trips; `--spec` runs an arbitrary spec file with the same schema
-(`ExperimentSpec.to_dict`).  Results are written as
-``BENCH_<name>.json`` (override with ``--out``) and printed as CSV rows.
+(`ExperimentSpec.to_dict`).  `--fast` / `--full` rebuild the scenario
+through its `*_spec(fast=...)` builder (trimmed-CPU vs. paper scale);
+without either flag the registered default instance runs unchanged.
+Results are written as ``BENCH_<name>.json`` (override with ``--out``)
+with a provenance block (git rev, JAX version, backend, spec hash) and
+printed as CSV rows.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ import json
 import sys
 
 from . import registry
+from .provenance import provenance
 from .runner import run_experiment
 from .spec import ExperimentSpec
 
@@ -42,6 +48,13 @@ def main(argv=None) -> int:
                     help="output JSON path (default BENCH_<name>.json)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-grid progress on stderr")
+    scale = ap.add_mutually_exclusive_group()
+    scale.add_argument("--fast", action="store_true",
+                       help="rebuild the scenario at trimmed CPU scale "
+                            "through its *_spec(fast=True) builder")
+    scale.add_argument("--full", action="store_true",
+                       help="rebuild the scenario at paper scale "
+                            "(*_spec(fast=False))")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -51,12 +64,22 @@ def main(argv=None) -> int:
                   f"lanes/grid={spec.axes.lanes_per_grid:3d}  {spec.notes}")
         return 0
 
+    fast = True if args.fast else (False if args.full else None)
     if args.scenario:
         # round-trip through JSON: the run below executes the scenario
         # from its serialized form, not the in-memory registry object
-        payload = json.dumps(registry.get_scenario(args.scenario).to_dict())
+        try:
+            picked = registry.get_scenario(args.scenario, fast=fast)
+        except KeyError as e:
+            print(f"ERROR: {e}", file=sys.stderr)
+            return 2
+        payload = json.dumps(picked.to_dict())
         spec = ExperimentSpec.from_dict(json.loads(payload))
     else:
+        if fast is not None:
+            print("ERROR: --fast/--full only apply to registered "
+                  "scenarios (--scenario)", file=sys.stderr)
+            return 2
         with open(args.spec) as f:
             spec = ExperimentSpec.from_dict(json.load(f))
 
@@ -67,6 +90,7 @@ def main(argv=None) -> int:
     with open(out_path, "w") as f:
         json.dump(dict(
             spec=spec.to_dict(),
+            provenance=provenance(spec),
             rows=[{k: v for k, v in r.items() if k != "avg_hops_by_type"}
                   for r in rows],
             compile_counts=result.compile_counts,

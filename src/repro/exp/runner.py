@@ -23,7 +23,7 @@ import numpy as np
 
 from ..core.engine.sweep import BatchedSweep, SweepResult
 from ..core.simulator import SimConfig, SimResult
-from ..core.topology import Network
+from ..core.topology import Network, final_faults
 from ..core.traffic import TrafficPattern
 from .spec import (ExperimentSpec, FaultSpec, RoutingSpec, SweepAxes,
                    TopologySpec, TrafficSpec)
@@ -195,7 +195,8 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = False
         results = [[[flat[(fi * R + ri) * S + si] for si in range(S)]
                     for ri in range(R)] for fi in range(F)]
         fracs = [float(np.mean(
-            [0.0 if f is None else f.frac_links_failed(cell.net)
+            [0.0 if f is None
+             else final_faults(f).frac_links_failed(cell.net)
              for f in fsets[fi * R * S:(fi * R * S) + S]]))
             for fi in range(F)]
         result.grids.append(GridResult(

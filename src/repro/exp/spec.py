@@ -38,7 +38,7 @@ import numpy as np
 from ..core import topology as T
 from ..core import traffic as TR
 from ..core.simulator import SimConfig
-from ..core.topology import FaultSet, Network
+from ..core.topology import FaultSchedule, FaultSet, Network
 
 SCHEMA_VERSION = 1
 
@@ -292,6 +292,13 @@ class FaultSpec:
               seed lane draws an INDEPENDENT fault set from stream
               `1000 * seed + lane_seed` (the convention of
               benchmarks/bench_faults.py), otherwise all lanes share one.
+    onsets    the WARM (schedule) form: strictly increasing cycle numbers
+              at which the fault population grows.  Empty (default) means
+              cold faults from cycle 0; with onsets `(c1, .., ck)` the
+              sampled result is a `FaultSchedule` — pristine until `c1`,
+              then a monotone-growing fault set reaching the full
+              population (`frac` / `num` / `num_clusters`) at `ck`, each
+              epoch validated routable on top of the previous one.
     """
 
     kind: str = "none"
@@ -302,10 +309,13 @@ class FaultSpec:
     types: tuple = ("mesh", "local", "global")
     seed: int = 0
     per_seed: bool = True
+    onsets: tuple = ()
 
     def __post_init__(self):
         object.__setattr__(self, "types", tuple(self.types))
         object.__setattr__(self, "frac", float(self.frac))
+        object.__setattr__(self, "onsets",
+                           tuple(int(c) for c in self.onsets))
         if self.kind not in FAULT_KINDS:
             raise ValueError(
                 f"unknown fault kind {self.kind!r}; valid: {FAULT_KINDS}")
@@ -320,10 +330,27 @@ class FaultSpec:
             raise ValueError(
                 f"unknown link types {sorted(bad)}; valid: "
                 f"{sorted(LINK_TYPES)}")
+        if self.onsets:
+            if self.kind == "none":
+                raise ValueError("onsets need a fault kind to schedule "
+                                 "(kind='none' is pristine)")
+            if any(c <= 0 for c in self.onsets):
+                raise ValueError(
+                    f"onset cycles must be > 0 (cycle 0 is the cold "
+                    f"epoch), got {self.onsets}")
+            if any(b <= a for a, b in zip(self.onsets, self.onsets[1:])):
+                raise ValueError(
+                    f"onset cycles must be strictly increasing: "
+                    f"{self.onsets}")
 
     @property
     def is_none(self) -> bool:
         return self.kind == "none"
+
+    @property
+    def is_warm(self) -> bool:
+        """True for the schedule form (mid-run fault onset)."""
+        return bool(self.onsets)
 
     @property
     def needs_updown(self) -> bool:
@@ -341,34 +368,59 @@ class FaultSpec:
         if self.kind == "none":
             return "pristine"
         if self.kind == "links":
-            return f"links:{self.frac:g}"
-        if self.kind == "routers":
-            return f"routers:{self.num}"
-        return f"clusters:{self.num_clusters}r{self.radius}"
+            tag = f"links:{self.frac:g}"
+        elif self.kind == "routers":
+            tag = f"routers:{self.num}"
+        else:
+            tag = f"clusters:{self.num_clusters}r{self.radius}"
+        if self.onsets:
+            tag += "@" + ",".join(str(c) for c in self.onsets)
+        return tag
 
-    def sample(self, net: Network, vc_mode: str,
-               lane_seed: int = 0) -> FaultSet | None:
-        """Draw this population's `FaultSet` for one sweep-seed lane
-        (None for the pristine spec; degraded nets stay routable by the
-        samplers' greedy validation)."""
+    def sample(self, net: Network, vc_mode: str, lane_seed: int = 0
+               ) -> FaultSet | FaultSchedule | None:
+        """Draw this population for one sweep-seed lane: None for the
+        pristine spec, a cold `FaultSet` without `onsets`, a warm
+        `FaultSchedule` with them.  Degraded nets stay routable at every
+        epoch by the samplers' greedy validation (each warm increment
+        composes on top of the previous epoch via `base=`)."""
         if self.kind == "none":
             return None
         rng = np.random.default_rng(
             1000 * self.seed + lane_seed if self.per_seed else self.seed)
+        if not self.onsets:
+            return self._sample_increment(net, vc_mode, rng, 1, 1, None)
+        k = len(self.onsets)
+        epochs = [(0, FaultSet())]
+        cur = None
+        for i, c in enumerate(self.onsets):
+            cur = self._sample_increment(net, vc_mode, rng, i + 1, k, cur)
+            epochs.append((c, cur))
+        return FaultSchedule(tuple(epochs))
+
+    def _sample_increment(self, net: Network, vc_mode: str, rng,
+                          i: int, k: int, base: FaultSet | None) -> FaultSet:
+        """Grow the population to i/k of its full size on top of `base`
+        (i == k == 1 is the cold one-shot draw)."""
         if self.kind == "links":
             types = tuple(LINK_TYPES[t] for t in self.types)
-            return T.sample_link_faults(net, self.frac, rng, types=types,
-                                        vc_mode=vc_mode)
+            return T.sample_link_faults(net, self.frac / k, rng,
+                                        types=types, vc_mode=vc_mode,
+                                        base=base)
         if self.kind == "routers":
-            return T.sample_router_faults(net, self.num, rng,
-                                          vc_mode=vc_mode)
-        return T.sample_cluster_faults(net, rng,
-                                       num_clusters=self.num_clusters,
-                                       radius=self.radius, vc_mode=vc_mode)
+            delta = round(self.num * i / k) - round(self.num * (i - 1) / k)
+            return T.sample_router_faults(net, delta, rng, vc_mode=vc_mode,
+                                          base=base)
+        delta = (round(self.num_clusters * i / k)
+                 - round(self.num_clusters * (i - 1) / k))
+        return T.sample_cluster_faults(net, rng, num_clusters=delta,
+                                       radius=self.radius, vc_mode=vc_mode,
+                                       base=base)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["types"] = list(self.types)
+        d["onsets"] = list(self.onsets)
         return d
 
     @classmethod
@@ -408,6 +460,14 @@ class SweepAxes:
                              "pristine)")
         if self.warmup < 0 or self.measure < 1:
             raise ValueError("need warmup >= 0 and measure >= 1")
+        cycles = self.warmup + self.measure
+        for f in self.faults:
+            if f.onsets and max(f.onsets) >= cycles:
+                raise ValueError(
+                    f"fault spec {f.label!r} schedules an onset at cycle "
+                    f"{max(f.onsets)}, past the {cycles}-cycle run "
+                    f"(warmup + measure) — the epoch would never activate "
+                    f"while accounting reports its degradation")
 
     @property
     def lanes_per_grid(self) -> int:

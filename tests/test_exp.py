@@ -86,6 +86,62 @@ def test_fault_spec_validates():
         FaultSpec(kind="routers", num=-1)
 
 
+def test_fault_spec_warm_form():
+    # onsets need a kind, positive strictly increasing cycles
+    with pytest.raises(ValueError):
+        FaultSpec(onsets=(100,))                      # kind none
+    with pytest.raises(ValueError):
+        FaultSpec(kind="links", frac=0.1, onsets=(0,))
+    with pytest.raises(ValueError):
+        FaultSpec(kind="links", frac=0.1, onsets=(50, 50))
+    warm = FaultSpec(kind="links", frac=0.1, onsets=(50, 90))
+    assert warm.is_warm and "@50,90" in warm.label
+    assert not FaultSpec(kind="links", frac=0.1).is_warm
+    # serialization round-trips the onsets
+    assert FaultSpec.from_dict(warm.to_dict()) == warm
+    # an onset past the cycle budget would never activate while the
+    # accounting reported its degradation: rejected at the axes level
+    with pytest.raises(ValueError, match="never activate"):
+        SweepAxes(rates=(0.5,), faults=(warm,), warmup=10, measure=30)
+    SweepAxes(rates=(0.5,), faults=(warm,), warmup=10, measure=100)
+
+
+def test_fault_spec_warm_sample_is_monotone_schedule():
+    from repro.core.topology import FaultSchedule
+    net = T.build_switchless(
+        T.SwitchlessParams(a=2, b=2, m=2, n=4, noc=2, g=5), "exp-warm")
+    warm = FaultSpec(kind="links", frac=0.12, onsets=(60, 120), seed=4)
+    sch = warm.sample(net, "updown", 0)
+    assert isinstance(sch, FaultSchedule)
+    assert [c for c, _ in sch.epochs] == [0, 60, 120]
+    assert sch.epochs[0][1].is_empty
+    # monotone growth: each epoch contains the previous one
+    assert set(sch.epochs[1][1].dead_ch) <= set(sch.epochs[2][1].dead_ch)
+    assert not sch.epochs[1][1].is_empty
+    sch.validate(net, "updown")
+    # the cold form of the same spec stays a plain FaultSet
+    from repro.core.topology import FaultSet
+    cold = FaultSpec(kind="links", frac=0.12, seed=4).sample(net, "updown", 0)
+    assert isinstance(cold, FaultSet)
+
+
+def test_get_scenario_fast_full_builders():
+    full = registry.get_scenario("fig11", fast=False)
+    fast = registry.get_scenario("fig11", fast=True)
+    assert full.axes.measure > fast.axes.measure
+    # the registered default IS the builder's fast instance
+    assert registry.get_scenario("fig11") == fast
+    with pytest.raises(KeyError):
+        registry.get_scenario("smoke", fast=True)   # no builder
+    with pytest.raises(KeyError):
+        registry.get_scenario("nope")
+    # the yield curve scales from g=3 (fast) to g=9 (full)
+    yc_fast = registry.get_scenario("yield_curve", fast=True)
+    yc_full = registry.get_scenario("yield_curve", fast=False)
+    assert dict(yc_fast.topologies[0].params)["g"] == 3
+    assert dict(yc_full.topologies[0].params)["g"] == 9
+
+
 def test_sweep_axes_validate():
     with pytest.raises(ValueError):
         SweepAxes(rates=())
