@@ -1,0 +1,210 @@
+"""Standing perf-trajectory benchmark: the numbers every perf PR must move.
+
+Runs a FIXED scenario set through the declarative runner —
+
+  bench_sweep   the headline engine grid (24 lanes x 600 cycles, one
+                C-group): cycles/s is compared against the frozen
+                `BENCH_sweep.json` baseline AND bit-checked lane-for-lane
+                against engine-sequential `Simulator.run`
+  smoke         seconds-scale sanity point (tiny grid, dispatch-bound)
+  fig11         the paper's radix-16 global network (reduced W-groups)
+  yield_curve   the radix-32-class warm-fault grid (2 routing cells, so
+                it also exercises the multi-device cell round-robin)
+
+and writes `BENCH_perf.json` (repo root): per-scenario cycles/s and
+lanes/s, the compile/run wall split, device count, compile counts, and
+`speedup_vs_previous` against the previous BENCH_perf.json — the
+trajectory every future perf PR appends to.  Timings use the SECOND
+`run_experiment` call (zero compiles, steady state); compile time is
+reported separately from the first call.
+
+Unless already set in the environment, this benchmark defaults the two
+engine perf knobs to their tuned values — `REPRO_HOST_DEVICES=4` (shard
+lanes over 4 forced host devices) and `REPRO_CPU_RUNTIME=legacy` (the
+pre-thunk XLA:CPU runtime, ~4x faster on this small-op scan; see
+docs/performance.md) — and records both in the output, so the committed
+file documents exactly how it was produced.  Export either knob to
+override (e.g. `REPRO_HOST_DEVICES=1` for a single-device trajectory
+point).  `--fast` trims the heavy scenarios' cycle budgets for CI smoke
+runs; cycles/s stays comparable per (scenario, mode) pair, and
+`speedup_vs_previous` only compares matching modes.
+
+    python -m benchmarks.bench_perf
+    python -m benchmarks.bench_perf --fast          (CI perf-smoke)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_perf.json")
+
+
+def _scenarios(fast: bool):
+    """(name, spec) pairs; --fast trims the heavy grids' cycle budgets."""
+    from repro.exp import registry as SC
+    out = [("bench_sweep", SC.bench_sweep_spec()),
+           ("smoke", SC.smoke_spec())]
+    fig11 = SC.get_scenario("fig11")
+    yc = SC.get_scenario("yield_curve")
+    if fast:
+        import dataclasses
+        fig11 = fig11.with_axes(warmup=50, measure=150)
+        # keep the warm onset inside the trimmed run (scale with budget)
+        trim_onset = 30 + 120 // 4
+        faults = tuple(
+            f if f.is_none else dataclasses.replace(f, onsets=(trim_onset,))
+            for f in yc.axes.faults)
+        yc = yc.with_axes(warmup=30, measure=120, faults=faults)
+    out += [("fig11", fig11), ("yield_curve", yc)]
+    return out
+
+
+def _cycles_total(spec) -> int:
+    return spec.num_lanes * (spec.axes.warmup + spec.axes.measure)
+
+
+def _bench_scenario(name, spec):
+    from repro.exp.runner import run_experiment
+
+    first = run_experiment(spec)                    # compile + run
+    t0 = time.perf_counter()
+    steady = run_experiment(spec)                   # 0 compiles
+    wall = time.perf_counter() - t0
+    cyc = _cycles_total(spec)
+    return steady, dict(
+        lanes=spec.num_lanes,
+        grids=spec.num_grids,
+        cycles_per_lane=spec.axes.warmup + spec.axes.measure,
+        cycles_total=cyc,
+        wall_s=wall,
+        compile_s=first.compile_s,
+        first_call_compiles=sum(first.compile_counts),
+        max_compiles_per_grid=first.max_compiles_per_grid,
+        steady_compiles=sum(steady.compile_counts),
+        cycles_per_s=cyc / wall,
+        lanes_per_s=spec.num_lanes / wall,
+    )
+
+
+def _bench_sweep_parity(spec, rec, res) -> None:
+    """Headline extras for bench_sweep: bit-parity vs engine-sequential
+    runs and speedup vs the frozen BENCH_sweep.json cycles/s.  `res` is
+    the steady `ExperimentResult` the timing pass already produced."""
+    from repro.core.simulator import Simulator
+    from repro.exp.runner import cells
+
+    grid = res.grids[0]
+    [cell] = list(cells(spec))
+    rates, seeds = list(spec.axes.rates), list(spec.axes.seeds)
+    sim = Simulator(cell.net, cell.cfg, cell.pattern)
+    seq = {(r, s): sim.run(r, seed=s) for r in rates for s in seeds}
+    dev = max(
+        abs(seq[r, s].throughput_per_chip
+            - grid.result(0, i, j).throughput_per_chip)
+        / max(seq[r, s].throughput_per_chip, 1e-9)
+        for i, r in enumerate(rates) for j, s in enumerate(seeds))
+    rec["max_throughput_deviation"] = dev
+    base_path = os.path.join(os.path.dirname(DEFAULT_OUT),
+                             "BENCH_sweep.json")
+    try:
+        with open(base_path) as f:
+            base = json.load(f)["batched_cycles_per_s"]
+        rec["bench_sweep_baseline_cycles_per_s"] = base
+        rec["speedup_vs_bench_sweep_baseline"] = rec["cycles_per_s"] / base
+    except (OSError, KeyError, json.JSONDecodeError):
+        pass
+
+
+def _legacy_runtime_supported() -> bool:
+    """Probe whether this jaxlib still accepts the legacy-CPU-runtime
+    flag.  Must run in a SUBPROCESS: XLA parses XLA_FLAGS at backend
+    init and dies on unknown flags, so probing in-process would take the
+    benchmark down with it on builds that dropped the flag."""
+    import subprocess
+    import sys
+    probe = ("import os; "
+             "os.environ['XLA_FLAGS'] = '--xla_cpu_use_thunk_runtime=false'; "
+             "import jax; jax.devices()")
+    try:
+        return subprocess.run([sys.executable, "-c", probe],
+                              capture_output=True,
+                              timeout=300).returncode == 0
+    except Exception:
+        return False
+
+
+def _previous(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def bench(fast: bool = False, out_path: str = DEFAULT_OUT) -> dict:
+    import jax
+    from repro.exp.provenance import provenance
+
+    prev = _previous(out_path)
+    prev_mode_match = prev.get("mode") == ("fast" if fast else "full")
+    scenarios = {}
+    for name, spec in _scenarios(fast):
+        print(f"[bench_perf] {name}: {spec.num_lanes} lanes x "
+              f"{spec.axes.warmup + spec.axes.measure} cycles ...",
+              flush=True)
+        steady, rec = _bench_scenario(name, spec)
+        if name == "bench_sweep":
+            _bench_sweep_parity(spec, rec, steady)
+        if prev_mode_match:
+            p = prev.get("scenarios", {}).get(name)
+            if p and p.get("cycles_per_s"):
+                rec["prev_cycles_per_s"] = p["cycles_per_s"]
+                rec["speedup_vs_previous"] = (rec["cycles_per_s"]
+                                              / p["cycles_per_s"])
+        scenarios[name] = rec
+        print(f"[bench_perf]   {rec['cycles_per_s']:.0f} cycles/s, "
+              f"{rec['wall_s']:.2f}s run + {rec['compile_s']:.2f}s "
+              f"compile ({rec['first_call_compiles']} compiles)",
+              flush=True)
+    return dict(
+        mode="fast" if fast else "full",
+        device_count=len(jax.devices()),
+        repro_host_devices=os.environ.get("REPRO_HOST_DEVICES"),
+        repro_cpu_runtime=os.environ.get("REPRO_CPU_RUNTIME"),
+        scenarios=scenarios,
+        provenance=provenance(),
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_perf", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--fast", action="store_true",
+                    help="trimmed cycle budgets (CI perf-smoke)")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    args = ap.parse_args(argv)
+    # tuned defaults, recorded in the output; env overrides.  Must happen
+    # before the first repro/jax import (the knobs set XLA_FLAGS).  The
+    # legacy runtime is only defaulted on when the installed jaxlib still
+    # accepts the flag, so an unpinned-jax CI job degrades to the default
+    # runtime instead of dying at backend init.
+    os.environ.setdefault("REPRO_HOST_DEVICES", "4")
+    if "REPRO_CPU_RUNTIME" not in os.environ and _legacy_runtime_supported():
+        os.environ["REPRO_CPU_RUNTIME"] = "legacy"
+    import repro  # noqa: F401  (applies the knobs before jax init)
+    path = os.path.abspath(args.out or DEFAULT_OUT)
+    out = bench(fast=args.fast, out_path=path)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out, indent=2))
+    print(f"\nwrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

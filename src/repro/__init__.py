@@ -1,0 +1,68 @@
+"""repro: reproduction of "Switch-Less Dragonfly on Wafers".
+
+Importing any `repro` submodule runs the host-parallelism setup below
+FIRST, before JAX can initialize its backend — which is the only moment
+the CPU device count can still be chosen.
+
+REPRO_HOST_DEVICES=N (opt-in) splits the host CPU into N XLA devices
+(`--xla_force_host_platform_device_count=N`), which the batched sweep
+engine (`repro.core.engine.sweep`) uses to `shard_map` independent sweep
+lanes across devices and the experiment runner (`repro.exp.runner`) uses
+to round-robin independent grid cells.  Unset (the default) leaves JAX's
+single-CPU-device behavior untouched; real multi-device backends (TPU)
+need no flag and shard automatically.
+
+REPRO_CPU_RUNTIME=legacy (opt-in) selects XLA:CPU's pre-thunk runtime
+(`--xla_cpu_use_thunk_runtime=false`).  The engine's cycle loop is a
+long scan of many small ops, which is exactly the shape the thunk
+runtime's per-op dispatch overhead hurts most — on the bench_sweep grid
+the legacy runtime is ~4x faster (see docs/performance.md and
+BENCH_perf.json).  Results are bit-identical either way (same compiled
+HLO, different executor).  Opt-in because the flag may not exist on
+every XLA build; "thunks" explicitly keeps the default runtime.
+
+Both knobs must be read BEFORE the backend exists, hence this module.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+
+def _flag_setup() -> None:
+    add = []
+    n = os.environ.get("REPRO_HOST_DEVICES")
+    if n:
+        try:
+            count = int(n)
+        except ValueError:
+            raise ValueError(
+                f"REPRO_HOST_DEVICES={n!r} is not an integer device count")
+        if count < 1:
+            raise ValueError(f"REPRO_HOST_DEVICES={count} must be >= 1")
+        add.append(f"--xla_force_host_platform_device_count={count}")
+    runtime = os.environ.get("REPRO_CPU_RUNTIME")
+    if runtime not in (None, "", "legacy", "thunks"):
+        raise ValueError(
+            f"REPRO_CPU_RUNTIME={runtime!r} must be 'legacy' or 'thunks'")
+    if runtime == "legacy":
+        add.append("--xla_cpu_use_thunk_runtime=false")
+    if not add:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    # an explicit XLA_FLAGS setting of the same flag wins over the knob
+    add = [f for f in add if f.split("=")[0] not in flags]
+    if not add:
+        return
+    if "jax" in sys.modules:
+        # jax may already have initialized its backend, in which case the
+        # flags below are read too late and silently do nothing
+        warnings.warn(
+            "REPRO_HOST_DEVICES/REPRO_CPU_RUNTIME set but jax was "
+            "imported before repro; the flags may not take effect",
+            RuntimeWarning, stacklevel=3)
+    os.environ["XLA_FLAGS"] = " ".join([flags] + add).strip()
+
+
+_flag_setup()

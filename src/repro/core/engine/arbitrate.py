@@ -18,6 +18,10 @@ from ..topology import EJECT, Network
 from .state import (F_DEST, F_ITIME, F_META, F_MIS, F_READY, INF32,
                     SimState)
 
+# the valid `cfg.grant_impl` values — the single source of truth
+# (SimConfig and exp.RoutingSpec validate against this)
+GRANT_IMPLS = ("jnp", "pallas")
+
 
 @jax.tree_util.register_dataclass
 @dataclass
@@ -88,13 +92,16 @@ def expand_vcs(req: Requests, state: SimState, cfg) -> Requests:
 
     Also records the chosen buffer's occupancy (`ovc_count`) so the credit
     check and the push-slot computation read it densely instead of
-    re-gathering b_count."""
+    re-gathering b_count.  The class's `vpc` occupancies come back in ONE
+    `[N, vpc]` gather (gathers lower to per-row loops on CPU, so one row
+    of `vpc` values beats `vpc` rows of one — same reasoning as the
+    packed `b_pkt` record)."""
     vpc = cfg.vcs_per_class
     if vpc <= 1:
         return req.replace(ovc_count=state.b_count[req.out, req.vc])
     base = req.vc * vpc
-    occs = jnp.stack(
-        [state.b_count[req.out, base + i] for i in range(vpc)], axis=-1)
+    vc_idx = base[:, None] + jnp.arange(vpc, dtype=jnp.int32)[None, :]
+    occs = state.b_count[req.out[:, None], vc_idx]          # [N, vpc]
     return req.replace(
         vc=base + jnp.argmin(occs, axis=-1).astype(jnp.int32),
         ovc_count=jnp.min(occs, axis=-1))
@@ -138,13 +145,34 @@ def age_based_grant(req: Requests, state: SimState, consts, buf_pkts: int,
 
 
 def make_arbitrate_fn(net: Network, cfg, consts, route_kernel):
-    """Returns arbitrate(state, t, fl) -> (Requests, win_mask, won_ch_mask)."""
+    """Returns arbitrate(state, t, fl) -> (Requests, win_mask, won_ch_mask).
+
+    `cfg.grant_impl` selects the grant implementation: "jnp" (default) is
+    `age_based_grant` above — the `jax.ops.segment_min` path that doubles
+    as the oracle; "pallas" is the fused netsim kernel
+    (`repro.kernels.netsim`), bit-identical by the parity tests and the
+    TPU-ready fast path (interpret mode on CPU)."""
+    impl = getattr(cfg, "grant_impl", "jnp")
+    if impl == "pallas":
+        from ...kernels.netsim.ops import grant as netsim_grant
+
+        def grant_fn(req, state, ch_alive):
+            return netsim_grant(
+                req.out, req.itime, req.valid, req.ovc_count,
+                req.otype == EJECT, state.ch_busy, ch_alive,
+                buf_pkts=cfg.buf_pkts)
+    elif impl == "jnp":
+        def grant_fn(req, state, ch_alive):
+            return age_based_grant(req, state, consts, cfg.buf_pkts,
+                                   ch_alive)
+    else:
+        raise ValueError(f"unknown grant_impl {impl!r}; "
+                         f"valid: {GRANT_IMPLS}")
 
     def arbitrate(state, t, fl):
         req = gather_requests(state, consts, route_kernel, fl, t)
         req = expand_vcs(req, state, cfg)
-        win, won_ch = age_based_grant(req, state, consts, cfg.buf_pkts,
-                                      fl["ch_alive"])
+        win, won_ch = grant_fn(req, state, fl["ch_alive"])
         return req, win, won_ch
 
     return arbitrate

@@ -38,12 +38,20 @@ NUM_SRC_FIELDS = 3      # source-queue records pack (dest, itime, mis)
 @jax.tree_util.register_dataclass
 @dataclass
 class SimStats:
-    """Measurement accumulators (zeroed at the end of warmup)."""
+    """Measurement accumulators (zeroed at the end of warmup).
+
+    All fields are cumulative counters except `stranded`, a per-cycle
+    GAUGE: the number of head-of-line requests currently parked on the
+    -1 non-channel (packets a warm fault left with no route, see the
+    updown kernel).  Its final value is the stranded population at exit
+    — previously only inferable as "in flight when the run ended".
+    """
 
     delivered: jax.Array      # [] packets ejected
     lat_sum: jax.Array        # [] float32 sum of generation->ejection cycles
     generated: jax.Array      # [] packets generated (incl. dropped)
     dropped: jax.Array        # [] source-queue overflow
+    stranded: jax.Array       # [] gauge: requests parked on the -1 channel
     hops: jax.Array           # [NUM_CH_TYPES] channel traversals by type
 
     def replace(self, **kw) -> "SimStats":
@@ -53,7 +61,8 @@ class SimStats:
     def zeros(cls, batch: tuple[int, ...] = ()) -> "SimStats":
         z = lambda *s: jnp.zeros(batch + s, dtype=jnp.int32)
         return cls(delivered=z(), lat_sum=jnp.zeros(batch, jnp.float32),
-                   generated=z(), dropped=z(), hops=z(NUM_CH_TYPES))
+                   generated=z(), dropped=z(), stranded=z(),
+                   hops=z(NUM_CH_TYPES))
 
 
 @jax.tree_util.register_dataclass

@@ -20,7 +20,12 @@ def accumulate(stats: SimStats, req: Requests, win, consts, t) -> SimStats:
     # segment ops lower to per-row scatter loops on CPU
     onehot = win[:, None] & (req.otype[:, None] == jnp.arange(NUM_CH_TYPES))
     hops = stats.hops + onehot.astype(jnp.int32).sum(0)
-    return stats.replace(delivered=delivered, lat_sum=lat_sum, hops=hops)
+    # gauge, not a counter: head-of-line requests parked on the -1
+    # non-channel THIS cycle (warm-fault strandings; arbitration never
+    # grants them, so the last cycle's value is the population at exit)
+    stranded = (req.valid & (req.out < 0)).sum().astype(jnp.int32)
+    return stats.replace(delivered=delivered, lat_sum=lat_sum, hops=hops,
+                         stranded=stranded)
 
 
 def zero_stats(stats: SimStats) -> SimStats:
@@ -45,4 +50,5 @@ def finalize(stats: SimStats, cfg, offered_per_chip: float, chips: float):
         offered_per_chip=offered_per_chip, throughput_per_chip=thr,
         avg_latency=lat, delivered_pkts=delivered,
         generated_pkts=int(st.generated), dropped_pkts=int(st.dropped),
-        hops_by_type=hops, avg_hops_by_type=avg_hops)
+        hops_by_type=hops, avg_hops_by_type=avg_hops,
+        stranded_pkts=int(st.stranded))

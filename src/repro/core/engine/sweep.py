@@ -25,15 +25,44 @@ and fault grids are all the same one-compile dispatch.  `run` and
 `run_faults` are reshaping conveniences over it, and the declarative
 experiment runner (`repro.exp.runner`) lowers every `ExperimentSpec` grid
 to exactly one `run_lanes` call.
+
+Device parallelism: lanes are independent, so with more than one device
+(`REPRO_HOST_DEVICES=N` forces N XLA host devices on CPU; real TPU
+backends need no flag) the lane axis is `shard_map`ped across the device
+mesh — communication-free SPMD.  Lane counts that do not divide the
+device count are padded with GHOST lanes (offered rate 0, dropped before
+finalize), so the shard is always dense; each real lane's math is
+untouched, keeping sharded runs bit-identical to single-device runs.
+Every dispatch goes through an AOT compile cache, which (a) makes the
+compile-vs-run wall-time split exact (`SweepResult.compile_s` /
+`wall_s`) and (b) lets `run_lanes_async` return before the result is
+materialized, so the experiment runner can round-robin independent grid
+cells across devices (see `repro.exp.runner`).
 """
 from __future__ import annotations
 
 import functools
+import inspect
+import time
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# shard_map moved out of jax.experimental (and its replication-check
+# kwarg was renamed) across JAX releases; resolve whichever this
+# installation has so the engine imports everywhere.
+try:
+    from jax import shard_map as _shard_map          # modern JAX
+except ImportError:                                  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+_SHMAP_PARAMS = inspect.signature(_shard_map).parameters
+_SHMAP_NOCHECK = ({"check_rep": False} if "check_rep" in _SHMAP_PARAMS
+                  else {"check_vma": False} if "check_vma" in _SHMAP_PARAMS
+                  else {})
 
 from ..topology import (FaultSchedule, FaultSet, Network, as_fault_schedule,
                         compose_faults, final_faults)
@@ -42,44 +71,115 @@ from .state import build_lane, make_state, stack_lanes
 from .stats import finalize, zero_stats
 from .step import make_step
 
-# Monotone count of `run_scan_batched` (re)traces.  The body below bumps it
-# at TRACE time (Python side effects run once per jit compilation, never per
-# execution), so a delta across a call counts exactly the compiles that call
-# triggered — unlike the private `_cache_size` jit API, which is absent on
-# some JAX versions and silently made `SweepResult.compile_count` lie as 0.
+# Monotone count of batched-scan (re)traces.  `_scan_lanes` bumps it at
+# TRACE time (Python side effects run once per compilation, never per
+# execution), so a delta across a call counts exactly the compiles that
+# call triggered — unlike the private `_cache_size` jit API, which is
+# absent on some JAX versions and silently made
+# `SweepResult.compile_count` lie as 0.
 _TRACE_COUNT = [0]
+
+# AOT executable cache: one compiled batched scan per (step closure,
+# cycle budget, lane-shape signature, mesh/device placement).  Explicit
+# AOT (`jit(...).lower(...).compile()`) instead of plain `jit` calls
+# buys the exact compile-vs-run wall split and executables that can be
+# dispatched without blocking (async cell round-robin).
+_AOT_CACHE: dict = {}
 
 
 def compile_counter() -> int:
-    """Compilations of `run_scan_batched` so far in this process."""
+    """Compilations of the batched scan so far in this process."""
     return _TRACE_COUNT[0]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7),
-                   donate_argnums=(3,))
-def run_scan_batched(step, cycles, reset_at, state0, rate_pkt, keys, lanes,
-                     per_lane_faults: bool):
+def clear_aot_cache() -> None:
+    """Drop the compiled-executable cache (tests / memory)."""
+    _AOT_CACHE.clear()
+
+
+def host_devices() -> list:
+    """The devices the lane axis may spread over (all JAX devices)."""
+    return jax.devices()
+
+
+def lane_mesh() -> Mesh | None:
+    """A 1-D "lanes" mesh over the host devices, or None when the
+    process only has one device (the common un-forced CPU case)."""
+    devs = host_devices()
+    if len(devs) <= 1:
+        return None
+    return Mesh(np.array(devs), ("lanes",))
+
+
+def _key_chain(key, cycles: int):
+    """The per-cycle subkeys of one lane, pre-generated outside the main
+    scan: `key_{t+1}, sub_t = split(key_t)` — the exact chain the cycle
+    loop used to compute inline, hoisted so the simulation scan body no
+    longer interleaves a `vmap(split)` with the engine phases."""
+
+    def split(k, _):
+        k, sub = jax.random.split(k)
+        return k, sub
+
+    _, subs = jax.lax.scan(split, key, None, length=cycles)
+    return subs                                            # [cycles, 2]
+
+
+def _scan_lanes(step, cycles, reset_at, per_lane_faults,
+                state0, rate_pkt, keys, lanes):
     """Advance B lanes in lockstep; state0/keys/rate_pkt carry axis 0 = B.
 
     `lanes` is the fault pytree (`build_lane`): lane-stacked ([B, ...],
     `per_lane_faults=True`) when the lanes model different degraded
     networks, or a single shared lane dict broadcast across the batch.
     """
-    _TRACE_COUNT[0] += 1  # trace-time side effect == one jit compilation
+    _TRACE_COUNT[0] += 1  # trace-time side effect == one compilation
     lane_axis = 0 if per_lane_faults else None
+    subkeys = jax.vmap(_key_chain, in_axes=(0, None),
+                       out_axes=1)(keys, cycles)           # [cycles, B, 2]
 
-    def body(carry, t):
-        state, keys = carry
-        splits = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
-        keys, subs = splits[:, 0], splits[:, 1]
+    def body(state, t_subs):
+        t, subs = t_subs
         state, _ = jax.vmap(
             lambda s, k, r, f: step(s, (t, k, r, f)),
             in_axes=(0, 0, 0, lane_axis))(state, subs, rate_pkt, lanes)
         st = jax.lax.cond(t == reset_at, zero_stats, lambda s: s, state.stats)
-        return (state.replace(stats=st), keys), None
+        return state.replace(stats=st), None
 
-    (state, _), _ = jax.lax.scan(body, (state0, keys), jnp.arange(cycles))
+    state, _ = jax.lax.scan(body, state0, (jnp.arange(cycles), subkeys))
     return state
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7),
+                   donate_argnums=(3,))
+def run_scan_batched(step, cycles, reset_at, state0, rate_pkt, keys, lanes,
+                     per_lane_faults: bool):
+    """Single-device batched scan (kept as the stable public entry point;
+    `BatchedSweep` itself dispatches through the AOT cache, which adds
+    device sharding and the compile/run wall split)."""
+    return _scan_lanes(step, cycles, reset_at, per_lane_faults,
+                       state0, rate_pkt, keys, lanes)
+
+
+def _make_dispatch_fn(step, cycles, reset_at, per_lane_faults, mesh):
+    """The jittable whole-sweep function, `shard_map`ped over the lane
+    axis when a mesh is given (lanes are independent: no collectives, so
+    partitioning axis 0 is communication-free SPMD)."""
+    f = functools.partial(_scan_lanes, step, cycles, reset_at,
+                          per_lane_faults)
+    if mesh is not None:
+        lane_spec = PartitionSpec("lanes")
+        data_spec = lane_spec if per_lane_faults else PartitionSpec()
+        f = _shard_map(f, mesh=mesh,
+                       in_specs=(lane_spec, lane_spec, lane_spec, data_spec),
+                       out_specs=lane_spec, **_SHMAP_NOCHECK)
+    return jax.jit(f, donate_argnums=(0,))
+
+
+def _sig(tree) -> tuple:
+    """Hashable shape/dtype signature of a pytree (AOT cache key part)."""
+    return (jax.tree.structure(tree),
+            tuple((l.shape, str(l.dtype)) for l in jax.tree.leaves(tree)))
 
 
 def offered_to_rate_pkt(offered_per_chip: float, cfg,
@@ -97,6 +197,16 @@ def offered_to_rate_pkt(offered_per_chip: float, cfg,
     return rate
 
 
+class LaneRun(NamedTuple):
+    """The outcome of one `run_lanes` dispatch."""
+
+    results: list          # one SimResult per lane, in lane order
+    wall_s: float          # execution wall time (compile excluded)
+    compile_s: float       # trace + compile wall time (0.0 on cache hit)
+    compile_count: int     # jit compilations this dispatch triggered
+    fault_sets: list       # composed per-lane fault states (None=pristine)
+
+
 @dataclass
 class SweepResult:
     """SimResults on the (rate x seed) grid, plus curve-level reductions.
@@ -104,6 +214,10 @@ class SweepResult:
     For fault sweeps (`BatchedSweep.run_faults`) the row axis is the fault
     grid instead of the rate grid: `rates[i]` repeats the common offered
     load and `fault_fracs[i]` labels row i with its failed-link fraction.
+
+    `wall_s` is EXECUTION time only; trace + compile time is `compile_s`
+    (0.0 when the dispatch was an executable-cache hit), so first-call
+    timings no longer conflate the two.
     """
 
     rates: list[float]
@@ -111,6 +225,7 @@ class SweepResult:
     results: list[list]        # [num_rates][num_seeds] of SimResult
     compile_count: int = 0     # jit compilations this sweep triggered
     wall_s: float = 0.0
+    compile_s: float = 0.0
     fault_fracs: list | None = None   # per-row failed-link fraction (faults)
 
     def result(self, rate_idx: int, seed_idx: int = 0):
@@ -141,12 +256,64 @@ class SweepResult:
                 delivered_pkts=sum(r.delivered_pkts for r in row) // n,
                 generated_pkts=sum(r.generated_pkts for r in row) // n,
                 dropped_pkts=sum(r.dropped_pkts for r in row) // n,
-                hops_by_type=hops, avg_hops_by_type=avg_hops))
+                hops_by_type=hops, avg_hops_by_type=avg_hops,
+                stranded_pkts=sum(r.stranded_pkts for r in row) // n))
         return out
 
     def saturation_throughput(self) -> float:
         """Max seed-averaged accepted throughput over the sweep."""
         return max(r.throughput_per_chip for r in self.mean_over_seeds())
+
+
+class _LanePlan:
+    """A prepared, placed, and compiled — but not yet executed — lane
+    dispatch (`BatchedSweep.warm_compile`).  Single-use: execution
+    donates the plan's initial state buffer.  `compile_s` and
+    `compile_count` are zero when the executable came from the AOT
+    cache."""
+
+    __slots__ = ("lane_triples", "fault_sets", "args", "compiled",
+                 "compile_s", "compile_count", "used")
+
+    def __init__(self, lane_triples, fault_sets, args, compiled,
+                 compile_s, compile_count):
+        self.lane_triples = lane_triples
+        self.fault_sets = fault_sets
+        self.args = args
+        self.compiled = compiled
+        self.compile_s = compile_s
+        self.compile_count = compile_count
+        self.used = False
+
+
+class _PendingLanes:
+    """A dispatched-but-unmaterialized `run_lanes` call.
+
+    The compiled executable has been enqueued (JAX dispatch is async);
+    `finish()` blocks on the device result and builds the per-lane
+    `SimResult`s.  `wall_s` therefore measures dispatch -> materialized,
+    which for overlapped (round-robined) cells includes time the device
+    spent interleaved with other work.
+    """
+
+    def __init__(self, sweep, stats, num_lanes, lane_triples, fault_sets,
+                 compile_s, compile_count, t0):
+        self._sweep, self._stats = sweep, stats
+        self._B, self._lanes = num_lanes, lane_triples
+        self._fsets = fault_sets
+        self._compile_s, self._compiles = compile_s, compile_count
+        self._t0 = t0
+
+    def finish(self) -> LaneRun:
+        stats = jax.tree.map(np.asarray, self._stats)      # blocks
+        wall = time.perf_counter() - self._t0
+        cfg = self._sweep.cfg
+        pick = lambda i: jax.tree.map(lambda x: x[i], stats)
+        results = [finalize(pick(i), cfg, self._lanes[i][0],
+                            self._sweep._chips(self._fsets[i]))
+                   for i in range(self._B)]     # ghost pad lanes excluded
+        return LaneRun(results, wall, self._compile_s, self._compiles,
+                       self._fsets)
 
 
 class BatchedSweep:
@@ -188,67 +355,72 @@ class BatchedSweep:
                  else self._inj_mask & faults.term_alive(self.net))
         return self.net.num_chips * alive.sum() / self.net.num_terminals
 
-    @staticmethod
-    def _lane_sharding(B: int):
-        """NamedSharding splitting the lane axis over host devices (or None).
+    def _plan(self, lanes, device=None) -> "_LanePlan":
+        """Prepare, place, and compile (cache-aware) ONE batched scan
+        over the (ghost-padded) lane axis — without executing it.
 
-        Lanes are independent, so partitioning axis 0 is communication-free
-        SPMD: with `--xla_force_host_platform_device_count=N` (or real
-        multi-device backends) the whole sweep parallelizes across cores.
+        `device=None` shards lanes over the full device mesh (no-op with
+        one device); an explicit `device` pins the whole dispatch there
+        (the runner's cell round-robin).  The returned plan is
+        single-use: executing it donates its initial state buffer.
         """
-        devs = jax.devices()
-        if len(devs) <= 1 or B % len(devs) != 0:
-            return None
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec
-        mesh = Mesh(np.array(devs), ("lanes",))
-        return NamedSharding(mesh, PartitionSpec("lanes"))
-
-    def _run_lanes(self, lane_rates, lane_keys, lanes, per_lane_faults):
-        """One `run_scan_batched` dispatch; returns (stats [B], wall_s,
-        compiles)."""
-        import time
+        lane_triples, lane_rates, lane_keys, lane_data, per_lane_faults, \
+            fsets = self._prepare_lanes(lanes)
         cfg = self.cfg
-        B = len(lane_rates)
-        state0 = make_state(self.net, cfg, self.NV, batch=(B,))
-        sharding = self._lane_sharding(B)
-        if sharding is not None:
-            state0 = jax.device_put(state0, sharding)
-            lane_rates = jax.device_put(lane_rates, sharding)
-            lane_keys = jax.device_put(lane_keys, sharding)
+        B = int(lane_rates.shape[0])
+        mesh = lane_mesh() if device is None and B > 1 else None
+        nd = int(mesh.devices.size) if mesh is not None else 1
+        pad = (-B) % nd
+        if pad:
+            # ghost lanes: offered rate 0 (inject generates nothing), any
+            # valid key/fault data; their stats are never read back
+            lane_rates = jnp.concatenate(
+                [lane_rates, jnp.zeros((pad,), lane_rates.dtype)])
+            lane_keys = jnp.concatenate(
+                [lane_keys,
+                 jnp.broadcast_to(lane_keys[:1],
+                                  (pad,) + lane_keys.shape[1:])])
             if per_lane_faults:
-                lanes = jax.device_put(lanes, sharding)
+                lane_data = jax.tree.map(
+                    lambda x: jnp.concatenate(
+                        [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]),
+                    lane_data)
+        state0 = make_state(self.net, cfg, self.NV, batch=(B + pad,))
+        if mesh is not None:
+            lane_sh = NamedSharding(mesh, PartitionSpec("lanes"))
+            repl_sh = NamedSharding(mesh, PartitionSpec())
+            state0 = jax.device_put(state0, lane_sh)
+            lane_rates = jax.device_put(lane_rates, lane_sh)
+            lane_keys = jax.device_put(lane_keys, lane_sh)
+            lane_data = jax.device_put(
+                lane_data, lane_sh if per_lane_faults else repl_sh)
+        elif device is not None:
+            state0, lane_rates, lane_keys, lane_data = jax.device_put(
+                (state0, lane_rates, lane_keys, lane_data), device)
         cycles = cfg.warmup + cfg.measure
-        compiles0 = compile_counter()
-        t0 = time.perf_counter()
-        state = run_scan_batched(self.step, cycles, cfg.warmup,
-                                 state0, lane_rates, lane_keys, lanes,
-                                 per_lane_faults)
-        stats = jax.tree.map(np.asarray, state.stats)
-        wall = time.perf_counter() - t0
-        return stats, wall, compile_counter() - compiles0
+        cache_key = (self.step, cycles, cfg.warmup, per_lane_faults, mesh,
+                     device, _sig((state0, lane_rates, lane_keys,
+                                   lane_data)))
+        compiled = _AOT_CACHE.get(cache_key)
+        compile_s = 0.0
+        compiles = 0
+        if compiled is None:
+            fn = _make_dispatch_fn(self.step, cycles, cfg.warmup,
+                                   per_lane_faults, mesh)
+            before = _TRACE_COUNT[0]
+            t0 = time.perf_counter()
+            compiled = fn.lower(state0, lane_rates, lane_keys,
+                                lane_data).compile()
+            compile_s = time.perf_counter() - t0
+            compiles = _TRACE_COUNT[0] - before
+            _AOT_CACHE[cache_key] = compiled
+        return _LanePlan(lane_triples, fsets,
+                         (state0, lane_rates, lane_keys, lane_data),
+                         compiled, compile_s, compiles)
 
-    def run_lanes(self, lanes):
-        """The fully general lane axis: one compiled batched scan over an
-        arbitrary list of `(offered_per_chip, seed, faults)` lane triples,
-        where `faults` is a `FaultSet`, a warm `FaultSchedule`, or None.
-
-        Each lane's fault state COMPOSES on top of the sweep's base
-        `faults` (`None` means "just the base faults").  When any lane
-        carries a `FaultSchedule`, EVERY lane is promoted to a schedule
-        (cold sets become single-epoch schedules) so the lane pytrees
-        share one epoch-stacked structure — a mixed warm/cold
-        (rates x seeds x schedules) grid still stacks into one dense
-        batch.  When every composed lane ends up with the same fault state
-        the shared-lane fast path is used (the fault pytree broadcasts
-        instead of stacking), otherwise each distinct state builds its
-        lane tables once and the step vmaps over the stacked lane axis —
-        either way ONE `run_scan_batched` dispatch, at most one jit
-        compile.
-
-        Returns `(results, wall_s, compiles, fault_sets)` where `results`
-        is one `SimResult` per lane (in order) and `fault_sets` holds the
-        composed per-lane fault states (None = pristine).
-        """
+    def _prepare_lanes(self, lanes):
+        """Compose/sample per-lane fault data; returns the dense lane
+        arrays plus the composed fault states."""
         cfg = self.cfg
         lanes = list(lanes)
         if not lanes:
@@ -274,12 +446,68 @@ class BatchedSweep:
                     memo[f] = build_lane(self.net, cfg, f)
             lane_data = stack_lanes([memo[f] for f in fsets])
             per_lane = True
-        stats, wall, compiles = self._run_lanes(
-            lane_rates, lane_keys, lane_data, per_lane_faults=per_lane)
-        pick = lambda i: jax.tree.map(lambda x: x[i], stats)
-        results = [finalize(pick(i), cfg, lanes[i][0], self._chips(fsets[i]))
-                   for i in range(len(lanes))]
-        return results, wall, compiles, fsets
+        return lanes, lane_rates, lane_keys, lane_data, per_lane, fsets
+
+    def warm_compile(self, lanes, device=None) -> "_LanePlan":
+        """Prepare and compile the lane grid without executing it.
+
+        The experiment runner warms EVERY cell before dispatching any
+        execution, so a round-robined cell's wall_s window never
+        contains another cell's host-blocking compilation; the returned
+        plan is then handed back to `run_lanes_async(plan=...)`, reusing
+        the prepared lane arrays (no second fault-table build)."""
+        return self._plan(lanes, device=device)
+
+    def run_lanes_async(self, lanes=None, device=None,
+                        plan: "_LanePlan | None" = None) -> _PendingLanes:
+        """Dispatch the lane grid without blocking on the result.
+
+        Compilation (cache-miss only) still blocks the host, but the
+        execution is enqueued asynchronously — the caller can dispatch
+        further independent grids (e.g. on other devices) and `finish()`
+        them in order.  `device` pins the whole grid to one device
+        instead of sharding it over the mesh; `plan` executes an
+        already-warm `warm_compile` plan instead of preparing anew."""
+        if plan is None:
+            plan = self._plan(lanes, device=device)
+        if plan.used:
+            raise ValueError(
+                "a lane plan is single-use: its initial state buffer is "
+                "donated at execution — warm_compile a fresh one")
+        plan.used = True
+        t0 = time.perf_counter()
+        state = plan.compiled(*plan.args)
+        plan.args = None      # the donated state buffer is gone anyway
+        return _PendingLanes(self, state.stats, len(plan.lane_triples),
+                             plan.lane_triples, plan.fault_sets,
+                             plan.compile_s, plan.compile_count, t0)
+
+    def run_lanes(self, lanes, device=None) -> LaneRun:
+        """The fully general lane axis: one compiled batched scan over an
+        arbitrary list of `(offered_per_chip, seed, faults)` lane triples,
+        where `faults` is a `FaultSet`, a warm `FaultSchedule`, or None.
+
+        Each lane's fault state COMPOSES on top of the sweep's base
+        `faults` (`None` means "just the base faults").  When any lane
+        carries a `FaultSchedule`, EVERY lane is promoted to a schedule
+        (cold sets become single-epoch schedules) so the lane pytrees
+        share one epoch-stacked structure — a mixed warm/cold
+        (rates x seeds x schedules) grid still stacks into one dense
+        batch.  When every composed lane ends up with the same fault state
+        the shared-lane fast path is used (the fault pytree broadcasts
+        instead of stacking), otherwise each distinct state builds its
+        lane tables once and the step vmaps over the stacked lane axis —
+        either way ONE dispatch, at most one jit compile.
+
+        With multiple devices the lane axis is `shard_map`ped across
+        them (ghost-padded to a device multiple); results stay lane-for-
+        lane bit-identical to the single-device run.
+
+        Returns a `LaneRun` (`results` one `SimResult` per lane in
+        order, the compile/run wall split, and the composed per-lane
+        fault states).
+        """
+        return self.run_lanes_async(lanes, device=device).finish()
 
     def run(self, rates, seeds=None) -> SweepResult:
         cfg = self.cfg
@@ -290,11 +518,12 @@ class BatchedSweep:
             raise ValueError(
                 f"sweep needs >= 1 rate and >= 1 seed (got {R} rates, "
                 f"{S} seeds)")
-        flat, wall, compiles, _ = self.run_lanes(
-            [(r, s, None) for r in rates for s in seeds])
+        run = self.run_lanes([(r, s, None) for r in rates for s in seeds])
+        flat = run.results
         results = [[flat[i * S + j] for j in range(S)] for i in range(R)]
         return SweepResult(rates=rates, seeds=seeds, results=results,
-                           compile_count=compiles, wall_s=wall)
+                           compile_count=run.compile_count,
+                           wall_s=run.wall_s, compile_s=run.compile_s)
 
     def run_faults(self, offered_per_chip: float, fault_grid,
                    seeds=None) -> SweepResult:
@@ -321,14 +550,16 @@ class BatchedSweep:
         if not rows or any(len(r) != S for r in rows):
             raise ValueError("fault_grid rows must match the seed count")
         F = len(rows)
-        flat, wall, compiles, fsets = self.run_lanes(
+        run = self.run_lanes(
             [(offered_per_chip, seeds[j], rows[i][j])
              for i in range(F) for j in range(S)])
+        flat, fsets = run.results, run.fault_sets
         results = [[flat[i * S + j] for j in range(S)] for i in range(F)]
         fracs = [float(np.mean(
             [0.0 if f is None
              else final_faults(f).frac_links_failed(self.net)
              for f in fsets[i * S:(i + 1) * S]])) for i in range(F)]
         return SweepResult(rates=[offered_per_chip] * F, seeds=seeds,
-                           results=results, compile_count=compiles,
-                           wall_s=wall, fault_fracs=fracs)
+                           results=results, compile_count=run.compile_count,
+                           wall_s=run.wall_s, compile_s=run.compile_s,
+                           fault_fracs=fracs)

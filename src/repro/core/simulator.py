@@ -44,6 +44,7 @@ from dataclasses import dataclass, field
 import jax
 
 from .topology import FaultSchedule, FaultSet, Network, compose_faults
+from .engine.arbitrate import GRANT_IMPLS
 from .engine.state import build_lane, make_state as _engine_make_state
 from .engine.step import make_step, run_scan
 from .engine.stats import finalize
@@ -62,6 +63,16 @@ class SimConfig:
     route_mode: str = "min"            # "min" | "val" | "val_restricted" | "ugal"
     ugal_threshold: int = 3
     seed: int = 0
+    # arbitration grant implementation: "jnp" (the jax.ops.segment_min
+    # path, default and oracle) or "pallas" (the fused netsim kernel,
+    # `repro.kernels.netsim` — bit-identical, TPU-ready fast path)
+    grant_impl: str = "jnp"
+
+    def __post_init__(self):
+        if self.grant_impl not in GRANT_IMPLS:
+            raise ValueError(
+                f"unknown grant_impl {self.grant_impl!r}; "
+                f"valid: {GRANT_IMPLS}")
 
     @property
     def nonminimal(self) -> bool:
@@ -78,6 +89,8 @@ class SimResult:
     dropped_pkts: int              # source-queue overflow (backlog)
     hops_by_type: dict
     avg_hops_by_type: dict = field(default_factory=dict)
+    stranded_pkts: int = 0         # parked on the -1 non-channel at exit
+                                   # (warm faults left them unroutable)
 
     def row(self) -> str:
         return (f"{self.offered_per_chip:.3f},{self.throughput_per_chip:.3f},"

@@ -9,6 +9,17 @@ budget) reuse one compiled `BatchedSweep` through a process-wide cache,
 so re-running a spec (or running a spec that overlaps an earlier one)
 costs zero new compiles.
 
+Device parallelism: with one device (the un-forced CPU default) cells
+run serially and each grid shards nothing.  With multiple devices
+(`REPRO_HOST_DEVICES=N`, or a real multi-device backend) a single-cell
+spec shard_maps its lane axis over the whole mesh, while a multi-cell
+spec ROUND-ROBINS cells across devices instead: every cell's grid is
+dispatched asynchronously to device `i % ndev` and materialized
+afterwards, so independent grids execute concurrently (dispatch is
+async; only compilation serializes on the host).  Either way results
+are lane-for-lane identical to the serial single-device run — device
+placement never changes per-lane math.
+
 `cells(spec)` exposes the same lowering without running anything — the
 hook benchmarks use to build sequential/legacy baselines from the exact
 (net, cfg, pattern) a spec denotes.
@@ -83,7 +94,10 @@ class GridResult:
     fault_fracs: list           # [F] mean failed-link fraction over seeds
     results: list               # [F][R][S] of SimResult
     compile_count: int = 0
-    wall_s: float = 0.0
+    wall_s: float = 0.0         # execution wall (compile excluded); for
+                                # round-robined cells this spans dispatch
+                                # -> materialized, overlapping other cells
+    compile_s: float = 0.0      # trace+compile wall (0.0 on cache reuse)
 
     def result(self, fault_idx: int, rate_idx: int,
                seed_idx: int = 0) -> SimResult:
@@ -107,6 +121,10 @@ class ExperimentResult:
     @property
     def wall_s(self) -> float:
         return sum(g.wall_s for g in self.grids)
+
+    @property
+    def compile_s(self) -> float:
+        return sum(g.compile_s for g in self.grids)
 
     @property
     def compile_counts(self) -> list:
@@ -169,12 +187,31 @@ def _fault_rows(spec: ExperimentSpec, topo: TopologySpec, net: Network,
 def run_experiment(spec: ExperimentSpec, verbose: bool = False
                    ) -> ExperimentResult:
     """Run every grid of `spec`; each grid is one batched-engine dispatch
-    (compile_count <= 1 per grid, == 0 on shared-compile reuse)."""
+    (compile_count <= 1 per grid, == 0 on shared-compile reuse).
+
+    Multi-cell specs on multi-device hosts round-robin their cells over
+    the devices (async dispatch, materialized after all cells are in
+    flight); single-cell specs shard the lane axis over the whole mesh
+    inside `run_lanes` instead."""
+    import jax
+
     axes = spec.axes
     rates, seeds = list(axes.rates), list(axes.seeds)
     R, S, F = len(rates), len(seeds), len(axes.faults)
     result = ExperimentResult(spec)
-    for cell in cells(spec):
+    cell_list = list(cells(spec))
+    devs = jax.devices()
+    # round-robin cells onto devices only when there are enough cells to
+    # occupy them; with fewer cells than devices, sharding each cell's
+    # lane axis over the whole mesh uses the machine better than pinning
+    # cells to single devices and idling the rest
+    round_robin = len(devs) > 1 and len(cell_list) >= len(devs)
+    # pass 1: lower every cell's grid and warm the AOT executable cache.
+    # All host-blocking compilation happens HERE, before any execution is
+    # in flight, so the per-cell wall_s measured below is execution only
+    # (a round-robined cell's window never spans another cell's compile).
+    plans = []
+    for i, cell in enumerate(cell_list):
         key = (cell.topology, cell.routing, cell.traffic,
                axes.warmup, axes.measure, seeds[0])
         sweep = _SWEEP_CACHE.get(key)
@@ -187,11 +224,25 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = False
                  for fi in range(F)
                  for r in rates
                  for si, s in enumerate(seeds)]
+        device = devs[i % len(devs)] if round_robin else None
+        plans.append((cell, sweep, device,
+                      sweep.warm_compile(lanes, device=device)))
+    # pass 2: dispatch every cell (async; plans are already compiled)
+    pending = []
+    for cell, sweep, device, plan in plans:
         if verbose:
+            where = f" -> {device}" if device is not None else ""
             print(f"[exp:{spec.name}] {cell.topology.label} "
                   f"{cell.routing.label} {cell.traffic.label}: "
-                  f"{len(lanes)} lanes ...", file=sys.stderr, flush=True)
-        flat, wall, compiles, fsets = sweep.run_lanes(lanes)
+                  f"{len(plan.lane_triples)} lanes{where} "
+                  f"(compiles={plan.compile_count}) ...",
+                  file=sys.stderr, flush=True)
+        pending.append((cell, sweep.run_lanes_async(plan=plan)))
+    # pass 3: materialize, in dispatch order
+    for cell, pend in pending:
+        run = pend.finish()
+        compile_s, compiles = run.compile_s, run.compile_count
+        flat, fsets = run.results, run.fault_sets
         results = [[[flat[(fi * R + ri) * S + si] for si in range(S)]
                     for ri in range(R)] for fi in range(F)]
         fracs = [float(np.mean(
@@ -204,8 +255,12 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = False
             traffic=cell.traffic, rates=rates, seeds=seeds,
             fault_labels=[f.label for f in axes.faults],
             fault_fracs=fracs, results=results,
-            compile_count=compiles, wall_s=wall))
+            compile_count=compiles, wall_s=run.wall_s,
+            compile_s=compile_s))
         if verbose:
-            print(f"[exp:{spec.name}]   done in {wall:.1f}s "
-                  f"(compiles={compiles})", file=sys.stderr, flush=True)
+            print(f"[exp:{spec.name}]   {cell.topology.label} "
+                  f"{cell.routing.label} {cell.traffic.label} done in "
+                  f"{run.wall_s:.1f}s (compiles={compiles}, "
+                  f"compile_s={compile_s:.1f})",
+                  file=sys.stderr, flush=True)
     return result

@@ -37,6 +37,7 @@ import numpy as np
 
 from ..core import topology as T
 from ..core import traffic as TR
+from ..core.engine.arbitrate import GRANT_IMPLS
 from ..core.simulator import SimConfig
 from ..core.topology import FaultSchedule, FaultSet, Network
 
@@ -234,8 +235,15 @@ class RoutingSpec:
     pkt_len: int = 4
     buf_pkts: int = 8
     srcq_pkts: int = 64
+    # arbitration grant implementation: "jnp" (segment_min path, the
+    # default and oracle) | "pallas" (fused repro.kernels.netsim kernel)
+    grant_impl: str = "jnp"
 
     def __post_init__(self):
+        if self.grant_impl not in GRANT_IMPLS:
+            raise ValueError(
+                f"unknown grant_impl {self.grant_impl!r}; "
+                f"valid: {GRANT_IMPLS}")
         if self.route_mode not in ROUTE_MODES:
             raise ValueError(
                 f"unknown route_mode {self.route_mode!r}; "
@@ -267,7 +275,8 @@ class RoutingSpec:
             srcq_pkts=self.srcq_pkts, vcs_per_class=self.vcs_per_class,
             warmup=axes.warmup, measure=axes.measure,
             vc_mode=self.vc_mode, route_mode=self.route_mode,
-            ugal_threshold=self.ugal_threshold, seed=axes.seeds[0])
+            ugal_threshold=self.ugal_threshold, seed=axes.seeds[0],
+            grant_impl=self.grant_impl)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -1,0 +1,21 @@
+"""Fused Pallas kernel for the network-simulator arbitration hot spot.
+
+The engine's grant stage (`repro.core.engine.arbitrate.age_based_grant`)
+is a chain of row-wise masking (credit / busy / alive / validity) and two
+`jax.ops.segment_min` passes (oldest `itime` wins, row ids break ties) —
+on CPU each segment op lowers to a per-row scatter loop, and on TPU the
+unfused chain round-trips HBM between every op.  `netsim.ops.grant` fuses
+the whole stage into ONE `pallas_call`: eligibility masking plus both
+segment-min passes run as VPU-friendly broadcast-compare reductions over
+(row-chunk x channel) tiles, with the per-channel minima persisted in
+VMEM scratch across the grid.
+
+Selected by `SimConfig(grant_impl="pallas")`; the default "jnp" path is
+the oracle, and `ref.grant_ref` mirrors it standalone.  Bit-identical in
+interpret mode (CPU) by tests/test_netsim_kernel.py; interpret=False is
+the TPU fast path.
+"""
+from .ops import grant
+from .ref import grant_ref
+
+__all__ = ["grant", "grant_ref"]

@@ -1,0 +1,131 @@
+"""Pallas kernel for age-based output arbitration (the grant hot spot).
+
+One `pallas_call` fuses the whole grant stage: per-row eligibility
+(valid & routable & channel-not-busy & (credit | eject) & channel-alive)
+and BOTH segment-min passes (pass 1: oldest `itime` per output channel;
+pass 2: smallest row id among the age ties), finishing with the winner
+mask.  Segment ops are recast as broadcast-compare reductions — a
+`[chunk, Es]` one-hot of requested channels against a channel-id iota —
+so there is no scatter anywhere: everything is VPU elementwise work plus
+row-axis minima, with the per-channel minima (`m1`, `m2`) persisted in
+VMEM scratch across the grid.
+
+Grid: `(3 phases, row chunks)`, phases outermost and strictly ordered
+(`dimension_semantics=("arbitrary", "arbitrary")`):
+
+  phase 0   accumulate m1[c] = min itime over eligible rows requesting c
+  phase 1   accumulate m2[c] = min row id over rows tying m1[c]
+  phase 2   emit win[row] = tie & (row id == m2[out_row]) and
+            won_ch[c] = m1[c] != INF
+
+Phase 2 re-derives the eligibility mask from the same inputs instead of
+storing a `[N]` intermediate — recompute is cheaper than another VMEM
+round-trip, and bit-exactness is trivial (integer ops only).  All inputs
+are int32 (bools widened by ops.py); `itime` must be < INF32 = 2^31 - 1,
+which holds for any cycle count.
+
+vmap (the engine batches lanes) adds a leading batch grid dimension via
+the standard pallas batching rule; the scratch re-initialization at
+(phase 0, chunk 0) makes each lane's accumulation independent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# plain int (not a jnp scalar): pallas kernels may not capture array
+# constants, and int32 promotion keeps the comparisons exact
+INF32 = 2**31 - 1
+
+# renamed across JAX versions (TPUCompilerParams -> CompilerParams)
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def _kernel(out_ref, itime_ref, valid_ref, ovc_ref, isej_ref,
+            busy_ref, alive_ref, win_ref, won_ref, m1_ref, m2_ref,
+            *, chunk, num_seg, buf_pkts):
+    phase = pl.program_id(0)
+    ci = pl.program_id(1)
+
+    out = out_ref[0, :]                                    # [C]
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, num_seg), 1)
+    onehot = out[:, None] == seg_ids                       # [C, Es]
+
+    # eligibility: the credit/busy/alive masking, with the per-channel
+    # gathers (`busy[out]`, `alive[out]`) recast as one-hot row sums
+    busy_row = jnp.sum(jnp.where(onehot, busy_ref[0, :][None, :], 0), axis=1)
+    alive_row = jnp.sum(jnp.where(onehot, alive_ref[0, :][None, :], 0),
+                        axis=1)
+    credit = (ovc_ref[0, :] < buf_pkts) | (isej_ref[0, :] != 0)
+    ok = ((valid_ref[0, :] != 0) & (out >= 0) & (busy_row == 0)
+          & credit & (alive_row != 0))
+    mask = onehot & ok[:, None]
+    itime = itime_ref[0, :]
+
+    @pl.when((phase == 0) & (ci == 0))
+    def _init_m1():
+        m1_ref[...] = jnp.full_like(m1_ref, INF32)
+
+    @pl.when(phase == 0)
+    def _pass_age():
+        cmin = jnp.min(jnp.where(mask, itime[:, None], INF32), axis=0)
+        m1_ref[...] = jnp.minimum(m1_ref[...], cmin[None, :])
+
+    # m1 gathered back per row: exactly one one-hot match per valid row,
+    # so the masked sum IS the gather (stranded out=-1 rows sum to 0 and
+    # are already masked out by `ok`)
+    m1_row = jnp.sum(jnp.where(onehot, m1_ref[0, :][None, :], 0), axis=1)
+    tie = ok & (itime == m1_row)
+    ridx = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+
+    @pl.when((phase == 1) & (ci == 0))
+    def _init_m2():
+        m2_ref[...] = jnp.full_like(m2_ref, INF32)
+
+    @pl.when(phase == 1)
+    def _pass_tiebreak():
+        cmin = jnp.min(
+            jnp.where(mask & tie[:, None], ridx[:, None], INF32), axis=0)
+        m2_ref[...] = jnp.minimum(m2_ref[...], cmin[None, :])
+
+    @pl.when(phase == 2)
+    def _emit():
+        m2_row = jnp.sum(jnp.where(onehot, m2_ref[0, :][None, :], 0),
+                         axis=1)
+        win_ref[0, :] = (tie & (ridx == m2_row)).astype(jnp.int32)
+        won_ref[...] = (m1_ref[...] != INF32).astype(jnp.int32)
+
+
+def grant_pallas(out, itime, valid, ovc, isej, busy, alive,
+                 *, buf_pkts, chunk, interpret=True):
+    """Raw tiled dispatch; padding/reshaping is ops.py's responsibility.
+
+    Row inputs are `[nc, chunk]` int32 (padded rows carry valid=0);
+    `busy`/`alive` are `[1, Es]` int32 with Es a lane-width multiple of
+    E + 1.  Returns (win `[nc, chunk]`, won_ch `[1, Es]`) int32 masks.
+    """
+    nc, C = out.shape
+    Es = busy.shape[1]
+    kern = functools.partial(_kernel, chunk=C, num_seg=Es,
+                             buf_pkts=buf_pkts)
+    row = pl.BlockSpec((1, C), lambda p, c: (c, 0))
+    chan = pl.BlockSpec((1, Es), lambda p, c: (0, 0))
+    win, won = pl.pallas_call(
+        kern,
+        grid=(3, nc),
+        in_specs=[row, row, row, row, row, chan, chan],
+        out_specs=[row, chan],
+        out_shape=[jax.ShapeDtypeStruct((nc, C), jnp.int32),
+                   jax.ShapeDtypeStruct((1, Es), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, Es), jnp.int32),
+                        pltpu.VMEM((1, Es), jnp.int32)],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(out, itime, valid, ovc, isej, busy, alive)
+    return win, won

@@ -1,0 +1,59 @@
+"""Padding/layout wrapper: engine-facing entry point for the fused grant.
+
+Pads the request rows to a whole number of row chunks (ghost rows are
+`valid=0`, so they never win) and the channel axis to a lane-width
+multiple of E + 1 (the +1 is the overflow segment ineligible rows map
+to), widens the bool masks to int32 for the kernel, and slices the masks
+back.  Called from inside the (jitted, vmapped) engine step, so it is a
+plain traceable function — no jit of its own.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import grant_pallas
+
+_CHUNK = 128      # rows per grid step; [chunk, Es] tiles stay VPU-sized
+_LANE = 128       # channel-axis padding multiple (TPU lane width)
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def grant(out, itime, valid, ovc_count, is_eject, ch_busy, ch_alive,
+          *, buf_pkts: int, chunk: int = _CHUNK, interpret: bool | None = None):
+    """Drop-in fused replacement for the engine's `age_based_grant` /
+    `ref.grant_ref`: same arguments as the oracle, same
+    (win [N] bool, won_ch [E] bool) result, one `pallas_call`.
+
+    `interpret=None` auto-selects: compiled on TPU, interpreter elsewhere
+    (the CPU path is for parity, not speed — `grant_impl="jnp"` stays the
+    CPU fast path)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N = out.shape[0]
+    E = ch_busy.shape[0]
+    C = min(chunk, _round_up(N, 8))
+    nc = -(-N // C)
+    rpad = nc * C - N
+    Es = _round_up(E + 1, _LANE)
+
+    def rows(x, fill=0):
+        x = x.astype(jnp.int32)
+        if rpad:
+            x = jnp.concatenate(
+                [x, jnp.full((rpad,), fill, dtype=jnp.int32)])
+        return x.reshape(nc, C)
+
+    def chan(x):
+        x = x.astype(jnp.int32)
+        return jnp.pad(x, (0, Es - E)).reshape(1, Es)
+
+    win, won = grant_pallas(
+        rows(out, fill=-1), rows(itime), rows(valid), rows(ovc_count),
+        rows(is_eject), chan(ch_busy), chan(ch_alive),
+        buf_pkts=buf_pkts, chunk=C, interpret=interpret)
+    return (win.reshape(-1)[:N].astype(bool),
+            won[0, :E].astype(bool))

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused grant kernel.
+
+Mirrors `repro.core.engine.arbitrate.age_based_grant` exactly (the
+`jax.ops.segment_min` two-pass arbitration), but over raw arrays instead
+of the engine's `Requests` record, so the kernel parity tests can drive
+both implementations from one set of inputs.  Integer keys and exact
+min/tie-break semantics make "bit-identical" well-defined: there is no
+floating-point reassociation anywhere in this stage.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF32 = jnp.int32(2**31 - 1)
+
+
+def grant_ref(out, itime, valid, ovc_count, is_eject, ch_busy, ch_alive,
+              *, buf_pkts: int):
+    """One winner per output channel, oldest `itime` first, row ids break
+    ties.
+
+    out        [N] int32  requested output channel (-1 = stranded, never
+                          granted)
+    itime      [N] int32  generation cycle (age key)
+    valid      [N] bool   the row holds a forwardable packet
+    ovc_count  [N] int32  occupancy of the requested downstream buffer
+    is_eject   [N] bool   the requested channel is an ejection channel
+                          (always has credit)
+    ch_busy    [E] int32  per-channel serialization countdown
+    ch_alive   [E] bool   per-channel fault mask
+
+    Returns (win [N] bool, won_ch [E] bool).
+    """
+    E = ch_busy.shape[0]
+    credit = ovc_count < buf_pkts
+    ok = valid & (out >= 0) & (ch_busy[out] == 0) & (credit | is_eject)
+    ok = ok & ch_alive[out]
+
+    seg = jnp.where(ok, out, E)
+    key1 = jnp.where(ok, itime, INF32)
+    m1 = jax.ops.segment_min(key1, seg, num_segments=E + 1)
+    tie = ok & (itime == m1[out])
+    ridx = jnp.arange(out.shape[0], dtype=jnp.int32)
+    key2 = jnp.where(tie, ridx, INF32)
+    m2 = jax.ops.segment_min(key2, seg, num_segments=E + 1)
+    win = tie & (ridx == m2[out])
+    won_ch = m1[:E] != INF32
+    return win, won_ch

@@ -1,0 +1,121 @@
+"""Multi-device lane sharding: bit-identity and compile accounting.
+
+The interesting backend state (4 forced XLA host devices) can only be
+created before JAX initializes, so the multi-device half runs in a
+SUBPROCESS with `REPRO_HOST_DEVICES=4`; the parent runs the identical
+sweep single-device in-process and compares raw per-lane counters
+exactly.  B=6 lanes on 4 devices exercises the ghost-lane padding path
+(6 % 4 != 0 — the case the old `_lane_sharding` silently fell back to
+single-device on).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.engine import sweep as sweep_mod
+from repro.core.simulator import SimConfig, Simulator
+
+# B = 3 rates x 2 seeds = 6 lanes; cycle count unique in the suite so the
+# in-process run can never be a jit-cache hit from another test
+RATES = [0.4, 0.9, 1.6]
+SEEDS = (0, 1)
+WARMUP, MEASURE = 43, 167
+
+_CHILD = r"""
+import json, sys
+import repro            # applies REPRO_HOST_DEVICES before jax init
+import jax
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.engine import sweep as sweep_mod
+from repro.core.simulator import SimConfig, Simulator
+
+assert len(jax.devices()) == 4, f"expected 4 devices, got {jax.devices()}"
+net = T.build_switchless(
+    T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1), "shard-par")
+cfg = SimConfig(warmup=%d, measure=%d, vcs_per_class=2)
+sim = Simulator(net, cfg, TR.uniform(net))
+before = sweep_mod.compile_counter()
+grid = sim.sweep_grid(%s, seeds=%s)
+print(json.dumps(dict(
+    ndev=len(jax.devices()),
+    compiles=sweep_mod.compile_counter() - before,
+    grid_compiles=grid.compile_count,
+    rows=[dict(d=r.delivered_pkts, g=r.generated_pkts,
+               dr=r.dropped_pkts, lat=r.avg_latency,
+               thr=r.throughput_per_chip, hops=r.hops_by_type)
+          for r in grid.flat()])))
+""" % (WARMUP, MEASURE, RATES, list(SEEDS))
+
+
+def _run_child(extra_env):
+    env = dict(os.environ, **extra_env)
+    # make the parent's import path (src layout or installed) visible
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in sys.path if p] +
+        [p for p in (env.get("PYTHONPATH") or "").split(os.pathsep) if p])
+    proc = subprocess.run([sys.executable, "-c", _CHILD],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def _single_device_rows():
+    net = T.build_switchless(
+        T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1), "shard-seq")
+    cfg = SimConfig(warmup=WARMUP, measure=MEASURE, vcs_per_class=2)
+    sim = Simulator(net, cfg, TR.uniform(net))
+    before = sweep_mod.compile_counter()
+    grid = sim.sweep_grid(RATES, seeds=SEEDS)
+    return [dict(d=r.delivered_pkts, g=r.generated_pkts,
+                 dr=r.dropped_pkts, lat=r.avg_latency,
+                 thr=r.throughput_per_chip, hops=r.hops_by_type)
+            for r in grid.flat()], sweep_mod.compile_counter() - before
+
+
+def test_sharded_non_multiple_lanes_bit_identical():
+    """Acceptance: B=6 lanes on 4 forced host devices (ghost-padded to 8)
+    reproduce the single-device sweep lane-for-lane, bit for bit, with
+    exactly one compile."""
+    child = _run_child({"REPRO_HOST_DEVICES": "4"})
+    assert child["ndev"] == 4
+    assert child["compiles"] == 1
+    assert child["grid_compiles"] == 1
+    rows, compiles = _single_device_rows()
+    assert compiles == 1
+    assert child["rows"] == rows       # exact: ints and float equality
+
+
+def test_repro_host_devices_knob():
+    """The env knob forces the CPU device count (and parses strictly)."""
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import repro, jax; print(len(jax.devices()))"],
+        capture_output=True, text=True, timeout=300,
+        env=dict(os.environ, REPRO_HOST_DEVICES="3",
+                 PYTHONPATH=os.pathsep.join(p for p in sys.path if p)))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.strip().endswith("3")
+    bad = subprocess.run(
+        [sys.executable, "-c", "import repro"],
+        capture_output=True, text=True, timeout=300,
+        env=dict(os.environ, REPRO_HOST_DEVICES="many",
+                 PYTHONPATH=os.pathsep.join(p for p in sys.path if p)))
+    assert bad.returncode != 0
+    assert "REPRO_HOST_DEVICES" in bad.stderr
+
+
+def test_lane_mesh_single_device_is_none():
+    """Without forced devices the mesh helper opts out (no sharding)."""
+    import jax
+    if len(jax.devices()) == 1:
+        assert sweep_mod.lane_mesh() is None
+    else:                              # running under REPRO_HOST_DEVICES
+        assert sweep_mod.lane_mesh() is not None
