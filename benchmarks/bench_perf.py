@@ -7,16 +7,35 @@ Runs a FIXED scenario set through the declarative runner —
                 `BENCH_sweep.json` baseline AND bit-checked lane-for-lane
                 against engine-sequential `Simulator.run`
   smoke         seconds-scale sanity point (tiny grid, dispatch-bound)
-  fig11         the paper's radix-16 global network (reduced W-groups)
+  fig11         the paper's radix-16 global network (reduced W-groups),
+                on the FUSED cycle step (`step_impl="fused"`, the perf
+                path — bit-identical to the jnp oracle, pinned by
+                tests/test_fused_step.py)
+  smoke_fused   the fused smoke grid dispatched with
+                `REPRO_CHANNEL_SHARDS=2` — the 2-D (lanes x shards)
+                placement point of the trajectory
   yield_curve   the radix-32-class warm-fault grid (2 routing cells, so
                 it also exercises the multi-device cell round-robin)
 
 and writes `BENCH_perf.json` (repo root): per-scenario cycles/s and
-lanes/s, the compile/run wall split, device count, compile counts, and
-`speedup_vs_previous` against the previous BENCH_perf.json — the
-trajectory every future perf PR appends to.  Timings use the SECOND
-`run_experiment` call (zero compiles, steady state); compile time is
-reported separately from the first call.
+lanes/s, the compile/run wall split, device count, compile counts, the
+device placement each scenario's grids actually ran on (`placements`,
+`pad_fraction` — see docs/performance.md), and `speedup_vs_previous`
+against the previous BENCH_perf.json — the trajectory every future perf
+PR appends to.  Timings use the SECOND `run_experiment` call (zero
+compiles, steady state); compile time is reported separately from the
+first call.  A `kernels` section times the `repro.kernels.netsim`
+`cycle_core` Pallas kernel standalone: interpret-mode ms/call on every
+backend, plus a compiled (non-interpret) attempt that records
+`supported: false` with the error on backends (CPU) whose Pallas
+lowering only interprets.
+
+The bench_sweep point doubles as the PERF-REGRESSION GUARD: when a
+previous BENCH_perf.json of the same mode exists and the new
+bench_sweep `speedup_vs_previous` drops below 0.85, the benchmark exits
+nonzero (after writing the file) unless `--allow-regression` is given —
+CI fails on accidental engine slowdowns instead of silently recording
+them.
 
 Unless already set in the environment, this benchmark defaults the two
 engine perf knobs to their tuned values — `REPRO_HOST_DEVICES=4` (shard
@@ -37,6 +56,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
@@ -44,14 +64,17 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
 
 
 def _scenarios(fast: bool):
-    """(name, spec) pairs; --fast trims the heavy grids' cycle budgets."""
+    """(name, spec, env) triples; --fast trims the heavy grids' cycle
+    budgets.  `env` is extra environment set around that scenario's runs
+    (the channel-sharding knob is read per dispatch)."""
+    import dataclasses
+
     from repro.exp import registry as SC
-    out = [("bench_sweep", SC.bench_sweep_spec()),
-           ("smoke", SC.smoke_spec())]
+    out = [("bench_sweep", SC.bench_sweep_spec(), {}),
+           ("smoke", SC.smoke_spec(), {})]
     fig11 = SC.get_scenario("fig11")
     yc = SC.get_scenario("yield_curve")
     if fast:
-        import dataclasses
         fig11 = fig11.with_axes(warmup=50, measure=150)
         # keep the warm onset inside the trimmed run (scale with budget)
         trim_onset = 30 + 120 // 4
@@ -59,7 +82,15 @@ def _scenarios(fast: bool):
             f if f.is_none else dataclasses.replace(f, onsets=(trim_onset,))
             for f in yc.axes.faults)
         yc = yc.with_axes(warmup=30, measure=120, faults=faults)
-    out += [("fig11", fig11), ("yield_curve", yc)]
+    # fig11 runs on the fused step — the perf path this trajectory
+    # tracks (bit-identical to the oracle; tests/test_fused_step.py)
+    fig11 = dataclasses.replace(
+        fig11, routings=tuple(dataclasses.replace(r, step_impl="fused")
+                              for r in fig11.routings))
+    out += [("fig11", fig11, {}),
+            ("smoke_fused", SC.get_scenario("smoke_fused"),
+             {"REPRO_CHANNEL_SHARDS": "2"}),
+            ("yield_curve", yc, {})]
     return out
 
 
@@ -67,13 +98,24 @@ def _cycles_total(spec) -> int:
     return spec.num_lanes * (spec.axes.warmup + spec.axes.measure)
 
 
-def _bench_scenario(name, spec):
+def _bench_scenario(name, spec, env=None):
     from repro.exp.runner import run_experiment
 
-    first = run_experiment(spec)                    # compile + run
-    t0 = time.perf_counter()
-    steady = run_experiment(spec)                   # 0 compiles
-    wall = time.perf_counter() - t0
+    saved = {}
+    for k, v in (env or {}).items():
+        saved[k] = os.environ.get(k)
+        os.environ[k] = v
+    try:
+        first = run_experiment(spec)                # compile + run
+        t0 = time.perf_counter()
+        steady = run_experiment(spec)               # 0 compiles
+        wall = time.perf_counter() - t0
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
     cyc = _cycles_total(spec)
     return steady, dict(
         lanes=spec.num_lanes,
@@ -87,6 +129,11 @@ def _bench_scenario(name, spec):
         steady_compiles=sum(steady.compile_counts),
         cycles_per_s=cyc / wall,
         lanes_per_s=spec.num_lanes / wall,
+        step_impl=sorted({r.step_impl for r in spec.routings}),
+        grant_impl=sorted({r.grant_impl for r in spec.routings}),
+        placements=sorted({g.placement for g in steady.grids}),
+        pad_fraction=max((g.pad_fraction for g in steady.grids),
+                         default=0.0),
     )
 
 
@@ -117,6 +164,48 @@ def _bench_sweep_parity(spec, rec, res) -> None:
         rec["speedup_vs_bench_sweep_baseline"] = rec["cycles_per_s"] / base
     except (OSError, KeyError, json.JSONDecodeError):
         pass
+
+
+def _bench_kernels(fast: bool) -> dict:
+    """Standalone timing of the netsim `cycle_core` Pallas kernel on
+    synthetic fused-step-shaped inputs: interpret-mode ms/call, plus a
+    compiled (non-interpret) attempt.  On CPU the Pallas lowering only
+    interprets, so the compiled record documents `supported: false` with
+    the error; on TPU it carries the real compiled timing."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.netsim import cycle_core
+
+    N, E = (1024, 128) if fast else (4096, 512)
+    rng = np.random.default_rng(0)
+    out = jnp.asarray(rng.integers(-1, E, N), jnp.int32)
+    itime = jnp.asarray(rng.integers(0, 1000, N), jnp.int32)
+    ok = jnp.asarray(rng.random(N) < 0.7) & (out >= 0)
+    ch_ok = jnp.asarray(rng.random(E) < 0.9)
+    r2 = 1 << (N - 1).bit_length()
+    rec = dict(n_rows=N, n_channels=E, backend=jax.default_backend())
+
+    def timed(interpret):
+        f = jax.jit(lambda o, t, k, c: cycle_core(
+            o, t, k, c, r2=r2, interpret=interpret))
+        jax.block_until_ready(f(out, itime, ok, ch_ok))   # compile
+        iters = 2 if fast else 5
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            res = f(out, itime, ok, ch_ok)
+        jax.block_until_ready(res)
+        return (time.perf_counter() - t0) / iters * 1000
+
+    rec["interpret_ms_per_call"] = timed(True)
+    try:
+        rec["compiled"] = dict(supported=True, ms_per_call=timed(False))
+    except Exception as e:
+        rec["compiled"] = dict(
+            supported=False,
+            error=f"{type(e).__name__}: {str(e)[:200]}")
+    return {"netsim_cycle_core": rec}
 
 
 def _legacy_runtime_supported() -> bool:
@@ -152,11 +241,11 @@ def bench(fast: bool = False, out_path: str = DEFAULT_OUT) -> dict:
     prev = _previous(out_path)
     prev_mode_match = prev.get("mode") == ("fast" if fast else "full")
     scenarios = {}
-    for name, spec in _scenarios(fast):
+    for name, spec, env in _scenarios(fast):
         print(f"[bench_perf] {name}: {spec.num_lanes} lanes x "
               f"{spec.axes.warmup + spec.axes.measure} cycles ...",
               flush=True)
-        steady, rec = _bench_scenario(name, spec)
+        steady, rec = _bench_scenario(name, spec, env)
         if name == "bench_sweep":
             _bench_sweep_parity(spec, rec, steady)
         if prev_mode_match:
@@ -168,14 +257,18 @@ def bench(fast: bool = False, out_path: str = DEFAULT_OUT) -> dict:
         scenarios[name] = rec
         print(f"[bench_perf]   {rec['cycles_per_s']:.0f} cycles/s, "
               f"{rec['wall_s']:.2f}s run + {rec['compile_s']:.2f}s "
-              f"compile ({rec['first_call_compiles']} compiles)",
+              f"compile ({rec['first_call_compiles']} compiles, "
+              f"placement {','.join(rec['placements'])})",
               flush=True)
+    print("[bench_perf] kernels: netsim cycle_core ...", flush=True)
+    kernels = _bench_kernels(fast)
     return dict(
         mode="fast" if fast else "full",
         device_count=len(jax.devices()),
         repro_host_devices=os.environ.get("REPRO_HOST_DEVICES"),
         repro_cpu_runtime=os.environ.get("REPRO_CPU_RUNTIME"),
         scenarios=scenarios,
+        kernels=kernels,
         provenance=provenance(),
     )
 
@@ -187,6 +280,10 @@ def main(argv=None) -> int:
     ap.add_argument("--fast", action="store_true",
                     help="trimmed cycle budgets (CI perf-smoke)")
     ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--allow-regression", action="store_true",
+                    help="record a bench_sweep slowdown (< 0.85x vs the "
+                         "previous BENCH_perf.json) instead of exiting "
+                         "nonzero")
     args = ap.parse_args(argv)
     # tuned defaults, recorded in the output; env overrides.  Must happen
     # before the first repro/jax import (the knobs set XLA_FLAGS).  The
@@ -203,6 +300,17 @@ def main(argv=None) -> int:
         json.dump(out, f, indent=2)
     print(json.dumps(out, indent=2))
     print(f"\nwrote {path}")
+    # perf-regression guard: the headline grid must not silently slow
+    # down.  The file above is written either way (the regression is
+    # recorded); only the exit status flags it.
+    spd = out["scenarios"].get("bench_sweep", {}).get(
+        "speedup_vs_previous")
+    if spd is not None and spd < 0.85 and not args.allow_regression:
+        print(f"[bench_perf] REGRESSION: bench_sweep at {spd:.3f}x of "
+              f"the previous trajectory point (< 0.85x). Pass "
+              f"--allow-regression to record it anyway.",
+              file=sys.stderr, flush=True)
+        return 2
     return 0
 
 

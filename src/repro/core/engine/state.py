@@ -34,6 +34,18 @@ F_DEST, F_ITIME, F_MIS, F_META, F_READY = range(5)
 NUM_FIELDS = 5
 NUM_SRC_FIELDS = 3      # source-queue records pack (dest, itime, mis)
 
+# the fused step (`cfg.step_impl="fused"`) extends the record with the
+# CACHED next-hop route decision: a packet's route out of a channel is a
+# pure function of (the packet, the channel, the lane's fault epoch), so
+# the fused step evaluates it ONCE when the packet is pushed (E winner
+# rows) instead of for every head row every cycle, and stores the output
+# channel, requested VC class, and next routing meta alongside the
+# payload.  Epoch-scheduled (warm-fault) lanes can't cache — the epoch
+# in effect at head time isn't known at push time — so the fused step
+# falls back to per-cycle routing there and these fields stay zero.
+F_OUT, F_CLS, F_META2 = 5, 6, 7
+NUM_FUSED_FIELDS = 8
+
 
 @jax.tree_util.register_dataclass
 @dataclass
@@ -90,13 +102,26 @@ class SimState:
 
 
 def make_state(net: Network, cfg, NV: int,
-               batch: tuple[int, ...] = ()) -> SimState:
-    """Fresh (empty-network) state; `batch` prepends sweep axes."""
-    E, T = net.num_channels, net.num_terminals
+               batch: tuple[int, ...] = (), *,
+               ch_pad: int = 0, term_pad: int = 0) -> SimState:
+    """Fresh (empty-network) state; `batch` prepends sweep axes.
+
+    `ch_pad` / `term_pad` append GHOST channels/terminals (used by the
+    channel-sharded fused step so every shard's block is dense; see
+    `fused.fused_pad`).  Ghosts start empty, are dead in every alive
+    mask, and never inject — an all-zero state is already correct for
+    them.
+
+    The record width follows `cfg.step_impl`: the fused step carries the
+    cached route fields (`NUM_FUSED_FIELDS`), the oracle the base
+    payload (`NUM_FIELDS`)."""
+    E, T = net.num_channels + ch_pad, net.num_terminals + term_pad
     S, Q = cfg.buf_pkts, cfg.srcq_pkts
+    nf = (NUM_FUSED_FIELDS if getattr(cfg, "step_impl", "jnp") == "fused"
+          else NUM_FIELDS)
     z = lambda *s: jnp.zeros(batch + s, dtype=jnp.int32)
     return SimState(
-        b_pkt=z(E, NV, S, NUM_FIELDS),
+        b_pkt=z(E, NV, S, nf),
         b_head=z(E, NV), b_count=z(E, NV),
         s_pkt=z(T, Q, NUM_SRC_FIELDS),
         s_head=z(T), s_count=z(T),

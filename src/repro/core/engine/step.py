@@ -26,6 +26,12 @@ from .inject import make_inject_fn
 from .state import build_consts, resolve_epoch
 from .stats import accumulate, zero_stats
 
+# the valid `cfg.step_impl` values — the single source of truth
+# (SimConfig and exp.RoutingSpec validate against this): "jnp" is the
+# phase pipeline below (the oracle), "fused" the per-channel-winner
+# restructuring in `fused.py` (bit-identical; the paper-scale fast path)
+STEP_IMPLS = ("jnp", "fused")
+
 
 def make_step(net: Network, cfg, pattern, inject_mask=None):
     """Returns (step, consts);
@@ -41,6 +47,13 @@ def make_step(net: Network, cfg, pattern, inject_mask=None):
     tables — mid-run link death is the epoch index advancing, and every
     in-flight packet is re-routed on the surviving subgraph from the next
     cycle on (buffered packets are preserved, never dropped)."""
+    impl = getattr(cfg, "step_impl", "jnp")
+    if impl == "fused":
+        from .fused import make_fused_step
+        return make_fused_step(net, cfg, pattern, inject_mask)
+    if impl != "jnp":
+        raise ValueError(f"unknown step_impl {impl!r}; "
+                         f"valid: {STEP_IMPLS}")
     pattern, inject_mask = as_pattern(pattern, inject_mask)
     consts, route_kernel = build_consts(net, cfg)
     inject = make_inject_fn(net, cfg, consts, pattern, inject_mask)

@@ -33,6 +33,21 @@ mesh — communication-free SPMD.  Lane counts that do not divide the
 device count are padded with GHOST lanes (offered rate 0, dropped before
 finalize), so the shard is always dense; each real lane's math is
 untouched, keeping sharded runs bit-identical to single-device runs.
+Grids too small to amortize the per-cycle shard_map dispatch (fewer than
+`REPRO_SHARD_MIN_WORK` lane-cycles, default 4096) skip the lane shard
+and run single-device — the chosen placement is recorded in
+`SweepResult.placement` (and the perf-benchmark records).
+
+Channel sharding (`REPRO_CHANNEL_SHARDS=K`, fused step only): the mesh
+becomes 2-D ``(lanes, shards)`` — each lane's channel-id space is
+block-partitioned across K shard devices and the step exchanges
+per-channel grant minima / winner records at the phase boundary (see
+`engine.fused`).  The big state arrays (`b_pkt`, `s_pkt`) partition on
+their channel/terminal axis; everything else stays replicated across
+the shard axis.  Ghost channel/terminal padding makes non-dividing
+counts dense; `SweepResult.pad_fraction` reports the padded share of
+the state so perf records can account for it.
+
 Every dispatch goes through an AOT compile cache, which (a) makes the
 compile-vs-run wall-time split exact (`SweepResult.compile_s` /
 `wall_s`) and (b) lets `run_lanes_async` return before the result is
@@ -43,6 +58,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 import time
 from dataclasses import dataclass
 from typing import NamedTuple
@@ -67,6 +83,7 @@ _SHMAP_NOCHECK = ({"check_rep": False} if "check_rep" in _SHMAP_PARAMS
 from ..topology import (FaultSchedule, FaultSet, Network, as_fault_schedule,
                         compose_faults, final_faults)
 from ..traffic import as_pattern
+from .fused import fused_pad, make_fused_step
 from .state import build_lane, make_state, stack_lanes
 from .stats import finalize, zero_stats
 from .step import make_step
@@ -102,12 +119,44 @@ def host_devices() -> list:
     return jax.devices()
 
 
-def lane_mesh() -> Mesh | None:
-    """A 1-D "lanes" mesh over the host devices, or None when the
-    process only has one device (the common un-forced CPU case)."""
+def _env_int(name: str, default: int) -> int:
+    try:
+        return int(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+def shard_min_work() -> int:
+    """Minimum (real lanes x cycles) for the automatic lane shard_map to
+    pay for its per-cycle dispatch overhead; smaller grids run
+    single-device.  Override with REPRO_SHARD_MIN_WORK (0 = always
+    shard, as the sharding bit-identity tests do)."""
+    return _env_int("REPRO_SHARD_MIN_WORK", 4096)
+
+
+def channel_shards() -> int:
+    """Requested channel-shard count K (REPRO_CHANNEL_SHARDS, default 1).
+    Only honored by fused-step (`cfg.step_impl="fused"`) dispatches with
+    K devices available per lane row."""
+    return max(_env_int("REPRO_CHANNEL_SHARDS", 1), 1)
+
+
+def lane_mesh(shards: int = 1) -> Mesh | None:
+    """The device mesh for a dispatch: 1-D ``("lanes",)`` over the host
+    devices, or 2-D ``("lanes", "shards")`` with `shards` > 1 (each lane
+    row owns a K-device channel shard).  None when the process only has
+    one device (the common un-forced CPU case)."""
     devs = host_devices()
-    if len(devs) <= 1:
+    nd = len(devs)
+    if nd <= 1:
         return None
+    if shards > 1:
+        if nd % shards:
+            raise ValueError(
+                f"REPRO_CHANNEL_SHARDS={shards} does not divide the "
+                f"{nd} host devices")
+        return Mesh(np.array(devs).reshape(nd // shards, shards),
+                    ("lanes", "shards"))
     return Mesh(np.array(devs), ("lanes",))
 
 
@@ -161,18 +210,26 @@ def run_scan_batched(step, cycles, reset_at, state0, rate_pkt, keys, lanes,
                        state0, rate_pkt, keys, lanes)
 
 
-def _make_dispatch_fn(step, cycles, reset_at, per_lane_faults, mesh):
+def _make_dispatch_fn(step, cycles, reset_at, per_lane_faults, mesh,
+                      state_spec=None):
     """The jittable whole-sweep function, `shard_map`ped over the lane
     axis when a mesh is given (lanes are independent: no collectives, so
-    partitioning axis 0 is communication-free SPMD)."""
+    partitioning axis 0 is communication-free SPMD).  `state_spec` is a
+    per-leaf PartitionSpec tree for the state (the 2-D channel-sharded
+    mesh partitions `b_pkt`/`s_pkt` on their channel axis and replicates
+    the rest across the shard axis); the default partitions every leaf
+    on the lane axis only."""
     f = functools.partial(_scan_lanes, step, cycles, reset_at,
                           per_lane_faults)
     if mesh is not None:
         lane_spec = PartitionSpec("lanes")
+        if state_spec is None:
+            state_spec = lane_spec
         data_spec = lane_spec if per_lane_faults else PartitionSpec()
         f = _shard_map(f, mesh=mesh,
-                       in_specs=(lane_spec, lane_spec, lane_spec, data_spec),
-                       out_specs=lane_spec, **_SHMAP_NOCHECK)
+                       in_specs=(state_spec, lane_spec, lane_spec,
+                                 data_spec),
+                       out_specs=state_spec, **_SHMAP_NOCHECK)
     return jax.jit(f, donate_argnums=(0,))
 
 
@@ -205,6 +262,8 @@ class LaneRun(NamedTuple):
     compile_s: float       # trace + compile wall time (0.0 on cache hit)
     compile_count: int     # jit compilations this dispatch triggered
     fault_sets: list       # composed per-lane fault states (None=pristine)
+    placement: str = "single"   # "single" | "lanes:L" | "lanes:L,shards:K"
+    pad_fraction: float = 0.0   # ghost share of the dispatched state
 
 
 @dataclass
@@ -227,6 +286,8 @@ class SweepResult:
     wall_s: float = 0.0
     compile_s: float = 0.0
     fault_fracs: list | None = None   # per-row failed-link fraction (faults)
+    placement: str = "single"  # device placement the dispatch chose
+    pad_fraction: float = 0.0  # ghost (lane + channel pad) state share
 
     def result(self, rate_idx: int, seed_idx: int = 0):
         return self.results[rate_idx][seed_idx]
@@ -273,16 +334,19 @@ class _LanePlan:
     cache."""
 
     __slots__ = ("lane_triples", "fault_sets", "args", "compiled",
-                 "compile_s", "compile_count", "used")
+                 "compile_s", "compile_count", "placement",
+                 "pad_fraction", "used")
 
     def __init__(self, lane_triples, fault_sets, args, compiled,
-                 compile_s, compile_count):
+                 compile_s, compile_count, placement, pad_fraction):
         self.lane_triples = lane_triples
         self.fault_sets = fault_sets
         self.args = args
         self.compiled = compiled
         self.compile_s = compile_s
         self.compile_count = compile_count
+        self.placement = placement
+        self.pad_fraction = pad_fraction
         self.used = False
 
 
@@ -297,12 +361,13 @@ class _PendingLanes:
     """
 
     def __init__(self, sweep, stats, num_lanes, lane_triples, fault_sets,
-                 compile_s, compile_count, t0):
+                 compile_s, compile_count, t0, placement, pad_fraction):
         self._sweep, self._stats = sweep, stats
         self._B, self._lanes = num_lanes, lane_triples
         self._fsets = fault_sets
         self._compile_s, self._compiles = compile_s, compile_count
         self._t0 = t0
+        self._placement, self._pad_frac = placement, pad_fraction
 
     def finish(self) -> LaneRun:
         stats = jax.tree.map(np.asarray, self._stats)      # blocks
@@ -313,7 +378,7 @@ class _PendingLanes:
                             self._sweep._chips(self._fsets[i]))
                    for i in range(self._B)]     # ghost pad lanes excluded
         return LaneRun(results, wall, self._compile_s, self._compiles,
-                       self._fsets)
+                       self._fsets, self._placement, self._pad_frac)
 
 
 class BatchedSweep:
@@ -335,6 +400,8 @@ class BatchedSweep:
             step, consts = make_step(net, cfg, pattern)
         self.step, self.consts = step, consts
         self.NV = consts["NV"]
+        self._pattern = pattern
+        self._sharded_steps: dict[int, object] = {}
         self.faults = faults
         self.lane0 = build_lane(net, cfg, faults) if lane is None else lane
         self.terms_per_chip = net.num_terminals / net.num_chips
@@ -345,6 +412,16 @@ class BatchedSweep:
     def _rate_pkt(self, offered_per_chip: float) -> float:
         return offered_to_rate_pkt(offered_per_chip, self.cfg,
                                    self.terms_per_chip)
+
+    def _sharded_step(self, K: int):
+        """The K-way channel-sharded fused step (memoized: one build per
+        shard count, so repeat dispatches hit the AOT cache)."""
+        step = self._sharded_steps.get(K)
+        if step is None:
+            step, _ = make_fused_step(self.net, self.cfg, self._pattern,
+                                      shards=K)
+            self._sharded_steps[K] = step
+        return step
 
     def _chips(self, faults) -> float:
         """Accepted-throughput divisor: chips weighted by the fraction of
@@ -368,9 +445,27 @@ class BatchedSweep:
             fsets = self._prepare_lanes(lanes)
         cfg = self.cfg
         B = int(lane_rates.shape[0])
-        mesh = lane_mesh() if device is None and B > 1 else None
-        nd = int(mesh.devices.size) if mesh is not None else 1
+        cycles = cfg.warmup + cfg.measure
+        fused = getattr(cfg, "step_impl", "jnp") == "fused"
+        K = channel_shards() if (fused and device is None) else 1
+        mesh = lane_mesh(K) if K > 1 else None
+        if mesh is None:
+            K = 1       # < K devices: channel sharding can't apply
+            small = B * cycles < shard_min_work()
+            if device is None and B > 1 and not small:
+                mesh = lane_mesh()
+        step = self._sharded_step(K) if K > 1 else self.step
+        ch_pad, term_pad = fused_pad(self.net, K) if K > 1 else (0, 0)
+        nd = int(mesh.shape["lanes"]) if mesh is not None else 1
         pad = (-B) % nd
+        if mesh is None:
+            placement = "single"
+        elif K > 1:
+            placement = f"lanes:{nd},shards:{K}"
+        else:
+            placement = f"lanes:{nd}"
+        E = self.net.num_channels
+        pad_fraction = 1.0 - (B * E) / ((B + pad) * (E + ch_pad))
         if pad:
             # ghost lanes: offered rate 0 (inject generates nothing), any
             # valid key/fault data; their stats are never read back
@@ -385,11 +480,33 @@ class BatchedSweep:
                     lambda x: jnp.concatenate(
                         [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]),
                     lane_data)
-        state0 = make_state(self.net, cfg, self.NV, batch=(B + pad,))
+        state0 = make_state(self.net, cfg, self.NV, batch=(B + pad,),
+                            ch_pad=ch_pad, term_pad=term_pad)
+        state_spec = None
+        if K > 1:
+            # 2-D placement: the big per-channel/per-terminal arrays
+            # partition on their second axis, the rest replicates
+            # across the shard axis
+            state_spec = jax.tree.map(lambda _: PartitionSpec("lanes"),
+                                      state0)
+            state_spec = state_spec.replace(
+                b_pkt=PartitionSpec("lanes", "shards"),
+                s_pkt=PartitionSpec("lanes", "shards"))
         if mesh is not None:
             lane_sh = NamedSharding(mesh, PartitionSpec("lanes"))
             repl_sh = NamedSharding(mesh, PartitionSpec())
-            state0 = jax.device_put(state0, lane_sh)
+            if state_spec is None:
+                state0 = jax.device_put(state0, lane_sh)
+            else:
+                # PartitionSpec subclasses tuple, so the spec tree can't
+                # be tree-mapped over — build a NamedSharding-leaf tree
+                sh_tree = jax.tree.map(lambda _: lane_sh, state0)
+                sh_tree = sh_tree.replace(
+                    b_pkt=NamedSharding(
+                        mesh, PartitionSpec("lanes", "shards")),
+                    s_pkt=NamedSharding(
+                        mesh, PartitionSpec("lanes", "shards")))
+                state0 = jax.tree.map(jax.device_put, state0, sh_tree)
             lane_rates = jax.device_put(lane_rates, lane_sh)
             lane_keys = jax.device_put(lane_keys, lane_sh)
             lane_data = jax.device_put(
@@ -397,16 +514,15 @@ class BatchedSweep:
         elif device is not None:
             state0, lane_rates, lane_keys, lane_data = jax.device_put(
                 (state0, lane_rates, lane_keys, lane_data), device)
-        cycles = cfg.warmup + cfg.measure
-        cache_key = (self.step, cycles, cfg.warmup, per_lane_faults, mesh,
+        cache_key = (step, cycles, cfg.warmup, per_lane_faults, mesh,
                      device, _sig((state0, lane_rates, lane_keys,
                                    lane_data)))
         compiled = _AOT_CACHE.get(cache_key)
         compile_s = 0.0
         compiles = 0
         if compiled is None:
-            fn = _make_dispatch_fn(self.step, cycles, cfg.warmup,
-                                   per_lane_faults, mesh)
+            fn = _make_dispatch_fn(step, cycles, cfg.warmup,
+                                   per_lane_faults, mesh, state_spec)
             before = _TRACE_COUNT[0]
             t0 = time.perf_counter()
             compiled = fn.lower(state0, lane_rates, lane_keys,
@@ -416,7 +532,8 @@ class BatchedSweep:
             _AOT_CACHE[cache_key] = compiled
         return _LanePlan(lane_triples, fsets,
                          (state0, lane_rates, lane_keys, lane_data),
-                         compiled, compile_s, compiles)
+                         compiled, compile_s, compiles, placement,
+                         pad_fraction)
 
     def _prepare_lanes(self, lanes):
         """Compose/sample per-lane fault data; returns the dense lane
@@ -480,7 +597,8 @@ class BatchedSweep:
         plan.args = None      # the donated state buffer is gone anyway
         return _PendingLanes(self, state.stats, len(plan.lane_triples),
                              plan.lane_triples, plan.fault_sets,
-                             plan.compile_s, plan.compile_count, t0)
+                             plan.compile_s, plan.compile_count, t0,
+                             plan.placement, plan.pad_fraction)
 
     def run_lanes(self, lanes, device=None) -> LaneRun:
         """The fully general lane axis: one compiled batched scan over an
@@ -523,7 +641,9 @@ class BatchedSweep:
         results = [[flat[i * S + j] for j in range(S)] for i in range(R)]
         return SweepResult(rates=rates, seeds=seeds, results=results,
                            compile_count=run.compile_count,
-                           wall_s=run.wall_s, compile_s=run.compile_s)
+                           wall_s=run.wall_s, compile_s=run.compile_s,
+                           placement=run.placement,
+                           pad_fraction=run.pad_fraction)
 
     def run_faults(self, offered_per_chip: float, fault_grid,
                    seeds=None) -> SweepResult:
@@ -562,4 +682,5 @@ class BatchedSweep:
         return SweepResult(rates=[offered_per_chip] * F, seeds=seeds,
                            results=results, compile_count=run.compile_count,
                            wall_s=run.wall_s, compile_s=run.compile_s,
-                           fault_fracs=fracs)
+                           fault_fracs=fracs, placement=run.placement,
+                           pad_fraction=run.pad_fraction)

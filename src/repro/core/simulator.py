@@ -46,7 +46,7 @@ import jax
 from .topology import FaultSchedule, FaultSet, Network, compose_faults
 from .engine.arbitrate import GRANT_IMPLS
 from .engine.state import build_lane, make_state as _engine_make_state
-from .engine.step import make_step, run_scan
+from .engine.step import STEP_IMPLS, make_step, run_scan
 from .engine.stats import finalize
 from .engine.sweep import (BatchedSweep, SweepResult, offered_to_rate_pkt)
 
@@ -67,12 +67,21 @@ class SimConfig:
     # path, default and oracle) or "pallas" (the fused netsim kernel,
     # `repro.kernels.netsim` — bit-identical, TPU-ready fast path)
     grant_impl: str = "jnp"
+    # cycle-step implementation: "jnp" (the modular phase pipeline,
+    # default and oracle) or "fused" (the per-channel-winner fused step,
+    # `engine.fused` — bit-identical, and the only step the 2-D
+    # (lanes x shards) channel-sharded mesh can run)
+    step_impl: str = "jnp"
 
     def __post_init__(self):
         if self.grant_impl not in GRANT_IMPLS:
             raise ValueError(
                 f"unknown grant_impl {self.grant_impl!r}; "
                 f"valid: {GRANT_IMPLS}")
+        if self.step_impl not in STEP_IMPLS:
+            raise ValueError(
+                f"unknown step_impl {self.step_impl!r}; "
+                f"valid: {STEP_IMPLS}")
 
     @property
     def nonminimal(self) -> bool:

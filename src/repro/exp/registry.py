@@ -249,6 +249,24 @@ def smoke_spec() -> ExperimentSpec:
         axes=SweepAxes(rates=(0.5, 1.5), warmup=50, measure=200))
 
 
+def smoke_fused_spec() -> ExperimentSpec:
+    """The smoke grid on the fused cycle step (`step_impl="fused"`).
+
+    Doubles as the channel-sharding smoke: under `REPRO_HOST_DEVICES=2`
+    (or more) with `REPRO_CHANNEL_SHARDS=2`, the fused dispatch
+    block-partitions each lane's channel space across shard devices —
+    results stay bit-identical to the single-device run (CI runs both
+    and the channel-sharding test pins the equality)."""
+    return ExperimentSpec(
+        name="smoke_fused",
+        topologies=TopologySpec.switchless(
+            a=1, b=1, m=2, n=6, noc=2, g=3, label="smoke-fused"),
+        traffics=TrafficSpec("uniform"),
+        routings=RoutingSpec(vcs_per_class=2, step_impl="fused"),
+        axes=SweepAxes(rates=(0.5, 1.5), warmup=50, measure=200),
+        notes="smoke on the fused step (channel-shardable)")
+
+
 def smoke_fig10a_spec() -> ExperimentSpec:
     """Fig. 10(a) topology + patterns at smoke scale: the tier-1 parity
     fixture (run_experiment vs legacy Simulator.sweep, lane-for-lane)."""
@@ -349,8 +367,8 @@ def _register_defaults() -> None:
     register_scenario(fig15_spec(), builder=fig15_spec)
     register_scenario(yield_curve_spec(), builder=yield_curve_spec)
     for spec in (bench_sweep_spec(), bench_faults_spec(), smoke_spec(),
-                 smoke_fig10a_spec(), smoke_faults_spec(),
-                 smoke_warm_faults_spec()):
+                 smoke_fused_spec(), smoke_fig10a_spec(),
+                 smoke_faults_spec(), smoke_warm_faults_spec()):
         register_scenario(spec)
 
 

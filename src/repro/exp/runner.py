@@ -16,9 +16,14 @@ spec shard_maps its lane axis over the whole mesh, while a multi-cell
 spec ROUND-ROBINS cells across devices instead: every cell's grid is
 dispatched asynchronously to device `i % ndev` and materialized
 afterwards, so independent grids execute concurrently (dispatch is
-async; only compilation serializes on the host).  Either way results
-are lane-for-lane identical to the serial single-device run — device
-placement never changes per-lane math.
+async; only compilation serializes on the host).  Cells on
+paper-scale networks (more channels than `REPRO_RR_MAX_CHANNELS`,
+default 1024) opt out of the round-robin and run serially on the
+default device — overlapped execution of multi-MB channel states
+thrashes shared caches and measures SLOWER than serial (see
+`rr_max_channels`).  Either way results are lane-for-lane identical to
+the serial single-device run — device placement never changes per-lane
+math.
 
 `cells(spec)` exposes the same lowering without running anything — the
 hook benchmarks use to build sequential/legacy baselines from the exact
@@ -26,6 +31,7 @@ hook benchmarks use to build sequential/legacy baselines from the exact
 """
 from __future__ import annotations
 
+import os
 import sys
 from dataclasses import dataclass, field
 from typing import NamedTuple
@@ -47,6 +53,20 @@ _SWEEP_CACHE: dict = {}
 # greedy-validated sampling is the slow part, and the same population is
 # reused across every routing/traffic cell that shares a vc_mode.
 _FAULT_CACHE: dict = {}
+
+
+def rr_max_channels() -> int:
+    """`REPRO_RR_MAX_CHANNELS` (default 1024): cells whose network has
+    more channels than this run on the DEFAULT device serially instead
+    of round-robining.  Round-robin overlaps independent grids, which
+    pays off for small cells; for paper-scale networks the concurrently
+    executing cells evict each other's multi-MB channel state from
+    cache and the 'parallel' run comes out slower than the serial one
+    (fig11 measured ~20% slower round-robined on forced host devices).
+    The per-cell decision is visible in `GridResult.placement` /
+    `run_experiment(verbose=True)`."""
+    raw = os.environ.get("REPRO_RR_MAX_CHANNELS", "").strip()
+    return int(raw) if raw else 1024
 
 
 def clear_caches() -> None:
@@ -98,6 +118,10 @@ class GridResult:
                                 # round-robined cells this spans dispatch
                                 # -> materialized, overlapping other cells
     compile_s: float = 0.0      # trace+compile wall (0.0 on cache reuse)
+    placement: str = "single"   # device layout the grid actually ran on
+                                # ("single" | "lanes:L" | "lanes:L,shards:K")
+    pad_fraction: float = 0.0   # ghost fraction of the dispatched
+                                # lane x channel grid (placement padding)
 
     def result(self, fault_idx: int, rate_idx: int,
                seed_idx: int = 0) -> SimResult:
@@ -108,7 +132,8 @@ class GridResult:
         return SweepResult(rates=list(self.rates), seeds=list(self.seeds),
                            results=self.results[fault_idx],
                            compile_count=self.compile_count,
-                           wall_s=self.wall_s)
+                           wall_s=self.wall_s, placement=self.placement,
+                           pad_fraction=self.pad_fraction)
 
 
 @dataclass
@@ -165,6 +190,8 @@ class ExperimentResult:
                         dropped_pkts=res.dropped_pkts,
                         avg_hops_by_type=res.avg_hops_by_type,
                         compile_count=g.compile_count,
+                        placement=g.placement,
+                        pad_fraction=g.pad_fraction,
                         wall_s=dt))
         return out
 
@@ -224,7 +251,10 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = False
                  for fi in range(F)
                  for r in rates
                  for si, s in enumerate(seeds)]
-        device = devs[i % len(devs)] if round_robin else None
+        device = (devs[i % len(devs)]
+                  if round_robin
+                  and cell.net.num_channels <= rr_max_channels()
+                  else None)
         plans.append((cell, sweep, device,
                       sweep.warm_compile(lanes, device=device)))
     # pass 2: dispatch every cell (async; plans are already compiled)
@@ -256,7 +286,9 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = False
             fault_labels=[f.label for f in axes.faults],
             fault_fracs=fracs, results=results,
             compile_count=compiles, wall_s=run.wall_s,
-            compile_s=compile_s))
+            compile_s=compile_s,
+            placement=getattr(run, "placement", "single"),
+            pad_fraction=getattr(run, "pad_fraction", 0.0)))
         if verbose:
             print(f"[exp:{spec.name}]   {cell.topology.label} "
                   f"{cell.routing.label} {cell.traffic.label} done in "

@@ -38,6 +38,7 @@ import numpy as np
 from ..core import topology as T
 from ..core import traffic as TR
 from ..core.engine.arbitrate import GRANT_IMPLS
+from ..core.engine.step import STEP_IMPLS
 from ..core.simulator import SimConfig
 from ..core.topology import FaultSchedule, FaultSet, Network
 
@@ -238,12 +239,20 @@ class RoutingSpec:
     # arbitration grant implementation: "jnp" (segment_min path, the
     # default and oracle) | "pallas" (fused repro.kernels.netsim kernel)
     grant_impl: str = "jnp"
+    # cycle-step implementation: "jnp" (phase-pipeline oracle) | "fused"
+    # (route-once-per-hop fused step, the perf path; supports channel
+    # sharding via REPRO_CHANNEL_SHARDS)
+    step_impl: str = "jnp"
 
     def __post_init__(self):
         if self.grant_impl not in GRANT_IMPLS:
             raise ValueError(
                 f"unknown grant_impl {self.grant_impl!r}; "
                 f"valid: {GRANT_IMPLS}")
+        if self.step_impl not in STEP_IMPLS:
+            raise ValueError(
+                f"unknown step_impl {self.step_impl!r}; "
+                f"valid: {STEP_IMPLS}")
         if self.route_mode not in ROUTE_MODES:
             raise ValueError(
                 f"unknown route_mode {self.route_mode!r}; "
@@ -276,7 +285,7 @@ class RoutingSpec:
             warmup=axes.warmup, measure=axes.measure,
             vc_mode=self.vc_mode, route_mode=self.route_mode,
             ugal_threshold=self.ugal_threshold, seed=axes.seeds[0],
-            grant_impl=self.grant_impl)
+            grant_impl=self.grant_impl, step_impl=self.step_impl)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

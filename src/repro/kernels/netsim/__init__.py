@@ -10,12 +10,19 @@ segment-min passes run as VPU-friendly broadcast-compare reductions over
 (row-chunk x channel) tiles, with the per-channel minima persisted in
 VMEM scratch across the grid.
 
+`netsim.ops.cycle_core` extends the same design to the fused cycle step
+(`SimConfig(step_impl="fused")`): the packed key `itime * R2 + row`
+collapses the two segment-min passes into a single accumulation, and
+the emit phase produces the full per-channel winner table AND the
+per-row pop mask — the complete set of arbitration decisions the fused
+step's apply phase consumes — in one grid.
+
 Selected by `SimConfig(grant_impl="pallas")`; the default "jnp" path is
 the oracle, and `ref.grant_ref` mirrors it standalone.  Bit-identical in
-interpret mode (CPU) by tests/test_netsim_kernel.py; interpret=False is
-the TPU fast path.
+interpret mode (CPU) by tests/test_netsim_kernel.py and
+tests/test_fused_step.py; interpret=False is the TPU fast path.
 """
-from .ops import grant
+from .ops import cycle_core, grant
 from .ref import grant_ref
 
-__all__ = ["grant", "grant_ref"]
+__all__ = ["cycle_core", "grant", "grant_ref"]

@@ -1,32 +1,42 @@
-"""Pallas kernel for age-based output arbitration (the grant hot spot).
+"""Pallas kernels for the cycle-step arbitration hot spot.
 
-One `pallas_call` fuses the whole grant stage: per-row eligibility
-(valid & routable & channel-not-busy & (credit | eject) & channel-alive)
-and BOTH segment-min passes (pass 1: oldest `itime` per output channel;
-pass 2: smallest row id among the age ties), finishing with the winner
-mask.  Segment ops are recast as broadcast-compare reductions — a
-`[chunk, Es]` one-hot of requested channels against a channel-id iota —
-so there is no scatter anywhere: everything is VPU elementwise work plus
-row-axis minima, with the per-channel minima (`m1`, `m2`) persisted in
-VMEM scratch across the grid.
+Two entry points share one design: segment ops recast as
+broadcast-compare reductions — a `[chunk, Es]` one-hot of requested
+channels against a channel-id iota — so there is no scatter anywhere:
+everything is VPU elementwise work plus row-axis minima, with the
+per-channel minima persisted in VMEM scratch across the grid.  All
+inputs are int32 (bools widened by ops.py); keys must stay below
+INF32 = 2^31 - 1.  vmap (the engine batches lanes) adds a leading batch
+grid dimension via the standard pallas batching rule; the scratch
+re-initialization at (phase 0, chunk 0) makes each lane's accumulation
+independent.
 
-Grid: `(3 phases, row chunks)`, phases outermost and strictly ordered
-(`dimension_semantics=("arbitrary", "arbitrary")`):
+`_kernel` (ops.grant): the standalone two-pass grant — per-row
+eligibility (valid & routable & not-busy & (credit | eject) & alive)
+plus BOTH segment-min passes.  Grid `(3 phases, row chunks)`:
 
   phase 0   accumulate m1[c] = min itime over eligible rows requesting c
   phase 1   accumulate m2[c] = min row id over rows tying m1[c]
   phase 2   emit win[row] = tie & (row id == m2[out_row]) and
             won_ch[c] = m1[c] != INF
 
-Phase 2 re-derives the eligibility mask from the same inputs instead of
-storing a `[N]` intermediate — recompute is cheaper than another VMEM
-round-trip, and bit-exactness is trivial (integer ops only).  All inputs
-are int32 (bools widened by ops.py); `itime` must be < INF32 = 2^31 - 1,
-which holds for any cycle count.
+`_cycle_kernel` (ops.cycle_core): the fused cycle step's grant + apply
+decisions in ONE pass over the rows — the packed key
+``itime * R2 + row`` makes (oldest age, smallest row id) a single
+lexicographic min, so one accumulation phase replaces the two-pass
+chain, and the emit phase produces the complete per-channel winner
+table (`won_ch`, winner row id `wprio`) AND the per-row pop mask that
+drive the fused step's apply phase.  Grid `(2 phases, row chunks)`:
 
-vmap (the engine batches lanes) adds a leading batch grid dimension via
-the standard pallas batching rule; the scratch re-initialization at
-(phase 0, chunk 0) makes each lane's accumulation independent.
+  phase 0   accumulate m[c] = min (itime * R2 + row) over rows with
+            `ok` requesting c
+  phase 1   emit, after the dense busy/alive channel mask:
+            won_ch[c] = m[c] != INF, wprio[c] = m[c] & (R2-1), and
+            win[row] = ok & (m[out_row] == key_row)
+
+Later phases re-derive row masks from the same inputs instead of
+storing a `[N]` intermediate — recompute is cheaper than another VMEM
+round-trip, and bit-exactness is trivial (integer ops only).
 """
 from __future__ import annotations
 
@@ -129,3 +139,71 @@ def grant_pallas(out, itime, valid, ovc, isej, busy, alive,
             dimension_semantics=("arbitrary", "arbitrary")),
     )(out, itime, valid, ovc, isej, busy, alive)
     return win, won
+
+
+def _cycle_kernel(out_ref, itime_ref, ok_ref, chok_ref,
+                  win_ref, won_ref, wprio_ref, m_ref,
+                  *, chunk, num_seg, r2):
+    phase = pl.program_id(0)
+    ci = pl.program_id(1)
+
+    out = out_ref[0, :]                                    # [C]
+    ok = ok_ref[0, :] != 0
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, num_seg), 1)
+    onehot = out[:, None] == seg_ids                       # [C, Es]
+    ridx = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    # packed lexicographic key (age, row id); garbage itime on !ok rows
+    # may wrap, but the where() keeps only in-range keys < INF32
+    key = jnp.where(ok, itime_ref[0, :] * r2 + ridx, INF32)
+
+    @pl.when((phase == 0) & (ci == 0))
+    def _init_m():
+        m_ref[...] = jnp.full_like(m_ref, INF32)
+
+    @pl.when(phase == 0)
+    def _accumulate():
+        cmin = jnp.min(
+            jnp.where(onehot & ok[:, None], key[:, None], INF32), axis=0)
+        m_ref[...] = jnp.minimum(m_ref[...], cmin[None, :])
+
+    @pl.when(phase == 1)
+    def _emit():
+        # dense channel mask applied once, after the reduction: a busy /
+        # dead / padded channel (chok=0) grants nobody
+        m = jnp.where(chok_ref[0, :] != 0, m_ref[0, :], INF32)  # [Es]
+        won = m != INF32
+        won_ref[0, :] = won.astype(jnp.int32)
+        wprio_ref[0, :] = jnp.where(won, m & (r2 - 1), 0)
+        # pop mask: keys are unique per row, so a row wins iff its key
+        # equals its channel's masked minimum (one-hot sum == gather)
+        m_row = jnp.sum(jnp.where(onehot, m[None, :], 0), axis=1)
+        win_ref[0, :] = (ok & (m_row == key)).astype(jnp.int32)
+
+
+def cycle_core_pallas(out, itime, ok, ch_ok, *, r2, interpret=True):
+    """Raw tiled dispatch; padding/reshaping is ops.py's responsibility.
+
+    Row inputs are `[nc, chunk]` int32 (padded rows carry ok=0, and
+    `itime * r2 + row` must be < INF32 on ok rows); `ch_ok` is
+    `[1, Es]` int32 with Es a lane-width multiple of E + 1.  Returns
+    (win `[nc, chunk]`, won_ch `[1, Es]`, wprio `[1, Es]`) int32.
+    """
+    nc, C = out.shape
+    Es = ch_ok.shape[1]
+    kern = functools.partial(_cycle_kernel, chunk=C, num_seg=Es, r2=r2)
+    row = pl.BlockSpec((1, C), lambda p, c: (c, 0))
+    chan = pl.BlockSpec((1, Es), lambda p, c: (0, 0))
+    win, won, wprio = pl.pallas_call(
+        kern,
+        grid=(2, nc),
+        in_specs=[row, row, row, chan],
+        out_specs=[row, chan, chan],
+        out_shape=[jax.ShapeDtypeStruct((nc, C), jnp.int32),
+                   jax.ShapeDtypeStruct((1, Es), jnp.int32),
+                   jax.ShapeDtypeStruct((1, Es), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, Es), jnp.int32)],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(out, itime, ok, ch_ok)
+    return win, won, wprio

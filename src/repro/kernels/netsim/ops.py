@@ -1,18 +1,20 @@
-"""Padding/layout wrapper: engine-facing entry point for the fused grant.
+"""Padding/layout wrappers: engine-facing entry points for the netsim
+kernels (`grant` — the standalone two-pass arbitration; `cycle_core` —
+the fused cycle step's packed-key grant + pop decisions).
 
-Pads the request rows to a whole number of row chunks (ghost rows are
-`valid=0`, so they never win) and the channel axis to a lane-width
-multiple of E + 1 (the +1 is the overflow segment ineligible rows map
-to), widens the bool masks to int32 for the kernel, and slices the masks
-back.  Called from inside the (jitted, vmapped) engine step, so it is a
-plain traceable function — no jit of its own.
+Both pad the request rows to a whole number of row chunks (ghost rows
+are `valid=0` / `ok=0`, so they never win) and the channel axis to a
+lane-width multiple of E + 1 (the +1 is the overflow segment ineligible
+rows map to), widen the bool masks to int32 for the kernel, and slice
+the masks back.  Called from inside the (jitted, vmapped) engine step,
+so they are plain traceable functions — no jit of their own.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import grant_pallas
+from .kernel import cycle_core_pallas, grant_pallas
 
 _CHUNK = 128      # rows per grid step; [chunk, Es] tiles stay VPU-sized
 _LANE = 128       # channel-axis padding multiple (TPU lane width)
@@ -57,3 +59,41 @@ def grant(out, itime, valid, ovc_count, is_eject, ch_busy, ch_alive,
         buf_pkts=buf_pkts, chunk=C, interpret=interpret)
     return (win.reshape(-1)[:N].astype(bool),
             won[0, :E].astype(bool))
+
+
+def cycle_core(out, itime, ok, ch_ok, *, r2: int, chunk: int = _CHUNK,
+               interpret: bool | None = None):
+    """Fused-step arbitration core: one `pallas_call` computing the
+    channel winner table and the per-row pop mask from the packed key
+    ``itime * r2 + row``.
+
+    `ok` is the complete per-row eligibility (valid & routable & credit
+    & alive — the fused step computes it from its cached routes), and
+    `ch_ok` the dense per-channel mask (not busy & alive).  `r2` must be
+    a power of two > N with ``max(itime) * r2 + r2 - 1 < 2^31 - 1`` (the
+    caller guards this and falls back to the two-pass jnp grant when the
+    cycle budget would overflow).  Returns
+    (won_ch [E] bool, wprio [E] int32 winner row id, win [N] bool).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N = out.shape[0]
+    E = ch_ok.shape[0]
+    C = min(chunk, _round_up(N, 8))
+    nc = -(-N // C)
+    rpad = nc * C - N
+    Es = _round_up(E + 1, _LANE)
+
+    def rows(x, fill=0):
+        x = x.astype(jnp.int32)
+        if rpad:
+            x = jnp.concatenate(
+                [x, jnp.full((rpad,), fill, dtype=jnp.int32)])
+        return x.reshape(nc, C)
+
+    win, won, wprio = cycle_core_pallas(
+        rows(out, fill=-1), rows(itime), rows(ok),
+        jnp.pad(ch_ok.astype(jnp.int32), (0, Es - E)).reshape(1, Es),
+        r2=r2, interpret=interpret)
+    return (won[0, :E].astype(bool), wprio[0, :E],
+            win.reshape(-1)[:N].astype(bool))

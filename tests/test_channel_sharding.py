@@ -1,0 +1,168 @@
+"""2-D (lanes x shards) channel sharding: bit-identity and accounting.
+
+`REPRO_CHANNEL_SHARDS=K` block-partitions each lane's channel-id space
+across K shard devices inside the fused cycle step (halo exchange at the
+phase boundary; see repro/core/engine/fused.py).  The multi-device
+backend state only exists before JAX initializes, so the sharded half
+runs in a SUBPROCESS with `REPRO_HOST_DEVICES=4`; the parent runs the
+identical grids single-device in-process and compares raw per-lane
+counters exactly.
+
+Coverage: all three vc_modes, a warm `FaultSchedule` lane mix (scheduled
+lanes take the per-cycle routing fallback), non-dividing channel counts
+(the dragonfly case pads ghost channels), and both 2-D shapes a 4-device
+host offers (lanes:2,shards:2 and lanes:1,shards:4) — each with exactly
+one compile per grid.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+WARMUP, MEASURE = 41, 131
+
+_CHILD = r"""
+import json, sys
+import repro            # applies REPRO_HOST_DEVICES before jax init
+import numpy as np
+import jax
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.engine import sweep as sweep_mod
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.topology import FaultSet, FaultSchedule
+
+assert len(jax.devices()) == 4, f"expected 4 devices, got {jax.devices()}"
+K = sweep_mod.channel_shards()
+out = []
+for case in CASES:
+    placement, pad, compiles, rows = RUN_CASE(case)
+    out.append(dict(case=case, placement=placement, pad=pad,
+                    compiles=compiles, rows=rows))
+print(json.dumps(out))
+"""
+
+# the shared case runner: exec'd by the child and imported by the parent
+# (single source, so both sides run byte-identical configurations)
+_COMMON = r"""
+WARMUP, MEASURE = %d, %d
+CASES = ["baseline", "merged", "dragonfly_warm"]
+
+def RUN_CASE(case):
+    import numpy as np
+    from repro.core import topology as T
+    from repro.core import traffic as TR
+    from repro.core.engine import sweep as sweep_mod
+    from repro.core.simulator import SimConfig, Simulator
+    from repro.core.topology import FaultSet, FaultSchedule
+
+    def rowdump(results):
+        return [dict(d=r.delivered_pkts, g=r.generated_pkts,
+                     dr=r.dropped_pkts, lat=r.avg_latency,
+                     thr=r.throughput_per_chip, st=r.stranded_pkts,
+                     hops=sorted(r.hops_by_type.items()))
+                for r in results]
+
+    before = sweep_mod.compile_counter()
+    if case == "baseline":
+        net = T.build_switchless(
+            T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=3), "chsh-b")
+        cfg = SimConfig(warmup=WARMUP, measure=MEASURE, vc_mode="baseline",
+                        route_mode="min", vcs_per_class=2,
+                        step_impl="fused")
+        sim = Simulator(net, cfg, TR.uniform(net))
+        run = sim._batched.run_lanes(
+            [(r, s, None) for r in (0.4, 0.9, 1.6) for s in (0, 1)])
+    elif case == "merged":
+        net = T.build_switchless(
+            T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=3), "chsh-m")
+        cfg = SimConfig(warmup=WARMUP, measure=MEASURE,
+                        vc_mode="updown_merged", route_mode="min",
+                        vcs_per_class=2, step_impl="fused")
+        sim = Simulator(net, cfg, TR.uniform(net))
+        run = sim._batched.run_lanes([(0.5, 0, None), (1.2, 1, None)])
+    else:
+        # non-dividing channel count (ghost-channel padding) + a warm
+        # schedule lane mix: scheduled lanes route per cycle, pristine
+        # lanes keep the cached-route fast path — in one dispatch
+        net = T.build_switch_dragonfly(T.paper_radix16_dragonfly(g=3))
+        cfg = SimConfig(warmup=WARMUP, measure=MEASURE, vc_mode="updown",
+                        route_mode="val", vcs_per_class=2,
+                        step_impl="fused")
+        glob_ch = np.where(np.asarray(net.ch_type) == T.GLOBAL)[0]
+        f = FaultSchedule((
+            (0, FaultSet()),
+            (60, FaultSet(dead_ch=frozenset(int(c)
+                                            for c in glob_ch[:2])))))
+        sim = Simulator(net, cfg, TR.uniform(net))
+        run = sim._batched.run_lanes(
+            [(0.4, 0, None), (0.9, 1, f), (1.6, 0, f)])
+    compiles = sweep_mod.compile_counter() - before
+    return (run.placement, round(run.pad_fraction, 9), compiles,
+            rowdump(run.results))
+""" % (WARMUP, MEASURE)
+
+
+def _run_child(extra_env):
+    env = dict(os.environ, **extra_env)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in sys.path if p] +
+        [p for p in (env.get("PYTHONPATH") or "").split(os.pathsep) if p])
+    proc = subprocess.run([sys.executable, "-c", _COMMON + _CHILD],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+_single_cache = None
+
+
+def _single_device():
+    """The same three grids, single-device in-process (memoized: both
+    shard-shape tests compare against the identical reference)."""
+    global _single_cache
+    if _single_cache is None:
+        ns = {}
+        exec(_COMMON, ns)
+        # normalize through JSON exactly like the child's output does
+        # (tuples -> lists, numpy scalars -> plain floats)
+        _single_cache = {case: json.loads(json.dumps(ns["RUN_CASE"](case)))
+                         for case in ns["CASES"]}
+    return _single_cache
+
+
+@pytest.mark.parametrize("shards,placement", [(2, "lanes:2,shards:2"),
+                                              (4, "lanes:1,shards:4")])
+def test_channel_sharded_bit_identical(shards, placement):
+    """Acceptance: the 2-D sharded dispatch reproduces the single-device
+    fused run bit for bit — every counter of every lane — across all
+    three vc_modes, a warm-fault lane mix, and ghost-channel padding,
+    with one compile per grid."""
+    child = _run_child({"REPRO_HOST_DEVICES": "4",
+                        "REPRO_CHANNEL_SHARDS": str(shards)})
+    ref = _single_device()
+    for rec in child:
+        case = rec["case"]
+        r_placement, r_pad, _, r_rows = ref[case]
+        assert r_placement == "single"
+        assert rec["placement"] == placement, case
+        assert rec["compiles"] == 1, case
+        if case == "dragonfly_warm":
+            # E=438 channels don't divide the shard count: ghost pad
+            assert rec["pad"] > 0
+        assert rec["rows"] == r_rows, case   # exact: ints and floats
+
+
+def test_channel_shards_knob_ignored_on_jnp_step():
+    """REPRO_CHANNEL_SHARDS only applies to fused-step dispatches; the
+    jnp oracle path never shards channels (placement stays 1-D)."""
+    from repro.core.engine import sweep as sweep_mod
+    os.environ["REPRO_CHANNEL_SHARDS"] = "2"
+    try:
+        assert sweep_mod.channel_shards() == 2
+    finally:
+        del os.environ["REPRO_CHANNEL_SHARDS"]
+    assert sweep_mod.channel_shards() == 1

@@ -47,6 +47,7 @@ print(json.dumps(dict(
     ndev=len(jax.devices()),
     compiles=sweep_mod.compile_counter() - before,
     grid_compiles=grid.compile_count,
+    placement=grid.placement,
     rows=[dict(d=r.delivered_pkts, g=r.generated_pkts,
                dr=r.dropped_pkts, lat=r.avg_latency,
                thr=r.throughput_per_chip, hops=r.hops_by_type)
@@ -83,14 +84,30 @@ def _single_device_rows():
 def test_sharded_non_multiple_lanes_bit_identical():
     """Acceptance: B=6 lanes on 4 forced host devices (ghost-padded to 8)
     reproduce the single-device sweep lane-for-lane, bit for bit, with
-    exactly one compile."""
-    child = _run_child({"REPRO_HOST_DEVICES": "4"})
+    exactly one compile.  REPRO_SHARD_MIN_WORK=0 disables the small-grid
+    gate (this grid is deliberately tiny; by default it would run
+    single-device — see test_small_grid_stays_single_device)."""
+    child = _run_child({"REPRO_HOST_DEVICES": "4",
+                        "REPRO_SHARD_MIN_WORK": "0"})
     assert child["ndev"] == 4
     assert child["compiles"] == 1
     assert child["grid_compiles"] == 1
+    assert child["placement"] == "lanes:4"
     rows, compiles = _single_device_rows()
     assert compiles == 1
     assert child["rows"] == rows       # exact: ints and float equality
+
+
+def test_small_grid_stays_single_device():
+    """The min-work gate: a grid under REPRO_SHARD_MIN_WORK lane-cycles
+    skips lane sharding even on a multi-device host (dispatch overhead
+    dominates there), and records the choice in `placement`."""
+    child = _run_child({"REPRO_HOST_DEVICES": "4"})
+    assert child["ndev"] == 4
+    assert child["placement"] == "single"
+    assert child["compiles"] == 1
+    rows, _ = _single_device_rows()
+    assert child["rows"] == rows
 
 
 def test_repro_host_devices_knob():
