@@ -131,6 +131,10 @@ def _bench_scenario(name, spec, env=None):
         lanes_per_s=spec.num_lanes / wall,
         step_impl=sorted({r.step_impl for r in spec.routings}),
         grant_impl=sorted({r.grant_impl for r in spec.routings}),
+        # arbitration form each grid compiled ("combined" | "two_pass");
+        # a fused scenario reporting "two_pass" hit the packed-key int32
+        # overflow fallback (see docs/performance.md / repro.analysis)
+        grant_form=sorted({g.grant_form for g in steady.grids}),
         placements=sorted({g.placement for g in steady.grids}),
         pad_fraction=max((g.pad_fraction for g in steady.grids),
                          default=0.0),

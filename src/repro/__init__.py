@@ -22,12 +22,32 @@ HLO, different executor).  Opt-in because the flag may not exist on
 every XLA build; "thunks" explicitly keeps the default runtime.
 
 Both knobs must be read BEFORE the backend exists, hence this module.
+
+This module is also the ONLY place the library reads environment
+variables (`repro.analysis` lint rule REPRO002): every other `REPRO_*`
+knob goes through `env_int` below, so the full knob surface is auditable
+in one file — `REPRO_SHARD_MIN_WORK` / `REPRO_CHANNEL_SHARDS`
+(`core.engine.sweep`) and `REPRO_RR_MAX_CHANNELS` (`exp.runner`) document
+their semantics at their call sites.
 """
 from __future__ import annotations
 
 import os
 import sys
 import warnings
+
+
+def env_int(name: str, default: int) -> int:
+    """Integer environment knob; unset/empty/non-integer -> `default`.
+
+    The single env-read helper of the library (lint rule REPRO002 keeps
+    all `os.environ` access in this module, so the knob surface stays
+    auditable in one place)."""
+    raw = os.environ.get(name, "").strip()
+    try:
+        return int(raw) if raw else default
+    except ValueError:
+        return default
 
 
 def _flag_setup() -> None:

@@ -1,0 +1,27 @@
+"""Static verification + lint for the repro engine (docs/analysis.md).
+
+Four passes, none of which runs a simulation cycle:
+
+  spec     (`specpass`)    per-scenario proofs from the declarative
+           spec: VC-scheme resolution, per-epoch CDG deadlock freedom,
+           fault-schedule routability, and the fused grant's int32
+           packed-key interval analysis (which grant form each scenario
+           takes, surfaced instead of silently falling back).
+  jaxpr    (`jaxprpass`)   abstract traces of every (step_impl, vc_mode,
+           fault-kind) combination: dtype stability, scan-carry
+           stability, scatter OOB-mode audit, and concrete batch-purity
+           probes of the route kernels.
+  compile  (`compilepass`) abstract lowering signatures per grid: the
+           runner's one-compile-per-grid promise, certified from shapes
+           alone.
+  lint     (`lint`)        repo-specific AST rules REPRO001-004.
+
+CLI: `python -m repro.analysis.check --all --lint` (the CI `analysis`
+job's gate; exits nonzero on any unsuppressed error or warning).
+Suppressions live exclusively in `allowlist.DEFAULT_ENTRIES` or an
+`--allowlist` file — there is no inline escape hatch.
+"""
+from .allowlist import AllowEntry, Allowlist
+from .findings import Finding, Report
+
+__all__ = ["AllowEntry", "Allowlist", "Finding", "Report"]

@@ -1,0 +1,116 @@
+"""`python -m repro.analysis.check` — the static verification CLI.
+
+Runs the four analysis passes (docs/analysis.md) without simulating a
+single cycle and exits nonzero on any unsuppressed error OR warning:
+
+    python -m repro.analysis.check --all --lint          # the CI gate
+    python -m repro.analysis.check --scenario fig11
+    python -m repro.analysis.check --spec my_scenario.json
+    python -m repro.analysis.check --all --out report.json
+
+`--spec FILE` is the admission test for external specs (and for future
+`TopologySpec` builders / scenario PRs): a file that doesn't construct,
+strands a fault epoch, pairs VC modes illegally, or overflows the fused
+grant key fails here before anything compiles.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from . import allowlist as allowlist_mod
+from .findings import Report
+
+
+def repo_root() -> Path:
+    """The checkout root: `src/repro/...` two parents up from the
+    package when run from a source tree, else the CWD."""
+    pkg = Path(__file__).resolve().parents[1]   # .../src/repro
+    if pkg.parent.name == "src":
+        return pkg.parent.parent
+    return Path.cwd()
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Static verification of the repro engine and its "
+                    "experiment specs (no simulation cycles).")
+    p.add_argument("--all", action="store_true",
+                   help="check every registered scenario (spec + compile "
+                        "passes) and audit the engine traces (jaxpr pass)")
+    p.add_argument("--scenario", action="append", default=[],
+                   metavar="NAME", help="check one registered scenario "
+                   "(repeatable)")
+    p.add_argument("--spec", action="append", default=[], metavar="FILE",
+                   help="check a JSON ExperimentSpec file (repeatable)")
+    p.add_argument("--lint", action="store_true",
+                   help="run the REPRO001-004 AST lint over the repo")
+    p.add_argument("--pairs", type=int, default=None, metavar="N",
+                   help="flow pairs per CDG deadlock proof (default 400)")
+    p.add_argument("--out", metavar="FILE",
+                   help="write the JSON report here")
+    p.add_argument("--allowlist", metavar="FILE",
+                   help="extra allowlist entries (RULE path reason)")
+    p.add_argument("--root", metavar="DIR",
+                   help="repo root to lint (default: auto-detected)")
+    p.add_argument("--verbose", "-v", action="store_true",
+                   help="print info findings (the proof log) too")
+    return p
+
+
+def run(args) -> Report:
+    report = Report()
+    t0 = time.time()
+
+    scenario_names = list(args.scenario)
+    if args.all:
+        from ..exp.registry import list_scenarios
+        scenario_names = list_scenarios()
+
+    if scenario_names or args.spec:
+        from . import compilepass, specpass
+        kw = {} if args.pairs is None else {"n_pairs": args.pairs}
+        for name in scenario_names:
+            specpass.check_scenario(name, report, **kw)
+            compilepass.check_scenario(name, report)
+        for path in args.spec:
+            specpass.check_spec_file(path, report, **kw)
+        report.mark_pass("spec")
+        report.mark_pass("compile")
+
+    if args.all:
+        from . import jaxprpass
+        jaxprpass.run_jaxprpass(report)
+        report.mark_pass("jaxpr")
+
+    if args.lint:
+        from .lint import run_lint
+        root = Path(args.root) if args.root else repo_root()
+        report.extend(run_lint(root))
+        report.mark_pass("lint")
+
+    report.apply_allowlist(allowlist_mod.Allowlist.load(args.allowlist))
+    report.add("check", "CHECK_TIME", "info", "-",
+               f"all passes in {time.time() - t0:.1f}s")
+    return report
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if not (args.all or args.scenario or args.spec or args.lint):
+        build_parser().print_help()
+        print("\nnothing selected: pass --all, --lint, --scenario, "
+              "or --spec", file=sys.stderr)
+        return 2
+    report = run(args)
+    if args.out:
+        Path(args.out).write_text(report.to_json() + "\n")
+    print(report.render(verbose=args.verbose))
+    return 1 if report.failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

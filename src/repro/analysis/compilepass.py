@@ -1,0 +1,131 @@
+"""Compile-signature pass: statically certify the one-compile-per-grid
+guarantee `repro.exp.runner` promises.
+
+A grid (one topology x routing x traffic cell over the lane axes) is
+dispatched as ONE jitted whole-sweep call: every lane — each (rate,
+seed, fault) combination — must lower with the same abstract signature,
+or XLA retraces per lane and the "exactly one compile per grid" promise
+(and the AOT-cache accounting in BENCH_perf.json) silently breaks.
+
+The pass reconstructs each grid's dispatch signature abstractly:
+
+  * the batched `SimState` via `jax.eval_shape` over `make_state` — the
+    paper-scale state is never allocated;
+  * the stacked lane fault pytree via `build_lane`/`stack_lanes` on
+    SHAPE PROXIES of the grid's fault specs (an empty `FaultSet` per
+    cold spec, an empty-epoch `FaultSchedule` with the spec's onsets per
+    warm spec — fault *content* never changes shapes, epoch COUNT does),
+    with the runner's promotion rule applied (any scheduled lane
+    promotes cold lanes to 1-epoch schedules) and heterogeneous epoch
+    counts padded by `stack_lanes`;
+  * the lane rate/key arrays by their known [B]-shapes.
+
+  COMPILE_ONE  error: the grid's lanes do not stack into one dense
+               pytree (structure mismatch across lanes) — the batched
+               dispatch would fail or fan out into per-lane compiles.
+  COMPILE_SIG  info: the scenario's distinct signature count, i.e. how
+               many XLA compiles the whole scenario costs and how many
+               grids reuse an earlier cell's AOT entry (the runner's
+               `_SWEEP_CACHE` sharing, proved from shapes alone).
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+
+from ..core.engine.state import build_lane, make_state, stack_lanes
+from ..core.routing import num_vcs
+from ..core.topology import FaultSchedule, FaultSet
+from ..exp.registry import get_scenario
+from ..exp.spec import ExperimentSpec
+
+PASS = "compile"
+
+
+def _shape_proxy(fault_spec):
+    """A fault value with this spec's fl SHAPES but empty content."""
+    if fault_spec.is_none:
+        return None
+    if fault_spec.onsets:
+        return FaultSchedule(
+            ((0, FaultSet()),)
+            + tuple((c, FaultSet()) for c in fault_spec.onsets))
+    return FaultSet()
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _sig_digest(*parts) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(repr(p).encode())
+    return h.hexdigest()[:12]
+
+
+def grid_signature(topo, routing, traffic, axes) -> str:
+    """The abstract lowering signature of one grid's single dispatch.
+    Raises on lane-structure mismatch (the COMPILE_ONE failure)."""
+    net = topo.build()
+    cfg = routing.to_simconfig(axes)
+    NV = (num_vcs(topo.kind, cfg.vc_mode, cfg.nonminimal)
+          * cfg.vcs_per_class)
+    B = axes.lanes_per_grid
+
+    proxies = [_shape_proxy(f) for f in axes.faults]
+    if any(isinstance(p, FaultSchedule) for p in proxies):
+        # the runner's promotion rule: one scheduled lane makes every
+        # lane a schedule (cold sets become 1-epoch schedules)
+        proxies = [p if isinstance(p, FaultSchedule)
+                   else FaultSchedule(((0, p or FaultSet()),))
+                   for p in proxies]
+    lanes_fl = [build_lane(net, cfg, p) for p in proxies]
+    per_lane = (len(axes.faults) > 1
+                or any(f.per_seed and not f.is_none and len(axes.seeds) > 1
+                       for f in axes.faults))
+    lane_data = stack_lanes(lanes_fl) if len(lanes_fl) > 1 else lanes_fl[0]
+
+    state_sds = jax.eval_shape(
+        lambda: make_state(net, cfg, NV, (B,)))
+    shapes = jax.tree.map(lambda s: (s.shape, str(s.dtype)),
+                          (state_sds, _sds(lane_data)))
+    return _sig_digest(
+        topo.kind, topo.params, tuple(sorted(routing.to_dict().items())),
+        traffic.to_dict(), axes.warmup + axes.measure, B, per_lane,
+        jax.tree.structure(shapes), tuple(jax.tree.leaves(shapes)))
+
+
+def check_spec(spec: ExperimentSpec, origin: str, report) -> None:
+    sigs: dict = {}
+    ok = True
+    for topo in spec.topologies:
+        for routing in spec.routings:
+            for traffic in spec.traffics:
+                where = (f"{origin} [{topo.label} x {routing.label} "
+                         f"x {traffic.label}]")
+                try:
+                    sig = grid_signature(topo, routing, traffic,
+                                         spec.axes)
+                except Exception as e:
+                    ok = False
+                    report.add(
+                        PASS, "COMPILE_ONE", "error", where,
+                        f"grid lanes do not lower to one dispatch "
+                        f"signature: {type(e).__name__}: {e}")
+                    continue
+                sigs.setdefault(sig, []).append(where)
+    if ok and sigs:
+        n_grids = sum(len(v) for v in sigs.values())
+        report.add(
+            PASS, "COMPILE_SIG", "info", origin,
+            f"{n_grids} grid(s), {len(sigs)} distinct compile "
+            f"signature(s): every grid lowers to exactly one dispatch; "
+            f"{n_grids - len(sigs)} grid(s) reuse an earlier cell's "
+            f"AOT-cached executable")
+
+
+def check_scenario(name: str, report) -> None:
+    check_spec(get_scenario(name), f"scenario:{name}", report)

@@ -1,0 +1,221 @@
+"""Jaxpr pass: abstract-trace audits of the engine step and route
+kernels.  Everything here runs on `jax.make_jaxpr` / `jax.eval_shape`
+over `ShapeDtypeStruct`s — no FLOPs, no device buffers at network scale
+— except the batch-purity probe, which runs the route kernels concretely
+on a few dozen packets (microseconds).
+
+The traced matrix is every `(step_impl, vc_mode, fault-kind)` combination
+on one small switch-less net: {jnp, fused} x {baseline, updown,
+updown_merged} x {pristine, cold FaultSet, warm FaultSchedule} — 18
+traces.  `grant_impl` stays "jnp" (tracing the Pallas grant would need a
+real backend; its bit-equality to the jnp oracle is a runtime test,
+`tests/test_kernels.py`).
+
+  JAXPR_DTYPE  a 64-bit aval appears anywhere in the step's jaxpr.  The
+               engine is int32/float32 by design (x64 is disabled, and
+               the packed arbitration keys budget for int32 exactly —
+               see `fused.grant_form`); a silent promotion would either
+               crash under x64=False or desync the overflow analysis.
+  JAXPR_CARRY  the step's output state avals differ from its input state
+               avals — `lax.scan` would reject the carry, and under vmap
+               a widened carry silently doubles peak memory.
+  JAXPR_OOB    a SCATTER carrying PROMISE_IN_BOUNDS reached the step.
+               Engine writes must keep XLA's safe OOB modes (`.at[]`
+               defaults to FILL_OR_DROP, which silently drops the
+               sentinel writes the alive-mask logic produces); a
+               promise-in-bounds scatter turns an out-of-bounds sentinel
+               into undefined behavior.  Gathers are exempt: plain
+               `x[i]` indexing lowers to a PROMISE_IN_BOUNDS gather by
+               design (jnp normalizes the indices first), so the pass
+               only counts them in the info line.
+  JAXPR_BATCH  a route kernel broke batch purity: routing packet i must
+               not depend on packet j != i (the engine vmaps one kernel
+               over lanes AND arbitrates whole channel grids in one
+               call).  Probed concretely: full-batch output vs the same
+               packets routed one at a time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine.state import build_lane, make_state
+from ..core.engine.step import make_step
+from ..core.routing.pipeline import make_pipeline
+from ..core.simulator import SimConfig
+from ..exp.spec import FaultSpec, TopologySpec, TrafficSpec
+
+PASS = "jaxpr"
+
+STEP_IMPLS = ("jnp", "fused")
+VC_MODES = ("baseline", "updown", "updown_merged")
+FAULT_KINDS = ("pristine", "cold", "warm")
+
+# the trace network: small enough to trace in milliseconds, big enough
+# to exercise every channel class (mesh, local, global, inject, eject)
+TRACE_TOPO = TopologySpec.switchless(a=2, b=2, m=2, n=4, noc=2, g=3)
+
+_WIDE = {jnp.dtype("int64"), jnp.dtype("uint64"), jnp.dtype("float64")}
+
+
+def _fault_for(kind: str) -> FaultSpec | None:
+    # GLOBAL-only link faults: routable under every VC mode, so the same
+    # fault population serves the whole matrix
+    if kind == "pristine":
+        return None
+    onsets = (4,) if kind == "warm" else ()
+    return FaultSpec(kind="links", frac=0.2, types=("global",),
+                     onsets=onsets)
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        tree)
+
+
+def _subjaxprs(value):
+    if hasattr(value, "jaxpr"):        # ClosedJaxpr
+        yield value.jaxpr
+    elif hasattr(value, "eqns"):       # Jaxpr
+        yield value
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _iter_eqns(sub)
+
+
+def trace_combo(step_impl: str, vc_mode: str, fault_kind: str):
+    """Abstractly trace one matrix cell; returns (jaxpr, out_sds,
+    state_sds) — raises whatever the trace raises."""
+    net = TRACE_TOPO.build()
+    cfg = SimConfig(warmup=4, measure=12, vc_mode=vc_mode,
+                    route_mode="min", vcs_per_class=1, step_impl=step_impl)
+    pattern = TrafficSpec("uniform").resolve(net)
+    step, consts = make_step(net, cfg, pattern)
+    fs = _fault_for(fault_kind)
+    faults = None if fs is None else fs.sample(net, vc_mode, 0)
+    fl = build_lane(net, cfg, faults)
+    state = make_state(net, cfg, consts["NV"])
+
+    fn = lambda s, t, k, r, f: step(s, (t, k, r, f))[0]
+    args = (_sds(state),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            _sds(jax.random.PRNGKey(0)),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            _sds(fl))
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    out_sds = jax.eval_shape(fn, *args)
+    return jaxpr, out_sds, args[0]
+
+
+def check_combo(report, step_impl: str, vc_mode: str,
+                fault_kind: str) -> None:
+    where = f"trace:{step_impl}/{vc_mode}/{fault_kind}"
+    try:
+        jaxpr, out_sds, state_sds = trace_combo(
+            step_impl, vc_mode, fault_kind)
+    except Exception as e:  # a combo that doesn't trace is itself a bug
+        report.add(PASS, "JAXPR_TRACE", "error", where,
+                   f"step does not trace: {type(e).__name__}: {e}")
+        return
+
+    wide, n_eqns, oob = set(), 0, []
+    for eqn in _iter_eqns(jaxpr.jaxpr):
+        n_eqns += 1
+        for var in eqn.outvars:
+            dt = getattr(var.aval, "dtype", None)
+            try:
+                dt = None if dt is None else jnp.dtype(dt)
+            except TypeError:  # extended dtypes (PRNG keys)
+                continue
+            if dt is not None and dt in _WIDE:
+                wide.add(f"{eqn.primitive.name}->{dt.name}")
+        if eqn.primitive.name.startswith("scatter"):
+            mode = eqn.params.get("mode")
+            if mode is not None and "PROMISE_IN_BOUNDS" in str(mode):
+                oob.append(eqn.primitive.name)
+    if wide:
+        report.add(PASS, "JAXPR_DTYPE", "error", where,
+                   f"64-bit values in the step jaxpr "
+                   f"({', '.join(sorted(wide))}): the engine is "
+                   f"int32/float32 by contract (the packed arbitration "
+                   f"key budget assumes it)")
+    if oob:
+        report.add(PASS, "JAXPR_OOB", "error", where,
+                   f"{len(oob)} scatter op(s) with PROMISE_IN_BOUNDS: "
+                   f"engine writes rely on FILL_OR_DROP to discard the "
+                   f"-1/E sentinel indices; a promised scatter makes "
+                   f"them undefined behavior")
+
+    in_tree = jax.tree.map(lambda s: (s.shape, str(s.dtype)), state_sds)
+    out_tree = jax.tree.map(lambda s: (s.shape, str(s.dtype)), out_sds)
+    if in_tree != out_tree:
+        report.add(PASS, "JAXPR_CARRY", "error", where,
+                   "step output state avals differ from input state "
+                   "avals — lax.scan would reject this carry")
+    else:
+        report.add(PASS, "JAXPR_TRACE", "info", where,
+                   f"{n_eqns} eqns; carry stable, no 64-bit values, "
+                   f"all scatters use safe OOB modes")
+
+
+def probe_batch_purity(route_call, fl, cur, dest, mis, meta) -> list:
+    """Concretely compare full-batch routing against one-packet slices;
+    returns the indices where any output differs (empty == pure).
+    `route_call(fl, cur, dest, mis, meta) -> (out_ch, req_vc, meta')`."""
+    full = route_call(fl, cur, dest, mis, meta)
+    bad = []
+    for i in range(len(cur)):
+        s = slice(i, i + 1)
+        row = route_call(fl, cur[s], dest[s], mis[s], meta[s])
+        if any(not np.array_equal(np.asarray(f[i:i + 1]), np.asarray(r))
+               for f, r in zip(full, row)):
+            bad.append(i)
+    return bad
+
+
+def check_kernel_batch_purity(report, net, vc_mode: str, *,
+                              kernel=None, B: int = 48) -> None:
+    """JAXPR_BATCH probe for one net's route kernel (or an injected
+    `kernel`, for fixture tests)."""
+    where = f"kernel:{net.meta['kind']}/{vc_mode}"
+    pipe = make_pipeline(net, vc_mode)
+    route_call = kernel if kernel is not None else pipe.kernel
+    fl = pipe.tables(None)
+    rng = np.random.default_rng(7)
+    term_node = np.asarray(net.term_node)
+    cur = jnp.asarray(term_node[rng.integers(0, net.num_terminals, B)])
+    dest = jnp.asarray(rng.integers(0, net.num_terminals, B), jnp.int32)
+    mis = jnp.full((B,), -1, jnp.int32)
+    meta = jnp.zeros((B,), jnp.int32)
+    bad = probe_batch_purity(route_call, fl, cur, dest, mis, meta)
+    if bad:
+        report.add(PASS, "JAXPR_BATCH", "error", where,
+                   f"route kernel is not batch-pure: packets "
+                   f"{bad[:6]} route differently alone vs in a batch "
+                   f"of {B} — the vmapped engine would route them "
+                   f"wrong")
+    else:
+        report.add(PASS, "JAXPR_BATCH", "info", where,
+                   f"batch-pure over {B} probe packets")
+
+
+def run_jaxprpass(report) -> None:
+    for step_impl in STEP_IMPLS:
+        for vc_mode in VC_MODES:
+            for fault_kind in FAULT_KINDS:
+                check_combo(report, step_impl, vc_mode, fault_kind)
+    net = TRACE_TOPO.build()
+    for vc_mode in VC_MODES:
+        check_kernel_batch_purity(report, net, vc_mode)
+    dfly = TopologySpec.dragonfly(t=2, l=2, gl=2).build()
+    check_kernel_batch_purity(report, dfly, "baseline")

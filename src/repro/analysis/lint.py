@@ -1,0 +1,200 @@
+"""AST lint: repo-specific rules the generic linters can't know.
+
+REPRO001  magic channel-type literal: comparing a `ch_type`-ish value
+          against a bare int instead of the MESH/LOCAL/GLOBAL/INJECT/
+          EJECT constants (`core.topology`).  A literal silently
+          desynchronizes if the channel-type encoding ever changes.
+          Scope: src/repro, benchmarks, examples.
+REPRO002  environment read outside `src/repro/__init__.py`: every knob
+          must go through that module (`repro.env_int`) so the whole
+          env surface — including the two that MUST be read before jax
+          initializes — is auditable in one file.  Scope: src/repro.
+REPRO003  Python-level `if`/`while` on a traced value (`jnp`/`jax`/
+          `lax` appears in the test expression) inside the engine or
+          routing packages: under `jit` this either crashes
+          (TracerBoolConversionError) or, worse, silently bakes one
+          branch into the compiled step.  Trace-time branches on Python
+          values (pytree structure, config) are fine and don't match.
+          Scope: src/repro/core/engine, src/repro/core/routing.
+REPRO004  `sys.path.insert` in benchmarks/examples: they run as modules
+          from the repo root (`python -m benchmarks.run`); path hacks
+          mask broken imports and break installed-package runs.
+          Scope: benchmarks, examples.
+
+All rules are pure AST — no imports of the linted code, so lint runs in
+milliseconds and can't be confused by import-time side effects.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import Finding
+
+PASS = "lint"
+
+# directories linted, relative to the repo root
+LINT_TREES = ("src/repro", "benchmarks", "examples")
+
+# REPRO001: int literals that collide with the channel-type encoding
+_CH_TYPE_RANGE = range(0, 5)
+_CH_TYPE_HINTS = ("ch_type", "ch_typ")
+
+_TRACED_ROOTS = {"jnp", "lax"}          # REPRO003 name roots
+_TRACED_JAX = "jax"
+
+
+def _iter_py(root: Path):
+    for tree in LINT_TREES:
+        base = root / tree
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            yield p
+
+
+def _rel(root: Path, path: Path) -> str:
+    try:
+        return path.relative_to(root).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def _names_in(node) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _is_ch_literal(node) -> bool:
+    return (isinstance(node, ast.Constant)
+            and type(node.value) is int
+            and node.value in _CH_TYPE_RANGE)
+
+
+def _mentions_ch_type(node) -> bool:
+    for n in ast.walk(node):
+        name = None
+        if isinstance(n, ast.Name):
+            name = n.id
+        elif isinstance(n, ast.Attribute):
+            name = n.attr
+        if name and any(h in name for h in _CH_TYPE_HINTS):
+            return True
+    return False
+
+
+def _check_repro001(tree, rel, out):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        sides = [node.left] + list(node.comparators)
+        lits = [s for s in sides if _is_ch_literal(s)]
+        others = [s for s in sides if not _is_ch_literal(s)]
+        if lits and any(_mentions_ch_type(s) for s in others):
+            out.append(Finding(
+                PASS, "REPRO001", "error", f"{rel}:{node.lineno}",
+                f"channel type compared against magic literal "
+                f"{lits[0].value}; use the MESH/LOCAL/GLOBAL/INJECT/"
+                f"EJECT constants from repro.core.topology"))
+
+
+def _check_repro002(tree, rel, out):
+    if rel == "src/repro/__init__.py":
+        return
+    if not rel.startswith("src/repro/"):
+        return
+    for node in ast.walk(tree):
+        hit = None
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                # os.environ.get(...) / os.getenv(...)
+                if (f.attr == "get" and isinstance(f.value, ast.Attribute)
+                        and f.value.attr == "environ"):
+                    hit = "os.environ.get"
+                elif (f.attr == "getenv"
+                      and isinstance(f.value, ast.Name)
+                      and f.value.id == "os"):
+                    hit = "os.getenv"
+        elif (isinstance(node, ast.Subscript)
+              and isinstance(node.ctx, ast.Load)
+              and isinstance(node.value, ast.Attribute)
+              and node.value.attr == "environ"):
+            hit = "os.environ[...]"
+        if hit:
+            out.append(Finding(
+                PASS, "REPRO002", "error", f"{rel}:{node.lineno}",
+                f"environment read ({hit}) outside src/repro/"
+                f"__init__.py; route the knob through repro.env_int so "
+                f"the env surface stays auditable in one module"))
+
+
+def _check_repro003(tree, rel, out):
+    if not (rel.startswith("src/repro/core/engine/")
+            or rel.startswith("src/repro/core/routing/")):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.If, ast.While)):
+            continue
+        names = _names_in(node.test)
+        if names & _TRACED_ROOTS or _TRACED_JAX in names:
+            kind = "if" if isinstance(node, ast.If) else "while"
+            out.append(Finding(
+                PASS, "REPRO003", "error", f"{rel}:{node.lineno}",
+                f"Python-level `{kind}` on a traced expression "
+                f"({', '.join(sorted(names & (_TRACED_ROOTS | {_TRACED_JAX})))} "
+                f"in the test): under jit this crashes or bakes one "
+                f"branch into the compiled step; use jnp.where/"
+                f"lax.cond, or branch on trace-time Python state"))
+
+
+def _check_repro004(tree, rel, out):
+    if not (rel.startswith("benchmarks/") or rel.startswith("examples/")):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if (isinstance(f, ast.Attribute) and f.attr == "insert"
+                and isinstance(f.value, ast.Attribute)
+                and f.value.attr == "path"
+                and isinstance(f.value.value, ast.Name)
+                and f.value.value.id == "sys"):
+            out.append(Finding(
+                PASS, "REPRO004", "error", f"{rel}:{node.lineno}",
+                "sys.path.insert in benchmarks/examples: run them as "
+                "modules from the repo root (python -m ...) instead of "
+                "patching the import path"))
+
+
+_CHECKS = (_check_repro001, _check_repro002, _check_repro003,
+           _check_repro004)
+
+
+def lint_file(path: Path, rel: str) -> list:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [Finding(PASS, "REPRO000", "error",
+                        f"{rel}:{e.lineno or 0}",
+                        f"file does not parse: {e.msg}")]
+    out: list = []
+    for check in _CHECKS:
+        check(tree, rel, out)
+    return out
+
+
+def run_lint(root: Path) -> list:
+    """Lint every in-scope file under `root`; returns the findings plus
+    one info summary."""
+    findings: list = []
+    n = 0
+    for path in _iter_py(root):
+        n += 1
+        findings.extend(lint_file(path, _rel(root, path)))
+    findings.append(Finding(
+        PASS, "LINT_COVERAGE", "info", str(root),
+        f"linted {n} files under {', '.join(LINT_TREES)} "
+        f"({len(findings)} rule hits)"))
+    return findings

@@ -1,0 +1,184 @@
+"""Spec pass: static verification of experiment specs, no simulation.
+
+For every scenario (registered name or `--spec FILE` JSON) the pass
+establishes, per (topology x routing) cell family:
+
+  SPEC_INVALID   the spec doesn't construct: `ExperimentSpec.from_dict`
+                 rejected it (bad VC/route pairing, fault onset past the
+                 run, unknown kinds, ...).  Registered scenarios can't
+                 hit this — construction already ran at import — so it
+                 only fires for file-loaded specs; the construction-time
+                 validators are thereby the exact rule set this pass
+                 enforces on external specs.
+  SPEC_VC        the VC scheme resolves (`routing.num_vcs`) — reported
+                 as info with the resolved VC count per class.
+  SPEC_CDG       a channel-dependency-graph deadlock proof failed: the
+                 pristine net, a sampled cold fault set, or some epoch
+                 of a warm `FaultSchedule` traced a CDG cycle or crossed
+                 a dead channel (`routing.verify.assert_deadlock_free`).
+  SPEC_FAULTS    the fault population itself can't be sampled routably
+                 (`topology.validate_faults` rejected the composition).
+  SPEC_GRANT_OVERFLOW  a `step_impl="fused"` cell whose packed
+                 age<<log2(N)|key arbitration key would overflow int32,
+                 so the engine takes the two-pass grant instead of the
+                 combined single-segment_min form.  Legal — the fallback
+                 is exact — but a registered *fused* scenario that
+                 silently loses its fused grant is almost never intended,
+                 so this gates as a warning.  The taken form is also
+                 surfaced at runtime (`SweepResult.grant_form` /
+                 BENCH_perf.json); this pass catches it before anything
+                 compiles.
+
+Proofs are memoized across scenarios by network identity
+`(kind, params)` — NOT by label, because e.g. fig10a and the fig14
+C-group grids name the same net under different labels — so the
+17-scenario `--all` run proves each distinct (net, vc scheme, fault
+population) combination exactly once.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from ..core.engine.fused import grant_form
+from ..core.routing import num_vcs
+from ..core.routing.verify import (assert_deadlock_free,
+                                   assert_schedule_deadlock_free)
+from ..core.topology import FaultSchedule
+from ..exp.registry import get_scenario
+from ..exp.spec import ExperimentSpec
+
+PASS = "spec"
+
+# proof memo: key -> CDG edge count (successes only; failures re-raise)
+_PROOF_CACHE: dict = {}
+
+DEFAULT_PAIRS = 400
+DEFAULT_EXHAUSTIVE = 20_000
+
+
+def _fault_key(f) -> tuple:
+    return (f.kind, f.frac, f.num, f.num_clusters, f.radius, f.types,
+            f.seed, f.per_seed, f.onsets)
+
+
+def _prove(net, topo, vc_mode, nonminimal, fault_spec, lane_seed,
+           n_pairs, exhaustive_limit) -> tuple:
+    """One memoized deadlock proof; returns (edges, cached, epochs)."""
+    key = (topo.kind, topo.params, vc_mode, nonminimal,
+           None if fault_spec is None else _fault_key(fault_spec),
+           None if fault_spec is None else lane_seed,
+           n_pairs, exhaustive_limit)
+    if key in _PROOF_CACHE:
+        return _PROOF_CACHE[key] + (True,)
+    rng = np.random.default_rng(0)
+    if fault_spec is None:
+        edges = assert_deadlock_free(
+            net, vc_mode, nonminimal, rng, n_pairs=n_pairs,
+            exhaustive_limit=exhaustive_limit)
+        epochs = 1
+    else:
+        sampled = fault_spec.sample(net, vc_mode, lane_seed)
+        if isinstance(sampled, FaultSchedule):
+            per_epoch = assert_schedule_deadlock_free(
+                net, vc_mode, nonminimal, rng, sampled, n_pairs=n_pairs)
+            edges, epochs = sum(per_epoch), len(per_epoch)
+        else:
+            edges = assert_deadlock_free(
+                net, vc_mode, nonminimal, rng, n_pairs=n_pairs,
+                exhaustive_limit=exhaustive_limit, faults=sampled)
+            epochs = 1
+    _PROOF_CACHE[key] = (edges, epochs)
+    return edges, epochs, False
+
+
+def check_spec(spec: ExperimentSpec, origin: str, report, *,
+               n_pairs: int = DEFAULT_PAIRS,
+               exhaustive_limit: int = DEFAULT_EXHAUSTIVE) -> None:
+    """Run every spec-pass check on one constructed spec."""
+    faulty = [f for f in spec.axes.faults if not f.is_none]
+    lane_seed = spec.axes.seeds[0]
+    for topo in spec.topologies:
+        for routing in spec.routings:
+            where = f"{origin} [{topo.label} x {routing.label}]"
+            nonmin = routing.route_mode != "min"
+            try:
+                nv = num_vcs(topo.kind, routing.vc_mode, nonmin)
+            except (KeyError, ValueError) as e:
+                report.add(PASS, "SPEC_VC", "error", where,
+                           f"VC scheme does not resolve: {e}")
+                continue
+            report.add(
+                PASS, "SPEC_VC", "info", where,
+                f"{nv} VC classes x {routing.vcs_per_class} per class")
+
+            net = topo.build()
+            proofs, edges, cached = 0, 0, 0
+            try:
+                e, _, hit = _prove(net, topo, routing.vc_mode, nonmin,
+                                   None, lane_seed, n_pairs,
+                                   exhaustive_limit)
+                proofs, edges, cached = 1, e, int(hit)
+                for f in faulty:
+                    e, epochs, hit = _prove(
+                        net, topo, routing.vc_mode, nonmin, f, lane_seed,
+                        n_pairs, exhaustive_limit)
+                    proofs += epochs
+                    edges += e
+                    cached += int(hit)
+            except AssertionError as e:
+                report.add(PASS, "SPEC_CDG", "error", where,
+                           f"deadlock proof failed: {e}")
+                continue
+            except ValueError as e:
+                report.add(PASS, "SPEC_FAULTS", "error", where,
+                           f"fault population unroutable: {e}")
+                continue
+            report.add(
+                PASS, "SPEC_CDG", "info", where,
+                f"{proofs} epoch CDG(s) acyclic ({edges} dependency "
+                f"edges, {cached} proof(s) shared with earlier "
+                f"scenarios)")
+
+            if routing.step_impl == "fused":
+                cfg = routing.to_simconfig(spec.axes)
+                form = grant_form(net, cfg)
+                if form == "combined":
+                    report.add(PASS, "SPEC_GRANT", "info", where,
+                               "fused step takes the combined "
+                               "single-segment_min grant")
+                else:
+                    cycles = spec.axes.warmup + spec.axes.measure
+                    report.add(
+                        PASS, "SPEC_GRANT_OVERFLOW", "warning", where,
+                        f"fused step falls back to the two-pass grant: "
+                        f"the packed cycle<<log2(N)|key arbitration key "
+                        f"overflows int32 at {cycles} cycles on this "
+                        f"net (exact but ~2x the segment_min work; "
+                        f"shrink warmup+measure or accept with an "
+                        f"allowlist entry)")
+
+
+def check_scenario(name: str, report, **kw) -> None:
+    check_spec(get_scenario(name), f"scenario:{name}", report, **kw)
+
+
+def check_spec_file(path: str, report, **kw) -> None:
+    """Spec-pass a JSON spec file — the admission test for external /
+    future scenarios (e.g. new `TopologySpec` builders): construction
+    errors land as SPEC_INVALID instead of raising."""
+    try:
+        with open(path) as f:
+            d = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        report.add(PASS, "SPEC_INVALID", "error", path,
+                   f"unreadable spec file: {e}")
+        return
+    try:
+        spec = ExperimentSpec.from_dict(d)
+    except (ValueError, KeyError, TypeError) as e:
+        report.add(PASS, "SPEC_INVALID", "error", path,
+                   f"spec does not construct: {e}")
+        return
+    check_spec(spec, f"spec:{path}", report, **kw)

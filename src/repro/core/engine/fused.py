@@ -114,6 +114,35 @@ def _pad1(x, pad, fill=0):
         [x, np.full((pad,) + x.shape[1:], fill, x.dtype)]))
 
 
+def grant_form(net: Network, cfg, shards: int = 1) -> str:
+    """Which grant form the fused step compiles for this (net, cfg):
+    ``"combined"`` — one packed ``itime * R2 + prio`` segment-min — or
+    ``"two_pass"`` — the oracle's age-then-priority fallback, taken when
+    the packed key could exceed int32 (``cycles * R2 + R2 - 1``).
+
+    Single source of truth for the overflow predicate: the step builders
+    below, `SweepResult.grant_form` reporting, and the static spec pass
+    (`repro.analysis`) all call this instead of re-deriving the interval
+    bound.  ``shards`` matters because the K-way channel shard packs
+    GLOBAL row priorities over the ghost-padded ``Ep * NV + Tp`` id
+    space, a strictly larger modulus than the unsharded request grid's
+    ``E_req * NV + T``.
+    """
+    from ..routing import num_vcs
+    NV = (num_vcs(net.meta["kind"], cfg.vc_mode, cfg.nonminimal)
+          * cfg.vcs_per_class)
+    if shards <= 1:
+        N = net.first_eject * NV + net.num_terminals
+    else:
+        ch_pad, term_pad = fused_pad(net, shards)
+        N = ((net.num_channels + ch_pad) * NV
+             + net.num_terminals + term_pad)
+    R2 = _pow2(N)
+    cycles = cfg.warmup + cfg.measure
+    return ("combined" if cycles * R2 + (R2 - 1) < 2**31 - 1
+            else "two_pass")
+
+
 def fused_pad(net: Network, shards: int) -> tuple[int, int]:
     """(ch_pad, term_pad) ghost padding a K-way channel shard needs so
     each shard's block is dense (`make_state(..., ch_pad, term_pad)` pads
@@ -197,10 +226,11 @@ def _make_unsharded(net, cfg, pattern, inject_mask, consts, route_kernel):
     NC = NV // vpc
     N = ER * NV + T
     R2 = _pow2(N)
-    cycles = cfg.warmup + cfg.measure
     # the combined int32 key needs headroom for the largest (itime, prio)
     # pair; fall back to the oracle's two-pass form when it would overflow
-    use_combined = cycles * R2 + (R2 - 1) < 2**31 - 1
+    # (`grant_form` is the shared predicate; the chosen form is surfaced
+    # in `SweepResult.grant_form` and checked statically by the spec pass)
+    use_combined = grant_form(net, cfg) == "combined"
     use_pallas = getattr(cfg, "grant_impl", "jnp") == "pallas" \
         and use_combined
     if use_pallas:
@@ -361,8 +391,7 @@ def _make_sharded(net, cfg, pattern, inject_mask, consts, route_kernel,
     Ep, Tp = E + ch_pad, T + term_pad
     Ek, Tk = Ep // K, Tp // K
     R2 = _pow2(Ep * NV + Tp)                 # global-priority modulus
-    cycles = cfg.warmup + cfg.measure
-    use_combined = cycles * R2 + (R2 - 1) < 2**31 - 1
+    use_combined = grant_form(net, cfg, K) == "combined"
 
     # padded static tables (ghost channels: dead, type -1; ghost
     # terminals: no injection channel, never generate)

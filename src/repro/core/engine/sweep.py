@@ -58,7 +58,6 @@ from __future__ import annotations
 
 import functools
 import inspect
-import os
 import time
 from dataclasses import dataclass
 from typing import NamedTuple
@@ -80,10 +79,11 @@ _SHMAP_NOCHECK = ({"check_rep": False} if "check_rep" in _SHMAP_PARAMS
                   else {"check_vma": False} if "check_vma" in _SHMAP_PARAMS
                   else {})
 
+from ... import env_int
 from ..topology import (FaultSchedule, FaultSet, Network, as_fault_schedule,
                         compose_faults, final_faults)
 from ..traffic import as_pattern
-from .fused import fused_pad, make_fused_step
+from .fused import fused_pad, grant_form, make_fused_step
 from .state import build_lane, make_state, stack_lanes
 from .stats import finalize, zero_stats
 from .step import make_step
@@ -119,26 +119,19 @@ def host_devices() -> list:
     return jax.devices()
 
 
-def _env_int(name: str, default: int) -> int:
-    try:
-        return int(os.environ.get(name, default))
-    except ValueError:
-        return default
-
-
 def shard_min_work() -> int:
     """Minimum (real lanes x cycles) for the automatic lane shard_map to
     pay for its per-cycle dispatch overhead; smaller grids run
     single-device.  Override with REPRO_SHARD_MIN_WORK (0 = always
     shard, as the sharding bit-identity tests do)."""
-    return _env_int("REPRO_SHARD_MIN_WORK", 4096)
+    return env_int("REPRO_SHARD_MIN_WORK", 4096)
 
 
 def channel_shards() -> int:
     """Requested channel-shard count K (REPRO_CHANNEL_SHARDS, default 1).
     Only honored by fused-step (`cfg.step_impl="fused"`) dispatches with
     K devices available per lane row."""
-    return max(_env_int("REPRO_CHANNEL_SHARDS", 1), 1)
+    return max(env_int("REPRO_CHANNEL_SHARDS", 1), 1)
 
 
 def lane_mesh(shards: int = 1) -> Mesh | None:
@@ -264,6 +257,7 @@ class LaneRun(NamedTuple):
     fault_sets: list       # composed per-lane fault states (None=pristine)
     placement: str = "single"   # "single" | "lanes:L" | "lanes:L,shards:K"
     pad_fraction: float = 0.0   # ghost share of the dispatched state
+    grant_form: str = "two_pass"   # "combined" | "two_pass" (see fused.py)
 
 
 @dataclass
@@ -288,6 +282,12 @@ class SweepResult:
     fault_fracs: list | None = None   # per-row failed-link fraction (faults)
     placement: str = "single"  # device placement the dispatch chose
     pad_fraction: float = 0.0  # ghost (lane + channel pad) state share
+    # grant arbitration form the dispatch compiled: "combined" (the fused
+    # step's single packed segment-min) or "two_pass" (the age-then-
+    # priority oracle form — also what the fused step falls back to when
+    # the packed key would overflow int32; `fused.grant_form` decides,
+    # and the static spec pass reports/warns per scenario)
+    grant_form: str = "two_pass"
 
     def result(self, rate_idx: int, seed_idx: int = 0):
         return self.results[rate_idx][seed_idx]
@@ -335,10 +335,11 @@ class _LanePlan:
 
     __slots__ = ("lane_triples", "fault_sets", "args", "compiled",
                  "compile_s", "compile_count", "placement",
-                 "pad_fraction", "used")
+                 "pad_fraction", "grant_form", "used")
 
     def __init__(self, lane_triples, fault_sets, args, compiled,
-                 compile_s, compile_count, placement, pad_fraction):
+                 compile_s, compile_count, placement, pad_fraction,
+                 grant_form):
         self.lane_triples = lane_triples
         self.fault_sets = fault_sets
         self.args = args
@@ -347,6 +348,7 @@ class _LanePlan:
         self.compile_count = compile_count
         self.placement = placement
         self.pad_fraction = pad_fraction
+        self.grant_form = grant_form
         self.used = False
 
 
@@ -361,13 +363,15 @@ class _PendingLanes:
     """
 
     def __init__(self, sweep, stats, num_lanes, lane_triples, fault_sets,
-                 compile_s, compile_count, t0, placement, pad_fraction):
+                 compile_s, compile_count, t0, placement, pad_fraction,
+                 grant_form):
         self._sweep, self._stats = sweep, stats
         self._B, self._lanes = num_lanes, lane_triples
         self._fsets = fault_sets
         self._compile_s, self._compiles = compile_s, compile_count
         self._t0 = t0
         self._placement, self._pad_frac = placement, pad_fraction
+        self._grant_form = grant_form
 
     def finish(self) -> LaneRun:
         stats = jax.tree.map(np.asarray, self._stats)      # blocks
@@ -378,7 +382,8 @@ class _PendingLanes:
                             self._sweep._chips(self._fsets[i]))
                    for i in range(self._B)]     # ghost pad lanes excluded
         return LaneRun(results, wall, self._compile_s, self._compiles,
-                       self._fsets, self._placement, self._pad_frac)
+                       self._fsets, self._placement, self._pad_frac,
+                       self._grant_form)
 
 
 class BatchedSweep:
@@ -455,6 +460,9 @@ class BatchedSweep:
             if device is None and B > 1 and not small:
                 mesh = lane_mesh()
         step = self._sharded_step(K) if K > 1 else self.step
+        # the arbitration form this dispatch compiles: the oracle step IS
+        # the two-pass form; the fused step picks per `fused.grant_form`
+        gform = grant_form(self.net, cfg, K) if fused else "two_pass"
         ch_pad, term_pad = fused_pad(self.net, K) if K > 1 else (0, 0)
         nd = int(mesh.shape["lanes"]) if mesh is not None else 1
         pad = (-B) % nd
@@ -533,7 +541,7 @@ class BatchedSweep:
         return _LanePlan(lane_triples, fsets,
                          (state0, lane_rates, lane_keys, lane_data),
                          compiled, compile_s, compiles, placement,
-                         pad_fraction)
+                         pad_fraction, gform)
 
     def _prepare_lanes(self, lanes):
         """Compose/sample per-lane fault data; returns the dense lane
@@ -598,7 +606,8 @@ class BatchedSweep:
         return _PendingLanes(self, state.stats, len(plan.lane_triples),
                              plan.lane_triples, plan.fault_sets,
                              plan.compile_s, plan.compile_count, t0,
-                             plan.placement, plan.pad_fraction)
+                             plan.placement, plan.pad_fraction,
+                             plan.grant_form)
 
     def run_lanes(self, lanes, device=None) -> LaneRun:
         """The fully general lane axis: one compiled batched scan over an
@@ -643,7 +652,8 @@ class BatchedSweep:
                            compile_count=run.compile_count,
                            wall_s=run.wall_s, compile_s=run.compile_s,
                            placement=run.placement,
-                           pad_fraction=run.pad_fraction)
+                           pad_fraction=run.pad_fraction,
+                           grant_form=run.grant_form)
 
     def run_faults(self, offered_per_chip: float, fault_grid,
                    seeds=None) -> SweepResult:
@@ -683,4 +693,5 @@ class BatchedSweep:
                            results=results, compile_count=run.compile_count,
                            wall_s=run.wall_s, compile_s=run.compile_s,
                            fault_fracs=fracs, placement=run.placement,
-                           pad_fraction=run.pad_fraction)
+                           pad_fraction=run.pad_fraction,
+                           grant_form=run.grant_form)

@@ -31,13 +31,13 @@ hook benchmarks use to build sequential/legacy baselines from the exact
 """
 from __future__ import annotations
 
-import os
 import sys
 from dataclasses import dataclass, field
 from typing import NamedTuple
 
 import numpy as np
 
+from .. import env_int
 from ..core.engine.sweep import BatchedSweep, SweepResult
 from ..core.simulator import SimConfig, SimResult
 from ..core.topology import Network, final_faults
@@ -65,8 +65,7 @@ def rr_max_channels() -> int:
     (fig11 measured ~20% slower round-robined on forced host devices).
     The per-cell decision is visible in `GridResult.placement` /
     `run_experiment(verbose=True)`."""
-    raw = os.environ.get("REPRO_RR_MAX_CHANNELS", "").strip()
-    return int(raw) if raw else 1024
+    return env_int("REPRO_RR_MAX_CHANNELS", 1024)
 
 
 def clear_caches() -> None:
@@ -122,6 +121,10 @@ class GridResult:
                                 # ("single" | "lanes:L" | "lanes:L,shards:K")
     pad_fraction: float = 0.0   # ghost fraction of the dispatched
                                 # lane x channel grid (placement padding)
+    grant_form: str = "two_pass"   # arbitration form the grid compiled
+                                # ("combined" | "two_pass"; fused steps
+                                # fall back to two_pass on int32 packed-
+                                # key overflow — see fused.grant_form)
 
     def result(self, fault_idx: int, rate_idx: int,
                seed_idx: int = 0) -> SimResult:
@@ -133,7 +136,8 @@ class GridResult:
                            results=self.results[fault_idx],
                            compile_count=self.compile_count,
                            wall_s=self.wall_s, placement=self.placement,
-                           pad_fraction=self.pad_fraction)
+                           pad_fraction=self.pad_fraction,
+                           grant_form=self.grant_form)
 
 
 @dataclass
@@ -192,6 +196,7 @@ class ExperimentResult:
                         compile_count=g.compile_count,
                         placement=g.placement,
                         pad_fraction=g.pad_fraction,
+                        grant_form=g.grant_form,
                         wall_s=dt))
         return out
 
@@ -288,7 +293,8 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = False
             compile_count=compiles, wall_s=run.wall_s,
             compile_s=compile_s,
             placement=getattr(run, "placement", "single"),
-            pad_fraction=getattr(run, "pad_fraction", 0.0)))
+            pad_fraction=getattr(run, "pad_fraction", 0.0),
+            grant_form=getattr(run, "grant_form", "two_pass")))
         if verbose:
             print(f"[exp:{spec.name}]   {cell.topology.label} "
                   f"{cell.routing.label} {cell.traffic.label} done in "

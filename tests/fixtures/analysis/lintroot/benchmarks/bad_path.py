@@ -1,0 +1,4 @@
+"""Lint fixture: REPRO004 violation (never imported)."""
+import sys
+
+sys.path.insert(0, "..")                                    # REPRO004

@@ -1,0 +1,10 @@
+"""Lint fixture: REPRO001 + REPRO002 violations (never imported)."""
+import os
+
+SHARDS = int(os.environ.get("REPRO_FIXTURE_SHARDS", "1"))   # REPRO002
+WORK = int(os.getenv("REPRO_FIXTURE_WORK", "0"))            # REPRO002
+HOME = os.environ["HOME"]                                   # REPRO002
+
+
+def is_global(ch_type):
+    return ch_type == 2                                     # REPRO001

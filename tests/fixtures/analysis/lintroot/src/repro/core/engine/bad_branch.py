@@ -1,0 +1,10 @@
+"""Lint fixture: REPRO003 violation (never imported)."""
+import jax.numpy as jnp
+
+
+def drain(state, occupancy):
+    if jnp.sum(occupancy) > 0:                              # REPRO003
+        return state
+    while jnp.any(occupancy):                               # REPRO003
+        occupancy = occupancy - 1
+    return state
