@@ -27,7 +27,8 @@ This module is also the ONLY place the library reads environment
 variables (`repro.analysis` lint rule REPRO002): every other `REPRO_*`
 knob goes through `env_int` below, so the full knob surface is auditable
 in one file — `REPRO_SHARD_MIN_WORK` / `REPRO_CHANNEL_SHARDS`
-(`core.engine.sweep`) and `REPRO_RR_MAX_CHANNELS` (`exp.runner`) document
+(`core.engine.sweep`), `REPRO_RR_MAX_CHANNELS` (`exp.runner`), and
+`REPRO_SERVE_WINDOW` / `REPRO_SERVE_PACK` (`exp.serve.service`) document
 their semantics at their call sites.
 """
 from __future__ import annotations

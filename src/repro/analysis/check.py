@@ -1,11 +1,12 @@
 """`python -m repro.analysis.check` — the static verification CLI.
 
-Runs the four analysis passes (docs/analysis.md) without simulating a
+Runs the analysis passes (docs/analysis.md) without simulating a
 single cycle and exits nonzero on any unsuppressed error OR warning:
 
-    python -m repro.analysis.check --all --lint          # the CI gate
+    python -m repro.analysis.check --all --lint --serve  # the CI gate
     python -m repro.analysis.check --scenario fig11
     python -m repro.analysis.check --spec my_scenario.json
+    python -m repro.analysis.check --serve               # serve buckets
     python -m repro.analysis.check --all --out report.json
 
 `--spec FILE` is the admission test for external specs (and for future
@@ -48,6 +49,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="check a JSON ExperimentSpec file (repeatable)")
     p.add_argument("--lint", action="store_true",
                    help="run the REPRO001-004 AST lint over the repo")
+    p.add_argument("--serve", action="store_true",
+                   help="certify the repro.exp.serve one-compile-per-"
+                        "bucket guarantee over the mixed smoke "
+                        "submission (servepass)")
     p.add_argument("--pairs", type=int, default=None, metavar="N",
                    help="flow pairs per CDG deadlock proof (default 400)")
     p.add_argument("--out", metavar="FILE",
@@ -86,6 +91,11 @@ def run(args) -> Report:
         jaxprpass.run_jaxprpass(report)
         report.mark_pass("jaxpr")
 
+    if args.serve:
+        from . import servepass
+        servepass.check_submission(servepass.SMOKE_SUBMISSION, report)
+        report.mark_pass("serve")
+
     if args.lint:
         from .lint import run_lint
         root = Path(args.root) if args.root else repo_root()
@@ -100,10 +110,11 @@ def run(args) -> Report:
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
-    if not (args.all or args.scenario or args.spec or args.lint):
+    if not (args.all or args.scenario or args.spec or args.lint
+            or args.serve):
         build_parser().print_help()
-        print("\nnothing selected: pass --all, --lint, --scenario, "
-              "or --spec", file=sys.stderr)
+        print("\nnothing selected: pass --all, --lint, --serve, "
+              "--scenario, or --spec", file=sys.stderr)
         return 2
     report = run(args)
     if args.out:

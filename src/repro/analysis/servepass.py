@@ -1,0 +1,152 @@
+"""Serve pass: statically certify the one-compile-per-bucket guarantee
+`repro.exp.serve` promises.
+
+The service buckets every submitted lane by its compile-signature key
+(`scheduler.BucketKey`) and packs heterogeneous tenants' lanes into
+ghost-padded, fixed-width dispatches, claiming total compiles == number
+of distinct buckets.  That claim has two failure modes this pass checks
+without compiling anything:
+
+  * a bucket's lanes don't stack into one dense pytree (the packed
+    dispatch would fail or fan out) — SERVE_ONE, error;
+  * a pack's lowered signature depends on WHICH lanes landed in it
+    (e.g. an epoch count the bucket key failed to capture), so two packs
+    of one bucket would retrace — SERVE_SIG, error.
+
+The certification lowers a mixed submission exactly the way the service
+does (`scheduler.lower_request`: runner cell order, runner lane order,
+memoized fault sampling), chunks each bucket's units FIFO into
+pack-sized groups, and compares every pack's abstract dispatch
+signature — `jax.eval_shape` over the batched `SimState` plus the real
+ghost-padded, epoch-pinned lane pytree — against the bucket's CANONICAL
+signature built from the key alone (empty fault proxies: fault content
+never changes shapes, epoch count does, and `BucketKey.epochs` pins it).
+Every pack matching its bucket's canonical signature proves signatures
+are a function of the key alone: total compiles == distinct buckets, no
+matter how tenants interleave.
+
+  SERVE_BUCKET  info: the submission's bucket/signature census — how
+                many lanes, buckets, and therefore compiles the mixed
+                submission costs.
+
+CLI: `python -m repro.analysis.check --serve` runs the pass over the
+registered smoke scenarios (`SMOKE_SUBMISSION`) — the same heterogeneous
+mix (cold, cold-faulted, warm-faulted) the CI serve-smoke job replays
+dynamically.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.engine.state import build_lane, make_state, stack_lanes
+from ..core.routing import num_vcs
+from ..core.topology import FaultSchedule, FaultSet, as_fault_schedule
+from ..exp.registry import get_scenario
+from .compilepass import _sds, _sig_digest
+
+PASS = "serve"
+
+# the heterogeneous standing submission `--serve` certifies: a cold
+# fault-free grid, a cold multi-fault grid, and a warm-fault grid —
+# one bucket each, three distinct signatures
+SMOKE_SUBMISSION = ("smoke", "smoke_faults", "smoke_warm_faults")
+
+
+def _canonical_fsets(key) -> list:
+    """The bucket's key-derived lane proxy: shapes depend only on the
+    epoch count (0 = cold), never on fault content."""
+    if key.epochs:
+        return [FaultSchedule(tuple((c, FaultSet())
+                                    for c in range(key.epochs)))]
+    return [FaultSet()]
+
+
+def pack_signature(key, fsets, pack: int) -> str:
+    """The abstract lowering signature of one ghost-padded pack dispatch
+    of bucket `key` holding lanes with fault states `fsets` — the exact
+    lane form `packer.Pack.open` builds (promote-to-schedule when the
+    bucket is warm, stack with the epoch count pinned, replicate the
+    last lane into the ghost pad).  Raises on lane-structure mismatch
+    (the SERVE_ONE failure)."""
+    from ..exp.serve.scheduler import bucket_cfg
+
+    net = key.topology.build()
+    cfg = bucket_cfg(key)
+    NV = (num_vcs(key.topology.kind, cfg.vc_mode, cfg.nonminimal)
+          * cfg.vcs_per_class)
+    B = max(pack, len(fsets))
+    if key.epochs:
+        fsets = [as_fault_schedule(f if f is not None else FaultSet())
+                 for f in fsets]
+    lanes_fl = [build_lane(net, cfg, f) for f in fsets]
+    lanes_fl += [lanes_fl[-1]] * (B - len(lanes_fl))
+    lane_data = stack_lanes(lanes_fl, epochs=key.epochs or None)
+
+    state_sds = jax.eval_shape(lambda: make_state(net, cfg, NV, (B,)))
+    shapes = jax.tree.map(lambda s: (s.shape, str(s.dtype)),
+                          (state_sds, _sds(lane_data)))
+    return _sig_digest(
+        key.topology.kind, key.topology.params,
+        tuple(sorted(key.routing.to_dict().items())),
+        key.traffic.to_dict(), key.warmup, key.measure, B,
+        jax.tree.structure(shapes), tuple(jax.tree.leaves(shapes)))
+
+
+def check_submission(names, report, pack: int = 8) -> None:
+    """Certify a mixed submission of registered scenarios lowers to
+    exactly one dispatch signature per bucket at pack width `pack`."""
+    from ..exp.serve.scheduler import lower_request
+
+    origin = "serve:" + "+".join(names)
+    by_bucket: dict = {}
+    seq = 0
+    for rid, name in enumerate(names, start=1):
+        units, _ = lower_request(get_scenario(name), rid, "ci", seq)
+        seq += len(units)
+        for u in units:
+            by_bucket.setdefault(u.bucket, []).append(u)
+
+    ok = True
+    sigs: set = set()
+    for key, units in sorted(by_bucket.items(),
+                             key=lambda kv: kv[1][0].seq):
+        where = f"{origin} [{key.label}]"
+        try:
+            canon = pack_signature(key, _canonical_fsets(key), pack)
+        except Exception as e:
+            ok = False
+            report.add(PASS, "SERVE_ONE", "error", where,
+                       f"bucket's canonical lane form does not lower to "
+                       f"one dispatch: {type(e).__name__}: {e}")
+            continue
+        sigs.add(canon)
+        for i in range(0, len(units), pack):
+            chunk = units[i:i + pack]
+            try:
+                sig = pack_signature(key, [u.fset for u in chunk], pack)
+            except Exception as e:
+                ok = False
+                report.add(
+                    PASS, "SERVE_ONE", "error", where,
+                    f"pack of lanes {[u.key for u in chunk]} does not "
+                    f"stack into one dispatch: {type(e).__name__}: {e}")
+                continue
+            if sig != canon:
+                ok = False
+                report.add(
+                    PASS, "SERVE_SIG", "error", where,
+                    f"pack of lanes {[u.key for u in chunk]} lowers to "
+                    f"signature {sig} != the bucket's canonical {canon}: "
+                    f"the bucket key does not capture everything the "
+                    f"compiled signature depends on (a second compile "
+                    f"per bucket at runtime)")
+    if ok and by_bucket:
+        n_units = sum(len(v) for v in by_bucket.values())
+        report.add(
+            PASS, "SERVE_BUCKET", "info", origin,
+            f"{len(names)} spec(s), {n_units} lane(s), "
+            f"{len(by_bucket)} bucket(s) -> {len(sigs)} compile "
+            f"signature(s) at pack={pack}: every ghost-padded pack "
+            f"lowers to its bucket's one canonical dispatch signature, "
+            f"so total compiles == distinct buckets regardless of "
+            f"tenant interleaving")

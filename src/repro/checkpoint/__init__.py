@@ -1,0 +1,6 @@
+"""Atomic on-disk snapshots of simulation state (npz + manifest,
+retention-K) — the persistence layer behind `repro.exp.serve` and any
+long `LaneSession` run that must survive preemption."""
+from .checkpointing import Checkpointer, restore_sim_state, save_sim_state
+
+__all__ = ["Checkpointer", "restore_sim_state", "save_sim_state"]

@@ -18,12 +18,21 @@ import numpy as np
 import jax
 
 
+def _path_key(k) -> str:
+    """One path entry -> a stable string: DictKey carries `.key`,
+    GetAttrKey (dataclass nodes like `SimState`) `.name`, SequenceKey
+    `.idx`."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
 def _flatten(tree, prefix=""):
     out = {}
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in flat:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                       for k in path)
+        key = "/".join(_path_key(k) for k in path)
         out[key] = np.asarray(leaf)
     return out
 
@@ -32,14 +41,21 @@ def _unflatten_into(tree, arrays, shardings=None):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     leaves = []
     for path, leaf in flat:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                       for k in path)
+        key = "/".join(_path_key(k) for k in path)
         arr = arrays[key]
-        tdtype = np.dtype(leaf.dtype)
+        # plain Python scalars (e.g. a session's cycle counter) are
+        # valid template leaves; their numpy dtype is the target
+        tdtype = (np.dtype(leaf.dtype) if hasattr(leaf, "dtype")
+                  else np.asarray(leaf).dtype)
         if arr.dtype != tdtype:
-            # np.savez stores ml_dtypes (bfloat16) as raw void bytes;
-            # reinterpret through the template dtype
-            if arr.dtype.itemsize == tdtype.itemsize:
+            if arr.dtype.kind == "V" and arr.dtype.itemsize == tdtype.itemsize:
+                # np.savez stores ml_dtypes (bfloat16) as raw void bytes;
+                # reinterpret the BYTES through the template dtype.  Only
+                # void arrays take this path: a typed mismatch (e.g. an
+                # int32 snapshot restored into a float32 template) must
+                # CONVERT, not reinterpret — `.view` there would silently
+                # scramble every value (regression-tested in
+                # tests/test_checkpoint.py).
                 arr = arr.view(tdtype)
             else:
                 arr = arr.astype(tdtype)
@@ -58,15 +74,20 @@ class Checkpointer:
         self._thread = None
 
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, state: dict, blocking: bool = True):
-        """state: pytree dict; fetched to host before the async write."""
+    def save(self, step: int, state: dict, blocking: bool = True,
+             extra: dict | None = None):
+        """state: pytree; fetched to host before the async write.  `extra`
+        is an optional JSON-serializable payload stored in the snapshot
+        manifest (e.g. the serve loop's queue/session bookkeeping) and
+        handed back by `restore(..., with_extra=True)` / `manifest()`."""
         host_state = jax.tree.map(np.asarray, state)  # device->host now
         if blocking:
-            self._write(step, host_state)
+            self._write(step, host_state, extra)
         else:
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_state), daemon=True)
+                target=self._write, args=(step, host_state, extra),
+                daemon=True)
             self._thread.start()
 
     def wait(self):
@@ -74,14 +95,16 @@ class Checkpointer:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host_state: dict):
+    def _write(self, step: int, host_state: dict,
+               extra: dict | None = None):
         tmp = os.path.join(self.dir, f".tmp-{step}-{os.getpid()}")
         os.makedirs(tmp, exist_ok=True)
         arrays = _flatten(host_state)
         np.savez(os.path.join(tmp, "state.npz"), **arrays)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "time": time.time(),
-                       "keys": sorted(arrays)}, f)
+                       "keys": sorted(arrays),
+                       "extra": extra}, f)
         final = os.path.join(self.dir, f"step-{step:08d}")
         if os.path.exists(final):
             shutil.rmtree(final)
@@ -106,6 +129,15 @@ class Checkpointer:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: int | None = None) -> dict:
+        """The JSON manifest of a snapshot (latest by default)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step-{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
+
     def restore(self, template: dict, step: int | None = None,
                 shardings=None) -> tuple[dict, int]:
         """Restore into the structure of `template`, placing shards per
@@ -118,3 +150,30 @@ class Checkpointer:
         with np.load(path) as z:
             arrays = {k: z[k] for k in z.files}
         return _unflatten_into(template, arrays, shardings), step
+
+
+# ---------------------------------------------------------------------------
+# Public SimState snapshot API (the engine/serve entry points)
+# ---------------------------------------------------------------------------
+
+def save_sim_state(directory: str, step: int, state, *,
+                   extra: dict | None = None, keep: int = 3) -> str:
+    """Write one atomic snapshot of a simulation-state pytree (e.g. a
+    `LaneSession.export()` dict: `SimState` arrays + lane keys + cycle)
+    under `directory/step-XXXXXXXX/`, keeping the newest `keep`
+    snapshots.  `extra` rides along in the manifest (JSON).  Returns the
+    snapshot directory path."""
+    ckpt = Checkpointer(directory, keep=keep)
+    ckpt.save(step, state, blocking=True, extra=extra)
+    return os.path.join(directory, f"step-{step:08d}")
+
+
+def restore_sim_state(directory: str, template, step: int | None = None):
+    """Restore a `save_sim_state` snapshot into the structure (shapes +
+    dtypes) of `template`; returns `(state, extra, step)` for the
+    requested snapshot (latest by default).  Restored integer/float
+    counters are exact — a resumed run continues bit-identically."""
+    ckpt = Checkpointer(directory)
+    state, step = ckpt.restore(template, step=step)
+    extra = ckpt.manifest(step).get("extra")
+    return state, extra, step

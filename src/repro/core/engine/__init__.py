@@ -21,8 +21,9 @@ from .inject import (make_inject_fn, make_misroute_fn, build_ugal_watch,
 from .apply import make_apply_fn
 from .stats import accumulate, finalize, zero_stats
 from .step import make_step, run_scan
-from .sweep import (BatchedSweep, LaneRun, SweepResult, compile_counter,
-                    lane_mesh, run_scan_batched)
+from .sweep import (BatchedSweep, LaneRun, LaneSession, SweepResult,
+                    clear_aot_cache, compile_counter, lane_mesh,
+                    run_scan_batched)
 
 __all__ = [
     "SimState", "SimStats", "Requests", "build_consts", "build_lane",
@@ -30,6 +31,7 @@ __all__ = [
     "make_state", "stack_lanes", "make_arbitrate_fn", "make_inject_fn",
     "make_misroute_fn", "build_ugal_watch", "ugal_queue_len",
     "make_apply_fn", "accumulate", "finalize", "zero_stats", "make_step",
-    "run_scan", "BatchedSweep", "LaneRun", "SweepResult",
-    "compile_counter", "lane_mesh", "run_scan_batched",
+    "run_scan", "BatchedSweep", "LaneRun", "LaneSession", "SweepResult",
+    "clear_aot_cache", "compile_counter", "lane_mesh",
+    "run_scan_batched",
 ]

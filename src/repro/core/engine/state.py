@@ -255,15 +255,20 @@ def resolve_epoch(fl: dict, t):
     return lane_epoch(fl, epoch_index(fl, t))
 
 
-def stack_lanes(lanes: list[dict]) -> dict:
+def stack_lanes(lanes: list[dict], epochs: int | None = None) -> dict:
     """Stack per-lane fault dicts into one lane-axis pytree [B, ...].
 
     Epoch-stacked lanes with differing epoch counts are padded to the
     longest schedule by repeating their final epoch with an unreachable
     onset cycle, so heterogeneous warm-fault grids still stack into one
-    dense `[B, P, ...]` pytree (and one compile)."""
+    dense `[B, P, ...]` pytree (and one compile).  `epochs` pins the
+    padded epoch count to AT LEAST that many — window-session packers
+    use it so every pack of a bucket stacks to the same [B, P, ...]
+    shapes regardless of which lanes happened to land in it."""
     if lanes and is_scheduled(lanes[0]):
         P = max(int(l["epoch_start"].shape[0]) for l in lanes)
+        if epochs is not None:
+            P = max(P, epochs)
         lanes = [_pad_epochs(l, P) for l in lanes]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
 

@@ -167,6 +167,21 @@ def _key_chain(key, cycles: int):
     return subs                                            # [cycles, 2]
 
 
+def _key_chain_seq(key, cycles: int):
+    """`_key_chain` plus every intermediate key: `keys_seq[i]` is the lane
+    key after i splits (`keys_seq[0] == key`), so a window that runs only
+    r <= cycles real cycles can hand `keys_seq[r]` to the next window and
+    the whole windowed run replays the uninterrupted subkey chain
+    bit-for-bit."""
+
+    def split(k, _):
+        k2, sub = jax.random.split(k)
+        return k2, (k2, sub)
+
+    _, (ks, subs) = jax.lax.scan(split, key, None, length=cycles)
+    return jnp.concatenate([key[None], ks]), subs   # [cycles+1, 2], [cycles, 2]
+
+
 def _scan_lanes(step, cycles, reset_at, per_lane_faults,
                 state0, rate_pkt, keys, lanes):
     """Advance B lanes in lockstep; state0/keys/rate_pkt carry axis 0 = B.
@@ -224,6 +239,65 @@ def _make_dispatch_fn(step, cycles, reset_at, per_lane_faults, mesh,
                                  data_spec),
                        out_specs=state_spec, **_SHMAP_NOCHECK)
     return jax.jit(f, donate_argnums=(0,))
+
+
+def _scan_window(step, window, reset_at, per_lane_faults,
+                 state0, keys, t0, t_end, rate_pkt, lanes):
+    """Advance B lanes exactly `window` scan iterations starting at
+    absolute cycle `t0`, masking iterations at or past `t_end` to a
+    no-op (`lax.cond` keeps the carried state untouched), and return the
+    advanced `(state, keys)` pair.
+
+    The fixed iteration count is what makes windowed execution compile
+    ONCE per lane signature: every window of a run — including the final
+    partial one — dispatches the same executable with different traced
+    `t0`/`t_end` scalars.  Keys advance only for the real cycles
+    (`keys_seq` gather), so chaining windows replays the exact subkey
+    chain of the one-shot `_scan_lanes` run and the windowed result is
+    bit-identical to the uninterrupted one.
+    """
+    _TRACE_COUNT[0] += 1  # trace-time side effect == one compilation
+    lane_axis = 0 if per_lane_faults else None
+    keys_seq, subkeys = jax.vmap(_key_chain_seq, in_axes=(0, None),
+                                 out_axes=(1, 1))(keys, window)
+    # keys_seq [window+1, B, 2], subkeys [window, B, 2]
+
+    def body(state, t_subs):
+        t, subs = t_subs
+
+        def advance(st):
+            st, _ = jax.vmap(
+                lambda s, k, r, f: step(s, (t, k, r, f)),
+                in_axes=(0, 0, 0, lane_axis))(st, subs, rate_pkt, lanes)
+            stats = jax.lax.cond(t == reset_at, zero_stats,
+                                 lambda s: s, st.stats)
+            return st.replace(stats=stats)
+
+        state = jax.lax.cond(t < t_end, advance, lambda st: st, state)
+        return state, None
+
+    state, _ = jax.lax.scan(body, state0,
+                            (t0 + jnp.arange(window), subkeys))
+    real = jnp.clip(t_end - t0, 0, window)
+    return state, keys_seq[real]
+
+
+def _make_window_fn(step, window, reset_at, per_lane_faults, mesh):
+    """The jittable one-window function, `shard_map`ped over the lane
+    axis when a mesh is given (mirrors `_make_dispatch_fn`; the traced
+    `t0`/`t_end` scalars replicate across devices).  State and keys are
+    donated — each window consumes the previous window's buffers."""
+    f = functools.partial(_scan_window, step, window, reset_at,
+                          per_lane_faults)
+    if mesh is not None:
+        lane_spec = PartitionSpec("lanes")
+        scal_spec = PartitionSpec()
+        data_spec = lane_spec if per_lane_faults else scal_spec
+        f = _shard_map(f, mesh=mesh,
+                       in_specs=(lane_spec, lane_spec, scal_spec,
+                                 scal_spec, lane_spec, data_spec),
+                       out_specs=(lane_spec, lane_spec), **_SHMAP_NOCHECK)
+    return jax.jit(f, donate_argnums=(0, 1))
 
 
 def _sig(tree) -> tuple:
@@ -386,6 +460,108 @@ class _PendingLanes:
                        self._grant_form)
 
 
+class LaneSession:
+    """A paused, resumable lane dispatch advanced window-by-window.
+
+    Created by `BatchedSweep.start_lanes`.  Unlike `run_lanes` — which
+    scans the whole cycle budget in one dispatch — a session holds the
+    live `SimState` (and the per-lane PRNG keys) between fixed-length
+    window dispatches, so a long-lived caller (`repro.exp.serve`) can
+    stream incremental stats after every window, checkpoint the state
+    mid-run, and interleave many independent sessions on one process.
+    Chained windows replay the one-shot run's per-cycle subkey chain
+    exactly, so `finish()` is bit-identical to `run_lanes` on the same
+    lane triples (pinned by tests/test_serve.py).
+
+    `export()` snapshots the session's dynamic state to host numpy
+    arrays; `BatchedSweep.start_lanes(..., restore=exported)` resumes a
+    fresh session from a snapshot — resumed runs reproduce the
+    uninterrupted run bit-for-bit because the state arrays, the lane
+    keys, and the absolute cycle count are the entire dynamic state.
+    """
+
+    __slots__ = ("sweep", "lane_triples", "fault_sets", "window", "total",
+                 "cycle", "state", "keys", "compiled", "placement",
+                 "pad_fraction", "grant_form", "compile_s", "compile_count",
+                 "num_lanes", "_rate_pkt_dev", "_lane_data")
+
+    def __init__(self, sweep, lane_triples, fault_sets, window, total,
+                 cycle, state, keys, compiled, rate_pkt, lane_data,
+                 placement, pad_fraction, grant_form, compile_s,
+                 compile_count):
+        self.sweep = sweep
+        self.lane_triples = lane_triples
+        self.fault_sets = fault_sets
+        self.window = window
+        self.total = total
+        self.cycle = cycle
+        self.state = state
+        self.keys = keys
+        self.compiled = compiled
+        self._rate_pkt_dev = rate_pkt
+        self._lane_data = lane_data
+        self.placement = placement
+        self.pad_fraction = pad_fraction
+        self.grant_form = grant_form
+        self.compile_s = compile_s
+        self.compile_count = compile_count
+        self.num_lanes = len(lane_triples)
+
+    def done(self) -> bool:
+        return self.cycle >= self.total
+
+    def advance(self) -> int:
+        """Run one window (`window` cycles, clipped at the total budget);
+        returns the new absolute cycle count."""
+        if self.done():
+            return self.cycle
+        t0 = jnp.asarray(self.cycle, jnp.int32)
+        t_end = jnp.asarray(self.total, jnp.int32)
+        self.state, self.keys = self.compiled(
+            self.state, self.keys, t0, t_end, self._rate_pkt_dev,
+            self._lane_data)
+        self.cycle = min(self.cycle + self.window, self.total)
+        return self.cycle
+
+    def stats_host(self):
+        """The current per-lane `SimStats` counters as host numpy arrays
+        (leading axis = padded lane count; real lanes are the first
+        `num_lanes` rows).  Blocks on any in-flight window."""
+        return jax.tree.map(np.asarray, self.state.stats)
+
+    def lane_stats(self, i: int):
+        """Real lane i's current counters (host)."""
+        st = self.stats_host()
+        return jax.tree.map(lambda x: x[i], st)
+
+    def export(self) -> dict:
+        """Snapshot the session's full dynamic state to host arrays:
+        `{"state": SimState-of-numpy, "keys": [Bp, 2] uint32,
+        "cycle": int}` — everything `restore=` needs for a bit-identical
+        resume (the static side is rebuilt from the lane triples)."""
+        return dict(state=jax.tree.map(np.asarray, self.state),
+                    keys=np.asarray(self.keys),
+                    cycle=int(self.cycle))
+
+    def finish(self) -> LaneRun:
+        """Per-lane `SimResult`s once the cycle budget is exhausted —
+        the same shape of answer `run_lanes` returns (wall_s is not
+        tracked per-window; reported as 0.0)."""
+        if not self.done():
+            raise ValueError(
+                f"session at cycle {self.cycle}/{self.total}: advance() "
+                f"to the full budget before finish()")
+        stats = self.stats_host()
+        cfg = self.sweep.cfg
+        pick = lambda i: jax.tree.map(lambda x: x[i], stats)
+        results = [finalize(pick(i), cfg, self.lane_triples[i][0],
+                            self.sweep._chips(self.fault_sets[i]))
+                   for i in range(self.num_lanes)]
+        return LaneRun(results, 0.0, self.compile_s, self.compile_count,
+                       self.fault_sets, self.placement, self.pad_fraction,
+                       self.grant_form)
+
+
 class BatchedSweep:
     """Compile-once sweep runner over a (rate x seed) lane grid.
 
@@ -543,22 +719,30 @@ class BatchedSweep:
                          compiled, compile_s, compiles, placement,
                          pad_fraction, gform)
 
-    def _prepare_lanes(self, lanes):
+    def _prepare_lanes(self, lanes, force_stack: bool = False,
+                       epochs: int | None = None):
         """Compose/sample per-lane fault data; returns the dense lane
-        arrays plus the composed fault states."""
+        arrays plus the composed fault states.  `force_stack` always
+        stacks the lane axis even when every lane shares one fault state
+        — window sessions use it so a bucket's dispatch signature never
+        depends on which tenants' lanes happened to be packed together.
+        `epochs` forces the schedule (epoch-stacked) lane form padded to
+        at least that many epochs, even for an all-cold lane list, so
+        every pack of a warm bucket keeps one dispatch signature."""
         cfg = self.cfg
         lanes = list(lanes)
         if not lanes:
             raise ValueError("run_lanes needs >= 1 lane")
         base = self.faults
         fsets = [compose_faults(base, f) for _, _, f in lanes]
-        if any(isinstance(f, FaultSchedule) for f in fsets):
+        if (epochs is not None
+                or any(isinstance(f, FaultSchedule) for f in fsets)):
             fsets = [as_fault_schedule(f) for f in fsets]
         lane_rates = jnp.asarray([self._rate_pkt(r) for r, _, _ in lanes],
                                  dtype=jnp.float32)
         lane_keys = jnp.stack(
             [jax.random.PRNGKey(int(s)) for _, s, _ in lanes])
-        if len(set(fsets)) == 1:
+        if len(set(fsets)) == 1 and not force_stack:
             lane_data = (self.lane0 if fsets[0] == base
                          else build_lane(self.net, cfg, fsets[0]))
             per_lane = False
@@ -569,7 +753,8 @@ class BatchedSweep:
             for f in fsets:
                 if f not in memo:
                     memo[f] = build_lane(self.net, cfg, f)
-            lane_data = stack_lanes([memo[f] for f in fsets])
+            lane_data = stack_lanes([memo[f] for f in fsets],
+                                    epochs=epochs)
             per_lane = True
         return lanes, lane_rates, lane_keys, lane_data, per_lane, fsets
 
@@ -582,6 +767,114 @@ class BatchedSweep:
         plan is then handed back to `run_lanes_async(plan=...)`, reusing
         the prepared lane arrays (no second fault-table build)."""
         return self._plan(lanes, device=device)
+
+    def start_lanes(self, lanes, *, window: int, device=None,
+                    pad_to: int | None = None, force_stack: bool = False,
+                    epochs: int | None = None,
+                    restore: dict | None = None) -> LaneSession:
+        """Open a window-sliced `LaneSession` over `lanes` instead of
+        scanning the whole cycle budget at once.
+
+        `window` is the fixed per-dispatch cycle count: every window —
+        including the final partial one — runs the SAME compiled
+        executable (cycles past the budget are masked no-ops), so a
+        session costs at most one compile per lane signature no matter
+        how its total budget divides.  `pad_to` ghost-pads the lane axis
+        up to a fixed batch size (rate-0 lanes, dropped from results) so
+        heterogeneous packings of the same signature share one
+        executable; `force_stack` pins the per-lane fault axis stacked
+        and `epochs` pins the schedule form padded to a fixed epoch
+        count, both for the same reason.  `restore` resumes from a prior
+        session's
+        `export()` snapshot (same lane triples required) — the resumed
+        run is bit-identical to the uninterrupted one.
+
+        Sessions ignore `REPRO_CHANNEL_SHARDS` (the 2-D fused-step mesh
+        is a whole-run dispatch); the lane axis still `shard_map`s over
+        multi-device hosts when the padded batch divides the mesh.
+        """
+        if window < 1:
+            raise ValueError(f"window must be >= 1 cycles, got {window}")
+        lane_triples, lane_rates, lane_keys, lane_data, per_lane_faults, \
+            fsets = self._prepare_lanes(lanes, force_stack=force_stack,
+                                        epochs=epochs)
+        cfg = self.cfg
+        B = int(lane_rates.shape[0])
+        if pad_to is not None and pad_to < B:
+            raise ValueError(f"pad_to={pad_to} < {B} lanes")
+        target = max(B, pad_to or 0)
+        cycles = cfg.warmup + cfg.measure
+        mesh = None
+        if device is None and target > 1 \
+                and target * cycles >= shard_min_work():
+            mesh = lane_mesh()
+        nd = int(mesh.shape["lanes"]) if mesh is not None else 1
+        Bp = target + (-target) % nd
+        pad = Bp - B
+        placement = "single" if mesh is None else f"lanes:{nd}"
+        fused = getattr(cfg, "step_impl", "jnp") == "fused"
+        gform = grant_form(self.net, cfg, 1) if fused else "two_pass"
+        if pad:
+            lane_rates = jnp.concatenate(
+                [lane_rates, jnp.zeros((pad,), lane_rates.dtype)])
+            lane_keys = jnp.concatenate(
+                [lane_keys,
+                 jnp.broadcast_to(lane_keys[:1],
+                                  (pad,) + lane_keys.shape[1:])])
+            if per_lane_faults:
+                lane_data = jax.tree.map(
+                    lambda x: jnp.concatenate(
+                        [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]),
+                    lane_data)
+        state0 = make_state(self.net, cfg, self.NV, batch=(Bp,))
+        cycle = 0
+        if restore is not None:
+            want = _sig((state0, lane_keys))
+            got = _sig((restore["state"], restore["keys"]))
+            if want != got:
+                raise ValueError(
+                    "restore snapshot does not match this session's lane "
+                    "signature (different lane count, padding, or config)")
+            state0 = jax.tree.map(jnp.asarray, restore["state"])
+            lane_keys = jnp.asarray(restore["keys"])
+            cycle = int(restore["cycle"])
+            if not 0 <= cycle <= cycles:
+                raise ValueError(
+                    f"restore cycle {cycle} outside [0, {cycles}]")
+        t0 = jnp.asarray(cycle, jnp.int32)
+        t_end = jnp.asarray(cycles, jnp.int32)
+        if mesh is not None:
+            lane_sh = NamedSharding(mesh, PartitionSpec("lanes"))
+            repl_sh = NamedSharding(mesh, PartitionSpec())
+            state0 = jax.device_put(state0, lane_sh)
+            lane_rates = jax.device_put(lane_rates, lane_sh)
+            lane_keys = jax.device_put(lane_keys, lane_sh)
+            lane_data = jax.device_put(
+                lane_data, lane_sh if per_lane_faults else repl_sh)
+        elif device is not None:
+            state0, lane_rates, lane_keys, lane_data = jax.device_put(
+                (state0, lane_rates, lane_keys, lane_data), device)
+        cache_key = ("window", self.step, window, cfg.warmup,
+                     per_lane_faults, mesh, device,
+                     _sig((state0, lane_keys, t0, t_end, lane_rates,
+                           lane_data)))
+        compiled = _AOT_CACHE.get(cache_key)
+        compile_s = 0.0
+        compiles = 0
+        if compiled is None:
+            fn = _make_window_fn(self.step, window, cfg.warmup,
+                                 per_lane_faults, mesh)
+            before = _TRACE_COUNT[0]
+            t_c = time.perf_counter()
+            compiled = fn.lower(state0, lane_keys, t0, t_end, lane_rates,
+                                lane_data).compile()
+            compile_s = time.perf_counter() - t_c
+            compiles = _TRACE_COUNT[0] - before
+            _AOT_CACHE[cache_key] = compiled
+        return LaneSession(self, lane_triples, fsets, window, cycles,
+                           cycle, state0, lane_keys, compiled, lane_rates,
+                           lane_data, placement, 1.0 - B / Bp, gform,
+                           compile_s, compiles)
 
     def run_lanes_async(self, lanes=None, device=None,
                         plan: "_LanePlan | None" = None) -> _PendingLanes:

@@ -27,3 +27,7 @@ __all__ = [
     "Cell", "ExperimentResult", "GridResult", "cells", "clear_caches",
     "run_experiment", "provenance", "spec_hash",
 ]
+
+# `repro.exp.serve` (the persistent service) and `repro.exp.windows`
+# (the shared JSONL schema) are imported as submodules on demand —
+# serving pulls in the checkpoint layer, which batch users don't need.

@@ -14,7 +14,9 @@ through its `*_spec(fast=...)` builder (trimmed-CPU vs. paper scale);
 without either flag the registered default instance runs unchanged.
 Results are written as ``BENCH_<name>.json`` (override with ``--out``)
 with a provenance block (git rev, JAX version, backend, spec hash) and
-printed as CSV rows.
+printed as CSV rows.  ``--jsonl PATH`` additionally emits the per-lane
+window/result records of the `repro.exp.serve` schema
+(`repro.exp.windows`), so batch and serve artifacts diff line-for-line.
 """
 from __future__ import annotations
 
@@ -23,7 +25,8 @@ import json
 import sys
 
 from . import registry
-from .provenance import provenance
+from . import windows as W
+from .provenance import provenance, spec_hash
 from .runner import run_experiment
 from .spec import ExperimentSpec
 
@@ -33,6 +36,52 @@ _CSV_COLS = ("topology", "pattern", "route_mode", "vc_mode", "fault",
 
 def _fmt(v) -> str:
     return f"{v:.4f}" if isinstance(v, float) else str(v)
+
+
+def write_jsonl(result, path: str) -> int:
+    """Emit an `ExperimentResult` as the serve-schema JSONL stream
+    (`repro.exp.windows`): one meta/request header, then per lane the
+    run's FINAL window record plus its result record, then a done
+    record.  A batch artifact and a `repro.exp.serve` artifact for the
+    same spec are schema-identical line formats — and their `result`
+    records are value-identical, because serve runs are bit-identical
+    to batch runs (tests/test_serve.py)."""
+    spec = result.spec
+    n = 0
+    with open(path, "w") as f:
+        def emit(rec):
+            nonlocal n
+            f.write(W.dumps(rec) + "\n")
+            n += 1
+        lanes = sum(len(g.fault_labels) * len(g.rates) * len(g.seeds)
+                    for g in result.grids)
+        emit(W.meta_record("run", provenance(spec)))
+        emit(W.request_record(request=1, tenant="batch",
+                              scenario=spec.name,
+                              spec_sha256=spec_hash(spec), lanes=lanes))
+        warmup, measure = spec.axes.warmup, spec.axes.measure
+        for ci, g in enumerate(result.grids):
+            R, S = len(g.rates), len(g.seeds)
+            for fi, flabel in enumerate(g.fault_labels):
+                for ri, rate in enumerate(g.rates):
+                    for si, seed in enumerate(g.seeds):
+                        meta = W.lane_meta(
+                            scenario=spec.name, tenant="batch",
+                            request=1, cell=ci,
+                            lane=(fi * R + ri) * S + si,
+                            topology=g.topology.label,
+                            topo_kind=g.topology.kind,
+                            pattern=g.traffic.label,
+                            route_mode=g.routing.route_mode,
+                            vc_mode=g.routing.vc_mode, fault=flabel,
+                            offered=rate, seed=seed)
+                        res = g.results[fi][ri][si]
+                        emit(W.window_from_result(
+                            meta, res, warmup=warmup, measure=measure))
+                        emit(W.result_record(meta, res))
+        emit(W.done_record(request=1, tenant="batch", scenario=spec.name,
+                           lanes=lanes))
+    return n
 
 
 def main(argv=None) -> int:
@@ -46,6 +95,9 @@ def main(argv=None) -> int:
                    help="list registered scenarios and exit")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default BENCH_<name>.json)")
+    ap.add_argument("--jsonl", default=None, metavar="PATH",
+                    help="also emit per-lane window/result records as "
+                         "JSONL (the repro.exp.serve schema)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-grid progress on stderr")
     scale = ap.add_mutually_exclusive_group()
@@ -85,6 +137,10 @@ def main(argv=None) -> int:
 
     result = run_experiment(spec, verbose=not args.quiet)
     rows = result.rows()
+
+    if args.jsonl:
+        n = write_jsonl(result, args.jsonl)
+        print(f"wrote {args.jsonl} ({n} records)", file=sys.stderr)
 
     out_path = args.out or f"BENCH_{spec.name}.json"
     with open(out_path, "w") as f:

@@ -1,0 +1,26 @@
+"""repro.exp.serve: a persistent, multi-tenant simulation service.
+
+Submitted `ExperimentSpec`s are bucketed by compiled signature
+(`scheduler.BucketKey`), packed into device-filling windowed dispatches
+(`packer.Pack` over `LaneSession`s, ghost-padded, tenant-fair), streamed
+as JSONL window/result records (`repro.exp.windows` — schema-shared with
+`python -m repro.exp.run --jsonl`), and checkpointed/resumed
+bit-identically through `repro.checkpoint`.  See docs/serve.md.
+
+    from repro.exp.serve import SimService
+    svc = SimService(out="serve.jsonl")
+    rid = svc.submit(get_scenario("smoke"))
+    svc.run()
+
+CLI: ``python -m repro.exp.serve --inbox specs/ --out serve.jsonl``.
+"""
+from .scheduler import (BucketKey, LaneUnit, Scheduler, bucket_cfg,
+                        bucket_sweep, clear_serve_caches, lower_request)
+from .packer import Pack
+from .service import SimService, serve_pack, serve_window
+
+__all__ = [
+    "BucketKey", "LaneUnit", "Pack", "Scheduler", "SimService",
+    "bucket_cfg", "bucket_sweep", "clear_serve_caches", "lower_request",
+    "serve_pack", "serve_window",
+]

@@ -1,0 +1,8 @@
+"""Lint fixture: a serve module reading the environment directly
+instead of through `repro.env_int` (never imported).  Proves REPRO002
+covers the `exp/serve` tree — the service's `REPRO_SERVE_WINDOW` /
+`REPRO_SERVE_PACK` knobs must stay auditable in `src/repro/__init__`.
+"""
+import os
+
+WINDOW = int(os.environ.get("REPRO_SERVE_WINDOW", "128"))   # REPRO002

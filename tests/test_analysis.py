@@ -1,4 +1,4 @@
-"""Tests for `repro.analysis`: the four static passes, the negative
+"""Tests for `repro.analysis`: the static passes, the negative
 fixtures (each must be flagged), and the grant_form surfacing."""
 from pathlib import Path
 
@@ -27,6 +27,15 @@ def test_lint_fixture_flags_every_rule():
     findings = run_lint(FIXTURES / "lintroot")
     rules = {f.rule for f in findings if f.severity == "error"}
     assert {"REPRO001", "REPRO002", "REPRO003", "REPRO004"} <= rules
+
+
+def test_lint_covers_serve_tree():
+    """REPRO002 fires on `exp/serve` modules: the serve knobs
+    (REPRO_SERVE_WINDOW/PACK) must route through repro.env_int."""
+    findings = run_lint(FIXTURES / "lintroot")
+    assert any(f.rule == "REPRO002"
+               and "exp/serve/bad_env.py" in f.location
+               for f in findings if f.severity == "error")
 
 
 def test_lint_repo_clean_under_allowlist():
@@ -148,6 +157,49 @@ def test_cli_exit_codes(tmp_path):
     assert out.exists() and '"failed": true' in out.read_text()
     assert main(["--scenario", "smoke"]) == 0
     assert main([]) == 2
+
+
+# ---------------------------------------------------------------------------
+# serve pass
+# ---------------------------------------------------------------------------
+
+def test_serve_pass_one_signature_per_bucket():
+    """The --serve certification: the mixed smoke submission (cold,
+    cold-faulted, warm-faulted) lowers to exactly one dispatch signature
+    per bucket, every ghost-padded pack matching its bucket's canonical
+    form."""
+    from repro.analysis.servepass import (SMOKE_SUBMISSION,
+                                          check_submission)
+    report = Report()
+    check_submission(SMOKE_SUBMISSION, report)
+    assert not report.failed, report.render()
+    [info] = [f for f in report.findings if f.rule == "SERVE_BUCKET"]
+    assert "3 bucket(s) -> 3 compile signature(s)" in info.message
+
+
+def test_serve_pass_signature_sees_epoch_mismatch():
+    """A bucket key whose pinned epoch count disagrees with the lanes'
+    real schedules must change the abstract signature — the defect
+    SERVE_SIG exists to catch."""
+    from dataclasses import replace
+    from repro.analysis.servepass import _canonical_fsets, pack_signature
+    from repro.exp.registry import get_scenario
+    from repro.exp.serve.scheduler import lower_request
+
+    units, _ = lower_request(get_scenario("smoke_warm_faults"), 1, "t", 0)
+    key = units[0].bucket
+    assert key.epochs >= 2
+    good = pack_signature(key, [u.fset for u in units], pack=8)
+    assert good == pack_signature(key, _canonical_fsets(key), pack=8)
+    # under-pinned key: stack_lanes pads to the REAL epoch count, so the
+    # lane shapes no longer match the key's canonical form
+    bad_key = replace(key, epochs=1)
+    assert (pack_signature(bad_key, [u.fset for u in units], pack=8)
+            != pack_signature(bad_key, _canonical_fsets(bad_key), pack=8))
+
+
+def test_serve_cli_flag():
+    assert main(["--serve"]) == 0
 
 
 def test_report_json_round_trip():

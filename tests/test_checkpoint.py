@@ -1,0 +1,92 @@
+"""Tests for `repro.checkpoint`: dtype round-trips through the npz
+void-byte path (the bfloat16 regression), atomic write + retention,
+manifest `extra` payloads, and exact `SimState` snapshot/restore."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import Checkpointer, restore_sim_state, save_sim_state
+from repro.core import topology as T
+from repro.core.engine import make_state
+from repro.core.routing import num_vcs
+from repro.core.simulator import SimConfig
+
+
+def _tiny_state():
+    p = T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=1)
+    net = T.build_switchless(p, "tiny")
+    cfg = SimConfig(warmup=10, measure=50)
+    NV = (num_vcs("switchless", cfg.vc_mode, cfg.nonminimal)
+          * cfg.vcs_per_class)
+    return make_state(net, cfg, NV, (2,))
+
+
+def test_bfloat16_void_bytes_reinterpreted_not_converted(tmp_path):
+    """np.savez stores ml_dtypes arrays as raw void bytes; restore must
+    `.view` them back through the template dtype, bit-exactly."""
+    x = jnp.asarray([1.5, -2.25, 3.0e-2, 65504.0], dtype=jnp.bfloat16)
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(0, {"x": x})
+    restored, step = ck.restore({"x": jnp.zeros_like(x)})
+    assert step == 0
+    rx = np.asarray(restored["x"])
+    assert rx.dtype == np.asarray(x).dtype
+    assert np.array_equal(rx.view(np.uint16), np.asarray(x).view(np.uint16))
+
+
+def test_typed_dtype_mismatch_converts_not_views(tmp_path):
+    """An int32 snapshot restored into a float32 template must CONVERT
+    the values — a `.view` there would scramble every one (the
+    regression the void-only guard in `_unflatten_into` exists for)."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(0, {"c": np.arange(5, dtype=np.int32)})
+    restored, _ = ck.restore({"c": np.zeros(5, dtype=np.float32)})
+    assert restored["c"].dtype == np.float32
+    assert np.array_equal(restored["c"], [0.0, 1.0, 2.0, 3.0, 4.0])
+
+
+def test_python_scalar_leaves_round_trip(tmp_path):
+    """Plain ints are valid template leaves (a session's cycle counter);
+    they restore through `np.asarray` dtype inference."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(0, {"cycle": 128, "arr": np.ones(3)})
+    restored, _ = ck.restore({"cycle": 0, "arr": np.zeros(3)})
+    assert int(restored["cycle"]) == 128
+
+
+def test_retention_keeps_newest_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for step in (5, 6, 7):
+        ck.save(step, {"x": np.full(2, step)})
+    assert ck.list_steps() == [6, 7]
+    assert ck.latest_step() == 7
+    restored, step = ck.restore({"x": np.zeros(2)})
+    assert step == 7 and restored["x"][0] == 7
+    # explicit older step still addressable while retained
+    restored, step = ck.restore({"x": np.zeros(2)}, step=6)
+    assert step == 6 and restored["x"][0] == 6
+
+
+def test_restore_empty_directory_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Checkpointer(str(tmp_path)).restore({"x": np.zeros(1)})
+
+
+def test_sim_state_public_api_round_trip_exact(tmp_path):
+    """`save_sim_state`/`restore_sim_state`: a full batched `SimState`
+    pytree (every buffer/counter dtype the engine uses) round-trips
+    bit-exactly, with the `extra` payload riding in the manifest."""
+    state = _tiny_state()
+    host = jax.tree.map(np.asarray, state)
+    path = save_sim_state(str(tmp_path), 3, state,
+                          extra={"round": 3, "pending": [[1, 0, 0, 2]]},
+                          keep=2)
+    assert path.endswith("step-00000003")
+    template = jax.tree.map(np.zeros_like, host)
+    restored, extra, step = restore_sim_state(str(tmp_path), template)
+    assert step == 3
+    assert extra == {"round": 3, "pending": [[1, 0, 0, 2]]}
+    for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(a, b)
