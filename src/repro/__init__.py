@@ -25,9 +25,11 @@ Both knobs must be read BEFORE the backend exists, hence this module.
 
 This module is also the ONLY place the library reads environment
 variables (`repro.analysis` lint rule REPRO002): every other `REPRO_*`
-knob goes through `env_int` below, so the full knob surface is auditable
-in one file — `REPRO_SHARD_MIN_WORK` / `REPRO_CHANNEL_SHARDS`
-(`core.engine.sweep`), `REPRO_RR_MAX_CHANNELS` (`exp.runner`), and
+knob goes through `env_int` below (or `env_raw` for the analysis
+layer's misconfiguration audits), so the full knob surface is auditable
+in one file — `REPRO_SHARD_MIN_WORK` / `REPRO_CHANNEL_SHARDS` /
+`REPRO_SUPERSTEP` (`core.engine.sweep`), `REPRO_COMPACT_CAP`
+(`core.engine.fused`), `REPRO_RR_MAX_CHANNELS` (`exp.runner`), and
 `REPRO_SERVE_WINDOW` / `REPRO_SERVE_PACK` (`exp.serve.service`) document
 their semantics at their call sites.
 """
@@ -49,6 +51,17 @@ def env_int(name: str, default: int) -> int:
         return int(raw) if raw else default
     except ValueError:
         return default
+
+
+def env_raw(name: str) -> str | None:
+    """Raw environment knob string, `None` when unset.
+
+    For the analysis layer's misconfiguration audits (CAP_PIN /
+    CAP_SUPERSTEP in `analysis.capacitypass`): those findings must see
+    exactly what the operator typed, not the parsed fallback `env_int`
+    would silently apply — the silent fallback is the thing being
+    audited.  Runtime code keeps using `env_int`."""
+    return os.environ.get(name)
 
 
 def _flag_setup() -> None:

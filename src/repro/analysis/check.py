@@ -76,15 +76,18 @@ def run(args) -> Report:
         scenario_names = list_scenarios()
 
     if scenario_names or args.spec:
-        from . import compilepass, specpass
+        from . import capacitypass, compilepass, specpass
         kw = {} if args.pairs is None else {"n_pairs": args.pairs}
+        capacitypass.check_env(report)
         for name in scenario_names:
             specpass.check_scenario(name, report, **kw)
             compilepass.check_scenario(name, report)
+            capacitypass.check_scenario(name, report)
         for path in args.spec:
             specpass.check_spec_file(path, report, **kw)
         report.mark_pass("spec")
         report.mark_pass("compile")
+        report.mark_pass("capacity")
 
     if args.all:
         from . import jaxprpass

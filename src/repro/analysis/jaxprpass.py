@@ -5,8 +5,8 @@ over `ShapeDtypeStruct`s — no FLOPs, no device buffers at network scale
 on a few dozen packets (microseconds).
 
 The traced matrix is every `(step_impl, vc_mode, fault-kind)` combination
-on one small switch-less net: {jnp, fused} x {baseline, updown,
-updown_merged} x {pristine, cold FaultSet, warm FaultSchedule} — 18
+on one small switch-less net: {jnp, fused, compact} x {baseline, updown,
+updown_merged} x {pristine, cold FaultSet, warm FaultSchedule} — 27
 traces.  `grant_impl` stays "jnp" (tracing the Pallas grant would need a
 real backend; its bit-equality to the jnp oracle is a runtime test,
 `tests/test_kernels.py`).
@@ -48,7 +48,7 @@ from ..exp.spec import FaultSpec, TopologySpec, TrafficSpec
 
 PASS = "jaxpr"
 
-STEP_IMPLS = ("jnp", "fused")
+STEP_IMPLS = ("jnp", "fused", "compact")
 VC_MODES = ("baseline", "updown", "updown_merged")
 FAULT_KINDS = ("pristine", "cold", "warm")
 

@@ -32,7 +32,7 @@ establishes, per (topology x routing) cell family:
 Proofs are memoized across scenarios by network identity
 `(kind, params)` — NOT by label, because e.g. fig10a and the fig14
 C-group grids name the same net under different labels — so the
-17-scenario `--all` run proves each distinct (net, vc scheme, fault
+18-scenario `--all` run proves each distinct (net, vc scheme, fault
 population) combination exactly once.
 """
 from __future__ import annotations
@@ -141,18 +141,19 @@ def check_spec(spec: ExperimentSpec, origin: str, report, *,
                 f"edges, {cached} proof(s) shared with earlier "
                 f"scenarios)")
 
-            if routing.step_impl == "fused":
+            if routing.step_impl in ("fused", "compact"):
                 cfg = routing.to_simconfig(spec.axes)
                 form = grant_form(net, cfg)
+                impl = routing.step_impl
                 if form == "combined":
                     report.add(PASS, "SPEC_GRANT", "info", where,
-                               "fused step takes the combined "
+                               f"{impl} step takes the combined "
                                "single-segment_min grant")
                 else:
                     cycles = spec.axes.warmup + spec.axes.measure
                     report.add(
                         PASS, "SPEC_GRANT_OVERFLOW", "warning", where,
-                        f"fused step falls back to the two-pass grant: "
+                        f"{impl} step falls back to the two-pass grant: "
                         f"the packed cycle<<log2(N)|key arbitration key "
                         f"overflows int32 at {cycles} cycles on this "
                         f"net (exact but ~2x the segment_min work; "

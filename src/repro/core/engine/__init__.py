@@ -23,7 +23,7 @@ from .stats import accumulate, finalize, zero_stats
 from .step import make_step, run_scan
 from .sweep import (BatchedSweep, LaneRun, LaneSession, SweepResult,
                     clear_aot_cache, compile_counter, lane_mesh,
-                    run_scan_batched)
+                    run_scan_batched, superstep)
 
 __all__ = [
     "SimState", "SimStats", "Requests", "build_consts", "build_lane",
@@ -33,5 +33,5 @@ __all__ = [
     "make_apply_fn", "accumulate", "finalize", "zero_stats", "make_step",
     "run_scan", "BatchedSweep", "LaneRun", "LaneSession", "SweepResult",
     "clear_aot_cache", "compile_counter", "lane_mesh",
-    "run_scan_batched",
+    "run_scan_batched", "superstep",
 ]

@@ -85,12 +85,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ... import env_int
 from ..topology import EJECT, NUM_CH_TYPES, Network
 from ..traffic import as_pattern
 from .inject import make_inject_fn, make_misroute_fn
 from .state import (F_CLS, F_DEST, F_ITIME, F_META, F_META2, F_MIS,
                     F_OUT, F_READY, INF32, build_consts, is_scheduled,
                     resolve_epoch)
+from .stats import live_rows
 
 # winner-record columns (the dense [E, 5] table exchanged across shards):
 # destination, generation cycle, misroute wg, meta-to-store, class
@@ -218,6 +220,271 @@ def _grant(ok, out, itime, prio, ch_ok, E, R2, use_combined):
     return won_ch, jnp.where(won_ch, m2, 0)
 
 
+def compact_rows(net: Network, cfg) -> int:
+    """N, the unsharded request-row count (`E_req * NV + T`) — the
+    compact step's capacity ladder is sized against this."""
+    from ..routing import num_vcs
+    NV = (num_vcs(net.meta["kind"], cfg.vc_mode, cfg.nonminimal)
+          * cfg.vcs_per_class)
+    return net.first_eject * NV + net.num_terminals
+
+
+def capacity_ladder(N: int) -> tuple[int, ...]:
+    """The compact step's capacity rungs for an N-row request grid:
+    ``ceil(N/8) < ceil(N/4) < ceil(N/2) < N`` (deduplicated for tiny N).
+    Each rung is a distinct compiled executable; the top rung C = N can
+    never overflow, so the escalation walk always terminates."""
+    return tuple(sorted({-(-N // 8), -(-N // 4), -(-N // 2), N}))
+
+
+def next_rung(N: int, floor: int) -> int:
+    """The smallest ladder rung >= `floor` (the escalation target when a
+    run's `occ_peak` reached `floor`); N when `floor` exceeds the top."""
+    for r in capacity_ladder(N):
+        if r >= floor:
+            return r
+    return N
+
+
+def initial_capacity(N: int) -> int:
+    """The rung a compact step starts at: the smallest ladder rung that
+    covers REPRO_COMPACT_CAP when set (so ``REPRO_COMPACT_CAP=1`` pins
+    the bottom rung and a large value pins C = N), else ``ceil(N/4)`` —
+    paper-figure sweeps peak well under N/4 live rows even at
+    saturation, with headroom to spare (see docs/performance.md)."""
+    cap = env_int("REPRO_COMPACT_CAP", 0)
+    if cap > 0:
+        return next_rung(N, min(cap, N))
+    ladder = capacity_ladder(N)
+    return ladder[1] if len(ladder) > 1 else ladder[0]
+
+
+def make_compact_step(net: Network, cfg, pattern, inject_mask=None, *,
+                      capacity: int | None = None):
+    """The occupancy-compacted fused step (`cfg.step_impl="compact"`):
+    returns (step, consts), signature-compatible with `step.make_step`.
+
+    Identical cycle semantics to the unsharded fused step, but the
+    request phase first COMPACTS the live rows (non-empty (channel, vc)
+    buffers + non-empty source queues) into a statically-bounded active
+    set of `capacity` C rows, so the head gather, the route fallback,
+    the packed segment-min grant key, and the pop decode all run over C
+    rows instead of all ``N = E_req*NV + T`` — per-cycle cost tracks
+    OCCUPANCY, not network capacity.  The compaction is a stable
+    partition (cumsum of the live mask + one binary-search gather), so
+    active slot k holds the k-th live row in the oracle's row order and
+    each slot's grant priority is its GLOBAL row id — the packed
+    ``itime * R2 + prio`` keys, and therefore every winner and every
+    counter, are bit-identical to the oracle's whenever C bounds the
+    live set.
+
+    C not bounding the live set is DETECTED, never silent: the step
+    folds the exact live-row census (computed densely, independent of
+    C) into `SimStats.occ_peak` every cycle, and the sweep layer
+    re-dispatches the whole grid at the next ladder rung when a run's
+    peak crossed its rung (`sweep._PendingLanes.finish`) — the rerun is
+    deterministic, so escalated results are still bit-identical to the
+    oracle.  `capacity=None` starts at `initial_capacity(N)`
+    (REPRO_COMPACT_CAP pins the starting rung).
+
+    Not channel-shardable (the active set is a global permutation);
+    warm-fault (epoch-scheduled) lanes fall back to per-cycle routing
+    over the C active rows, exactly like the fused step does over N.
+    """
+    pattern, inject_mask = as_pattern(pattern, inject_mask)
+    consts, route_kernel = build_consts(net, cfg)
+    N = consts["E_req"] * consts["NV"] + consts["T"]
+    C = initial_capacity(N) if capacity is None else int(capacity)
+    if not 1 <= C <= N:
+        raise ValueError(f"compact capacity {C} outside [1, {N}]")
+    step = _make_compact(net, cfg, pattern, inject_mask, consts,
+                         route_kernel, C)
+    # reporting hooks for the sweep layer (rung bookkeeping without
+    # re-deriving the row count)
+    step.compact_capacity = C
+    step.compact_rows = N
+    return step, consts
+
+
+def _make_compact(net, cfg, pattern, inject_mask, consts, route_kernel,
+                  C):
+    inject = make_inject_fn(net, cfg, consts, pattern, inject_mask)
+    NV, E, T, ER = consts["NV"], consts["E"], consts["T"], consts["E_req"]
+    S, Q = cfg.buf_pkts, cfg.srcq_pkts
+    vpc = cfg.vcs_per_class
+    NC = NV // vpc
+    N = ER * NV + T
+    R2 = _pow2(N)
+    use_combined = grant_form(net, cfg) == "combined"
+    use_pallas = getattr(cfg, "grant_impl", "jnp") == "pallas" \
+        and use_combined
+    if use_pallas:
+        from ...kernels.netsim.ops import cycle_core
+
+    ch_dst = consts["ch_dst"]
+    ch_tbl = consts["ch_tbl"]
+    ch_type, ch_dst_wg, ch_lat = (ch_tbl[:, 0], ch_tbl[:, 1],
+                                  ch_tbl[:, 2])
+    ch_ser = consts["ch_ser"]
+    is_ej_ch = ch_type == EJECT
+    inject_ch = consts["inject_ch"]
+    slot_iota = jnp.arange(C, dtype=jnp.int32)
+    ch_iota = jnp.arange(E, dtype=jnp.int32)
+    row_iota = jnp.arange(N, dtype=jnp.int32)
+    vc_iota = jnp.arange(NV, dtype=jnp.int32)
+    type_iota = jnp.arange(NUM_CH_TYPES, dtype=jnp.int32)
+
+    def step(state, t_key_rate_fl):
+        t, key, rate_pkt, fl = t_key_rate_fl
+        cached = not is_scheduled(fl)   # trace-time, as in the fused step
+        fl = resolve_epoch(fl, t)
+        state = inject(state, t, key, rate_pkt, fl)
+
+        # live-row census + stable compaction.  `occ` is EXACT (dense,
+        # independent of C) — it feeds the occ_peak certificate the
+        # escalation check relies on.  The live-mask prefix sum is built
+        # two-level so the serial scans stay short (an NV-wide axis
+        # cumsum vectorized over the ER channels, then channel- and
+        # terminal-level cumsums); live row r lands in active slot
+        # cs[r]-1 by a stable scatter (the dispatch planner runs compact
+        # lanes sequentially, where the unbatched scatter beats the
+        # binary-search gather form — vmapped lanes would invert that,
+        # but they take the mesh path).  Slots past the live count keep
+        # the N sentinel, so `aid` stays sorted (stable compaction
+        # preserves row order) for the winner-slot search below.
+        lb = (state.b_count[:ER] > 0).astype(jnp.int32)     # [ER, NV]
+        within = jnp.cumsum(lb, axis=-1)
+        ch_tot = within[:, -1]
+        base = jnp.cumsum(ch_tot)                           # [ER]
+        scs = jnp.cumsum((state.s_count > 0).astype(jnp.int32))
+        occ = base[-1] + scs[-1]
+        cs = jnp.concatenate(
+            [((base - ch_tot)[:, None] + within).reshape(-1),
+             base[-1] + scs])                               # [N]
+        live = jnp.concatenate(
+            [lb.reshape(-1) > 0, state.s_count > 0])        # [N]
+        aid = jnp.full((C,), N, jnp.int32).at[
+            jnp.where(live, cs - 1, C)].set(row_iota, mode="drop")  # [C]
+        slot_ok = slot_iota < jnp.minimum(occ, C)
+
+        # per-slot request assembly: ONE C-row head gather (the fused
+        # step's ER*NV-row gather, shrunk to the live set) + one C-row
+        # source-queue gather, merged by slot kind
+        is_buf = aid < ER * NV
+        e = jnp.clip(aid // NV, 0, ER - 1)
+        v = jnp.clip(aid, 0, ER * NV - 1) % NV
+        tt = jnp.clip(aid - ER * NV, 0, T - 1)
+        bh = state.b_head[(e, v)]                            # [C]
+        brec = state.b_pkt[(e, v, bh)]                       # [C, 8]
+        srec = state.s_pkt[(tt, state.s_head[tt])]           # [C, 3]
+        ready = ~is_buf | (brec[:, F_READY] <= t)
+        valid = slot_ok & ready
+        if cached:
+            out_b, cls_b, meta2_b = (brec[:, F_OUT], brec[:, F_CLS],
+                                     brec[:, F_META2])
+        else:
+            out_b, cls_b, meta2_b = route_kernel(
+                fl, ch_dst[e], brec[:, F_DEST], brec[:, F_MIS],
+                brec[:, F_META])
+        out = jnp.where(is_buf, out_b, inject_ch[tt]).astype(jnp.int32)
+        cls = jnp.where(is_buf, cls_b, 0).astype(jnp.int32)
+        itime = jnp.where(is_buf, brec[:, F_ITIME], srec[:, F_ITIME])
+        dest = jnp.where(is_buf, brec[:, F_DEST], srec[:, F_DEST])
+        mis = jnp.where(is_buf, brec[:, F_MIS], srec[:, F_MIS])
+        meta2 = jnp.where(is_buf, meta2_b, 0).astype(jnp.int32)
+        rowok = valid & (out >= 0)
+        prio = aid      # the global row id IS the oracle's tie-break
+
+        # grant over the C active rows — same segments, same packed
+        # keys, same winners as the fused step's N-row reduction
+        occ_min, occ_arg = _occ_tables(state.b_count, NC, vpc)
+        elig_ck = (occ_min < S) | is_ej_ch[:, None]
+        ok = rowok & _row_elig(elig_ck, out, cls, E)
+        ch_ok = (state.ch_busy == 0) & fl["ch_alive"]
+        if use_pallas:
+            won_ch, wprio, win_slot = cycle_core(out, itime, ok, ch_ok,
+                                                 r2=R2, prio=prio)
+        else:
+            won_ch, wprio = _grant(ok, out, itime, prio, ch_ok, E, R2,
+                                   use_combined)
+            win_slot = None
+
+        # dense winner table: map each granting channel's winning row
+        # id back to its active slot (aid is sorted, so one binary
+        # search), then ONE [E, 5]-gather of the compacted records
+        wslot_i = jnp.clip(
+            jnp.searchsorted(aid, wprio, side="left"), 0, C - 1)
+        crec = jnp.stack([dest, itime, mis, meta2, cls], axis=-1)
+        w = crec[wslot_i]                                     # [E, 5]
+        wdest, witime = w[:, W_DEST], w[:, W_ITIME]
+        wmis, wmeta, wcls = w[:, W_MIS], w[:, W_META], w[:, W_CLS]
+        wvc, wovc = _winner_vc(wcls, occ_min, occ_arg, NC, vpc)
+        entered = (wmis >= 0) & (ch_dst_wg == wmis)
+        wmis = jnp.where(entered, -1, wmis)
+        push = won_ch & ~is_ej_ch
+        whead = state.b_head[(ch_iota, jnp.clip(wvc, 0, NV - 1))]
+        wslot = (whead + wovc) % S
+        if cached:
+            out2, cls2, meta2_n = route_kernel(fl, ch_dst, wdest, wmis,
+                                               wmeta)
+            tail = [out2.astype(jnp.int32), cls2.astype(jnp.int32),
+                    meta2_n.astype(jnp.int32)]
+        else:
+            z = jnp.zeros_like(wdest)
+            tail = [z, z, z]
+        new_rec = jnp.stack(
+            [wdest, witime, wmis, wmeta, t + ch_lat] + tail, axis=-1)
+        pe = jnp.where(push, ch_iota, E)
+        b_pkt = state.b_pkt.at[(pe, wvc, wslot)].set(new_rec,
+                                                     mode="drop")
+
+        # pops: the fused step's N-row gather+compare shrinks to C; the
+        # per-(channel, vc) / per-terminal pop bookkeeping stays in the
+        # dense one-hot form — XLA:CPU vectorizes the [E, NV] rebuilds
+        # well, while the equivalent scatter chains lower to slow
+        # row-at-a-time loops (measured ~2x worse)
+        if win_slot is None:
+            wprio_eff = jnp.where(won_ch, wprio, -1)
+            won_slot = rowok & (wprio_eff[jnp.clip(out, 0, E - 1)]
+                                == aid)
+        else:
+            won_slot = win_slot
+        pe_b = jnp.where(won_slot & is_buf, e, E)
+        pop1 = jnp.zeros((E, NV), jnp.int32).at[(pe_b, v)].add(
+            1, mode="drop")
+        b_head = (state.b_head + pop1) % S
+        vc_oh = wvc[:, None] == vc_iota[None, :]
+        b_count = (state.b_count - pop1
+                   + (push[:, None] & vc_oh).astype(jnp.int32))
+        ts_m = jnp.where(won_slot & ~is_buf, tt, T)
+        pop_s = jnp.zeros((T,), jnp.int32).at[ts_m].add(1, mode="drop")
+        s_head = (state.s_head + pop_s) % Q
+        s_count = state.s_count - pop_s
+        ch_busy = jnp.where(won_ch, ch_ser - 1,
+                            jnp.maximum(state.ch_busy - 1, 0))
+
+        # stats, channel-dense like the fused step; `stranded` counts
+        # over the active rows (stranded rows are live, so they are all
+        # in the active set whenever occ <= C)
+        st = state.stats
+        w_ej = won_ch & is_ej_ch
+        hops = (won_ch[:, None]
+                & (ch_type[:, None] == type_iota[None, :]))
+        stranded = (valid & (out < 0)).sum().astype(jnp.int32)
+        st = st.replace(
+            delivered=st.delivered + w_ej.sum(),
+            lat_sum=st.lat_sum + jnp.where(w_ej, t - witime, 0).sum(),
+            hops=st.hops + hops.astype(jnp.int32).sum(0),
+            stranded=stranded,
+            occ_peak=jnp.maximum(st.occ_peak, occ))
+        return state.replace(
+            b_pkt=b_pkt, b_head=b_head, b_count=b_count,
+            s_head=s_head, s_count=s_count, ch_busy=ch_busy,
+            stats=st), None
+
+    return step
+
+
 def _make_unsharded(net, cfg, pattern, inject_mask, consts, route_kernel):
     inject = make_inject_fn(net, cfg, consts, pattern, inject_mask)
     NV, E, T, ER = consts["NV"], consts["E"], consts["T"], consts["E_req"]
@@ -258,6 +525,7 @@ def _make_unsharded(net, cfg, pattern, inject_mask, consts, route_kernel):
         cached = not is_scheduled(fl)   # trace-time: see module docstring
         fl = resolve_epoch(fl, t)
         state = inject(state, t, key, rate_pkt, fl)
+        occ = live_rows(state)
 
         # request rows, in the oracle's order ([:ER]*NV buffer heads,
         # then T source queues) — `prio` IS the oracle's tie-break row id
@@ -367,7 +635,8 @@ def _make_unsharded(net, cfg, pattern, inject_mask, consts, route_kernel):
             delivered=st.delivered + w_ej.sum(),
             lat_sum=st.lat_sum + jnp.where(w_ej, t - witime, 0).sum(),
             hops=st.hops + hops.astype(jnp.int32).sum(0),
-            stranded=stranded)
+            stranded=stranded,
+            occ_peak=jnp.maximum(st.occ_peak, occ))
         return state.replace(
             b_pkt=b_pkt, b_head=b_head, b_count=b_count,
             s_head=s_head, s_count=s_count, ch_busy=ch_busy,
@@ -455,6 +724,9 @@ def _make_sharded(net, cfg, pattern, inject_mask, consts, route_kernel,
         sid = jax.lax.axis_index(axis).astype(jnp.int32)
         c0, t0 = sid * Ek, sid * Tk
         state = inject(state, t, key, rate_pkt, fl, t0)
+        # replicated counts (ghost rows stay zero), so every shard sees
+        # the same global live-row census — no collective needed
+        occ = live_rows(state)
         alive = jnp.pad(fl["ch_alive"], (0, ch_pad))
 
         # local request rows over the shard's channel/terminal blocks;
@@ -593,7 +865,8 @@ def _make_sharded(net, cfg, pattern, inject_mask, consts, route_kernel,
             delivered=st.delivered + w_ej.sum(),
             lat_sum=st.lat_sum + jnp.where(w_ej, t - witime, 0).sum(),
             hops=st.hops + hops.astype(jnp.int32).sum(0),
-            stranded=stranded)
+            stranded=stranded,
+            occ_peak=jnp.maximum(st.occ_peak, occ))
         return state.replace(
             b_pkt=b_pkt, b_head=b_head, b_count=b_count,
             s_head=s_head, s_count=s_count, ch_busy=ch_busy,

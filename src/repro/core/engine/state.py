@@ -43,8 +43,13 @@ NUM_SRC_FIELDS = 3      # source-queue records pack (dest, itime, mis)
 # payload.  Epoch-scheduled (warm-fault) lanes can't cache — the epoch
 # in effect at head time isn't known at push time — so the fused step
 # falls back to per-cycle routing there and these fields stay zero.
+# The occupancy-compacted step (`step_impl="compact"`) carries the same
+# cached tail.
 F_OUT, F_CLS, F_META2 = 5, 6, 7
 NUM_FUSED_FIELDS = 8
+
+# step impls whose records carry the cached-route tail
+CACHED_ROUTE_IMPLS = ("fused", "compact")
 
 
 @jax.tree_util.register_dataclass
@@ -57,6 +62,17 @@ class SimStats:
     -1 non-channel (packets a warm fault left with no route, see the
     updown kernel).  Its final value is the stranded population at exit
     — previously only inferable as "in flight when the run ended".
+
+    `occ_peak` is a high-water mark, not a per-measure counter: the
+    maximum number of LIVE request rows (non-empty (channel, vc)
+    buffers + non-empty source queues, taken right after inject) any
+    cycle of the run saw.  It spans warmup too (`stats.zero_stats`
+    preserves it across the reset): the occupancy-compacted step
+    (`step_impl="compact"`, fused.py) uses it to certify post-run that
+    its capacity rung C bounded the live set for the WHOLE run, and a
+    warmup-phase overflow is just as invalidating as a measured one.
+    Every step impl computes it from the same dense counts, so it is
+    part of the bit-identity contract like any other counter.
     """
 
     delivered: jax.Array      # [] packets ejected
@@ -64,6 +80,7 @@ class SimStats:
     generated: jax.Array      # [] packets generated (incl. dropped)
     dropped: jax.Array        # [] source-queue overflow
     stranded: jax.Array       # [] gauge: requests parked on the -1 channel
+    occ_peak: jax.Array       # [] high-water mark of live request rows
     hops: jax.Array           # [NUM_CH_TYPES] channel traversals by type
 
     def replace(self, **kw) -> "SimStats":
@@ -74,7 +91,7 @@ class SimStats:
         z = lambda *s: jnp.zeros(batch + s, dtype=jnp.int32)
         return cls(delivered=z(), lat_sum=jnp.zeros(batch, jnp.float32),
                    generated=z(), dropped=z(), stranded=z(),
-                   hops=z(NUM_CH_TYPES))
+                   occ_peak=z(), hops=z(NUM_CH_TYPES))
 
 
 @jax.tree_util.register_dataclass
@@ -112,12 +129,13 @@ def make_state(net: Network, cfg, NV: int,
     mask, and never inject — an all-zero state is already correct for
     them.
 
-    The record width follows `cfg.step_impl`: the fused step carries the
-    cached route fields (`NUM_FUSED_FIELDS`), the oracle the base
-    payload (`NUM_FIELDS`)."""
+    The record width follows `cfg.step_impl`: the fused and compact
+    steps carry the cached route fields (`NUM_FUSED_FIELDS`), the
+    oracle the base payload (`NUM_FIELDS`)."""
     E, T = net.num_channels + ch_pad, net.num_terminals + term_pad
     S, Q = cfg.buf_pkts, cfg.srcq_pkts
-    nf = (NUM_FUSED_FIELDS if getattr(cfg, "step_impl", "jnp") == "fused"
+    nf = (NUM_FUSED_FIELDS
+          if getattr(cfg, "step_impl", "jnp") in CACHED_ROUTE_IMPLS
           else NUM_FIELDS)
     z = lambda *s: jnp.zeros(batch + s, dtype=jnp.int32)
     return SimState(

@@ -28,9 +28,34 @@ def accumulate(stats: SimStats, req: Requests, win, consts, t) -> SimStats:
                          stranded=stranded)
 
 
+def live_rows(state) -> jax.Array:
+    """The number of LIVE request rows right now: non-empty
+    (channel, vc) buffers + non-empty source queues.  This is the
+    quantity the occupancy-compacted step (`fused.make_compact_step`)
+    must bound with its capacity rung C, so EVERY step impl folds it
+    into `SimStats.occ_peak` from the same dense counts — eject-channel
+    and ghost rows never hold packets, so summing the full arrays
+    matches the `[:E_req]` request grid exactly."""
+    return ((state.b_count > 0).sum()
+            + (state.s_count > 0).sum()).astype(jnp.int32)
+
+
+def track_occ(stats: SimStats, state) -> SimStats:
+    """Fold the current live-row count into the `occ_peak` high-water
+    mark (called right after inject by every step impl)."""
+    return stats.replace(occ_peak=jnp.maximum(stats.occ_peak,
+                                              live_rows(state)))
+
+
 def zero_stats(stats: SimStats) -> SimStats:
-    """Warmup reset (shape/dtype-preserving, vmap/batch-safe)."""
-    return jax.tree.map(jnp.zeros_like, stats)
+    """Warmup reset (shape/dtype-preserving, vmap/batch-safe).
+
+    `occ_peak` survives the reset: it is a whole-run high-water mark —
+    the compacted step's capacity certificate must cover warmup cycles
+    too (an overflow during warmup corrupts the state the measured
+    phase starts from)."""
+    z = jax.tree.map(jnp.zeros_like, stats)
+    return z.replace(occ_peak=stats.occ_peak)
 
 
 def finalize(stats: SimStats, cfg, offered_per_chip: float, chips: float):
@@ -51,4 +76,5 @@ def finalize(stats: SimStats, cfg, offered_per_chip: float, chips: float):
         avg_latency=lat, delivered_pkts=delivered,
         generated_pkts=int(st.generated), dropped_pkts=int(st.dropped),
         hops_by_type=hops, avg_hops_by_type=avg_hops,
-        stranded_pkts=int(st.stranded))
+        stranded_pkts=int(st.stranded),
+        occupancy_peak=int(st.occ_peak))

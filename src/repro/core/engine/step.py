@@ -24,13 +24,17 @@ from .apply import make_apply_fn
 from .arbitrate import make_arbitrate_fn
 from .inject import make_inject_fn
 from .state import build_consts, resolve_epoch
-from .stats import accumulate, zero_stats
+from .stats import accumulate, track_occ, zero_stats
 
 # the valid `cfg.step_impl` values — the single source of truth
 # (SimConfig and exp.RoutingSpec validate against this): "jnp" is the
 # phase pipeline below (the oracle), "fused" the per-channel-winner
-# restructuring in `fused.py` (bit-identical; the paper-scale fast path)
-STEP_IMPLS = ("jnp", "fused")
+# restructuring in `fused.py` (bit-identical; the paper-scale fast
+# path), "compact" the occupancy-compacted fused step (also fused.py:
+# live rows compacted into a capacity-C active set before arbitration,
+# bit-identical with a post-run capacity certificate — see
+# `fused.make_compact_step` and the sweep's escalation ladder)
+STEP_IMPLS = ("jnp", "fused", "compact")
 
 
 def make_step(net: Network, cfg, pattern, inject_mask=None):
@@ -51,6 +55,9 @@ def make_step(net: Network, cfg, pattern, inject_mask=None):
     if impl == "fused":
         from .fused import make_fused_step
         return make_fused_step(net, cfg, pattern, inject_mask)
+    if impl == "compact":
+        from .fused import make_compact_step
+        return make_compact_step(net, cfg, pattern, inject_mask)
     if impl != "jnp":
         raise ValueError(f"unknown step_impl {impl!r}; "
                          f"valid: {STEP_IMPLS}")
@@ -64,8 +71,9 @@ def make_step(net: Network, cfg, pattern, inject_mask=None):
         t, key, rate_pkt, fl = t_key_rate_fl
         fl = resolve_epoch(fl, t)
         state = inject(state, t, key, rate_pkt, fl)
+        stats = track_occ(state.stats, state)
         req, win, won_ch = arbitrate(state, t, fl)
-        stats = accumulate(state.stats, req, win, consts, t)
+        stats = accumulate(stats, req, win, consts, t)
         state = apply_moves(state, req, win, won_ch, t)
         return state.replace(stats=stats), None
 

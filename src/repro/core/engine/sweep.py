@@ -48,6 +48,17 @@ the shard axis.  Ghost channel/terminal padding makes non-dividing
 counts dense; `SweepResult.pad_fraction` reports the padded share of
 the state so perf records can account for it.
 
+Occupancy compaction (`cfg.step_impl="compact"`): the dispatch layer
+owns the capacity LADDER.  A compact dispatch compiles the step at one
+rung C (default ceil(N/4); REPRO_COMPACT_CAP pins the start), and
+`finish()` checks the run's exact live-row census (`SimStats.occ_peak`)
+against it — a breach re-dispatches the WHOLE grid at the next rung up
+(`fused.next_rung`), so results handed back are always bit-identical to
+the oracle; the rerun count is surfaced as `SweepResult.escalations`.
+K-cycle supersteps (REPRO_SUPERSTEP, `superstep()`) unroll K cycles
+inside the scan body — per-substep warmup/epoch/window conds keep K > 1
+bit-identical to K = 1.
+
 Every dispatch goes through an AOT compile cache, which (a) makes the
 compile-vs-run wall-time split exact (`SweepResult.compile_s` /
 `wall_s`) and (b) lets `run_lanes_async` return before the result is
@@ -83,7 +94,8 @@ from ... import env_int
 from ..topology import (FaultSchedule, FaultSet, Network, as_fault_schedule,
                         compose_faults, final_faults)
 from ..traffic import as_pattern
-from .fused import fused_pad, grant_form, make_fused_step
+from .fused import (fused_pad, grant_form, make_compact_step,
+                    make_fused_step, next_rung)
 from .state import build_lane, make_state, stack_lanes
 from .stats import finalize, zero_stats
 from .step import make_step
@@ -134,6 +146,30 @@ def channel_shards() -> int:
     return max(env_int("REPRO_CHANNEL_SHARDS", 1), 1)
 
 
+def superstep(span: int | None = None) -> int:
+    """K-cycle superstep unroll factor (REPRO_SUPERSTEP, default 1).
+
+    With K > 1 the batched scan advances K cycles per scan iteration —
+    the K steps are Python-unrolled inside the scan body, so XLA fuses
+    across cycle boundaries and the compact step's route-once cache
+    (record fields, carried in the state) flows through the unroll with
+    no scan-carry round-trip between the K substeps.  Each substep keeps
+    its OWN absolute cycle `t` (warmup reset, fault-epoch resolution,
+    and window `t_end` masking are all per-substep conds), so unrolling
+    cannot skip a warm-fault epoch boundary or the stats reset — the
+    result is bit-identical to K = 1 (pinned by tests, proved by the
+    analysis capacity pass).
+
+    `span` is the scan length the caller wants to unroll (the cycle
+    budget, or a session's window); K falls back to 1 when it does not
+    divide `span` (the reshape needs whole supersteps).
+    """
+    k = max(env_int("REPRO_SUPERSTEP", 1), 1)
+    if span is not None and span % k:
+        return 1
+    return k
+
+
 def lane_mesh(shards: int = 1) -> Mesh | None:
     """The device mesh for a dispatch: 1-D ``("lanes",)`` over the host
     devices, or 2-D ``("lanes", "shards")`` with `shards` > 1 (each lane
@@ -182,28 +218,41 @@ def _key_chain_seq(key, cycles: int):
     return jnp.concatenate([key[None], ks]), subs   # [cycles+1, 2], [cycles, 2]
 
 
-def _scan_lanes(step, cycles, reset_at, per_lane_faults,
+def _scan_lanes(step, cycles, reset_at, per_lane_faults, K,
                 state0, rate_pkt, keys, lanes):
     """Advance B lanes in lockstep; state0/keys/rate_pkt carry axis 0 = B.
 
     `lanes` is the fault pytree (`build_lane`): lane-stacked ([B, ...],
     `per_lane_faults=True`) when the lanes model different degraded
     networks, or a single shared lane dict broadcast across the batch.
+
+    `K` is the superstep unroll factor (must divide `cycles`; see
+    `superstep`): the scan runs cycles/K iterations of K Python-unrolled
+    substeps, each with its own absolute `t` — per-substep warmup reset
+    and (inside the step) fault-epoch resolution keep the result
+    bit-identical to K = 1.
     """
     _TRACE_COUNT[0] += 1  # trace-time side effect == one compilation
     lane_axis = 0 if per_lane_faults else None
     subkeys = jax.vmap(_key_chain, in_axes=(0, None),
                        out_axes=1)(keys, cycles)           # [cycles, B, 2]
+    ts = jnp.arange(cycles).reshape(cycles // K, K)
+    subkeys = subkeys.reshape((cycles // K, K) + subkeys.shape[1:])
 
     def body(state, t_subs):
-        t, subs = t_subs
-        state, _ = jax.vmap(
-            lambda s, k, r, f: step(s, (t, k, r, f)),
-            in_axes=(0, 0, 0, lane_axis))(state, subs, rate_pkt, lanes)
-        st = jax.lax.cond(t == reset_at, zero_stats, lambda s: s, state.stats)
-        return state.replace(stats=st), None
+        ts_k, subs_k = t_subs
+        for i in range(K):
+            t = ts_k[i]
+            state, _ = jax.vmap(
+                lambda s, k, r, f: step(s, (t, k, r, f)),
+                in_axes=(0, 0, 0, lane_axis))(state, subs_k[i], rate_pkt,
+                                              lanes)
+            st = jax.lax.cond(t == reset_at, zero_stats, lambda s: s,
+                              state.stats)
+            state = state.replace(stats=st)
+        return state, None
 
-    state, _ = jax.lax.scan(body, state0, (jnp.arange(cycles), subkeys))
+    state, _ = jax.lax.scan(body, state0, (ts, subkeys))
     return state
 
 
@@ -213,13 +262,54 @@ def run_scan_batched(step, cycles, reset_at, state0, rate_pkt, keys, lanes,
                      per_lane_faults: bool):
     """Single-device batched scan (kept as the stable public entry point;
     `BatchedSweep` itself dispatches through the AOT cache, which adds
-    device sharding and the compile/run wall split)."""
-    return _scan_lanes(step, cycles, reset_at, per_lane_faults,
+    device sharding, supersteps, and the compile/run wall split)."""
+    return _scan_lanes(step, cycles, reset_at, per_lane_faults, 1,
                        state0, rate_pkt, keys, lanes)
 
 
+def _scan_lanes_seq(step, cycles, reset_at, per_lane_faults, K,
+                    state0, rate_pkt, keys, lanes):
+    """`_scan_lanes` with the lane axis OUTSIDE the cycle scan: one
+    `lax.map` over lanes, each lane running its own full-cycle scan.
+
+    Bit-identical to the vmapped form — lanes are independent and the
+    per-lane key chain is the same — but each lane's gathers/scatters
+    run unbatched, which is how the compact step's occupancy-gather
+    pipeline is fastest on CPU: batching the active-set gathers over
+    lanes defeats XLA:CPU's contiguous-gather lowering (measured ~25%
+    per-lane overhead at fig11 scale), and a single host core gains
+    nothing from the lockstep form anyway.  Selected by the dispatch
+    planner for single-device compact runs only; meshes keep the
+    lockstep form (shard_map partitions the lane axis)."""
+    _TRACE_COUNT[0] += 1  # trace-time side effect == one compilation
+    subkeys = jax.vmap(_key_chain, in_axes=(0, None))(keys, cycles)
+    ts = jnp.arange(cycles).reshape(cycles // K, K)
+
+    def one_lane(st0_subs_rate_fl):
+        st0, subs, rate, fl = st0_subs_rate_fl
+        subs_r = subs.reshape((cycles // K, K) + subs.shape[1:])
+
+        def body(state, t_subs):
+            ts_k, subs_k = t_subs
+            for i in range(K):
+                t = ts_k[i]
+                state, _ = step(state, (t, subs_k[i], rate, fl))
+                st = jax.lax.cond(t == reset_at, zero_stats,
+                                  lambda s: s, state.stats)
+                state = state.replace(stats=st)
+            return state, None
+
+        return jax.lax.scan(body, st0, (ts, subs_r))[0]
+
+    if per_lane_faults:
+        return jax.lax.map(one_lane, (state0, subkeys, rate_pkt, lanes))
+    return jax.lax.map(
+        lambda args: one_lane(args + (lanes,)),
+        (state0, subkeys, rate_pkt))
+
+
 def _make_dispatch_fn(step, cycles, reset_at, per_lane_faults, mesh,
-                      state_spec=None):
+                      state_spec=None, K=1):
     """The jittable whole-sweep function, `shard_map`ped over the lane
     axis when a mesh is given (lanes are independent: no collectives, so
     partitioning axis 0 is communication-free SPMD).  `state_spec` is a
@@ -227,8 +317,11 @@ def _make_dispatch_fn(step, cycles, reset_at, per_lane_faults, mesh,
     mesh partitions `b_pkt`/`s_pkt` on their channel axis and replicates
     the rest across the shard axis); the default partitions every leaf
     on the lane axis only."""
-    f = functools.partial(_scan_lanes, step, cycles, reset_at,
-                          per_lane_faults)
+    scan_form = (_scan_lanes_seq
+                 if mesh is None and getattr(step, "compact_capacity", 0)
+                 else _scan_lanes)
+    f = functools.partial(scan_form, step, cycles, reset_at,
+                          per_lane_faults, K)
     if mesh is not None:
         lane_spec = PartitionSpec("lanes")
         if state_spec is None:
@@ -241,7 +334,7 @@ def _make_dispatch_fn(step, cycles, reset_at, per_lane_faults, mesh,
     return jax.jit(f, donate_argnums=(0,))
 
 
-def _scan_window(step, window, reset_at, per_lane_faults,
+def _scan_window(step, window, reset_at, per_lane_faults, K,
                  state0, keys, t0, t_end, rate_pkt, lanes):
     """Advance B lanes exactly `window` scan iterations starting at
     absolute cycle `t0`, masking iterations at or past `t_end` to a
@@ -255,40 +348,48 @@ def _scan_window(step, window, reset_at, per_lane_faults,
     (`keys_seq` gather), so chaining windows replays the exact subkey
     chain of the one-shot `_scan_lanes` run and the windowed result is
     bit-identical to the uninterrupted one.
+
+    `K` supersteps the window scan like `_scan_lanes` (must divide
+    `window`); the `t < t_end` no-op mask stays PER SUBSTEP, so a
+    partial final window masks exactly the same cycles as K = 1.
     """
     _TRACE_COUNT[0] += 1  # trace-time side effect == one compilation
     lane_axis = 0 if per_lane_faults else None
     keys_seq, subkeys = jax.vmap(_key_chain_seq, in_axes=(0, None),
                                  out_axes=(1, 1))(keys, window)
     # keys_seq [window+1, B, 2], subkeys [window, B, 2]
+    ts = (t0 + jnp.arange(window)).reshape(window // K, K)
+    subs_r = subkeys.reshape((window // K, K) + subkeys.shape[1:])
 
     def body(state, t_subs):
-        t, subs = t_subs
+        ts_k, subs_k = t_subs
+        for i in range(K):
+            t, subs = ts_k[i], subs_k[i]
 
-        def advance(st):
-            st, _ = jax.vmap(
-                lambda s, k, r, f: step(s, (t, k, r, f)),
-                in_axes=(0, 0, 0, lane_axis))(st, subs, rate_pkt, lanes)
-            stats = jax.lax.cond(t == reset_at, zero_stats,
-                                 lambda s: s, st.stats)
-            return st.replace(stats=stats)
+            def advance(st):
+                st, _ = jax.vmap(
+                    lambda s, k, r, f: step(s, (t, k, r, f)),
+                    in_axes=(0, 0, 0, lane_axis))(st, subs, rate_pkt,
+                                                  lanes)
+                stats = jax.lax.cond(t == reset_at, zero_stats,
+                                     lambda s: s, st.stats)
+                return st.replace(stats=stats)
 
-        state = jax.lax.cond(t < t_end, advance, lambda st: st, state)
+            state = jax.lax.cond(t < t_end, advance, lambda st: st, state)
         return state, None
 
-    state, _ = jax.lax.scan(body, state0,
-                            (t0 + jnp.arange(window), subkeys))
+    state, _ = jax.lax.scan(body, state0, (ts, subs_r))
     real = jnp.clip(t_end - t0, 0, window)
     return state, keys_seq[real]
 
 
-def _make_window_fn(step, window, reset_at, per_lane_faults, mesh):
+def _make_window_fn(step, window, reset_at, per_lane_faults, mesh, K=1):
     """The jittable one-window function, `shard_map`ped over the lane
     axis when a mesh is given (mirrors `_make_dispatch_fn`; the traced
     `t0`/`t_end` scalars replicate across devices).  State and keys are
     donated — each window consumes the previous window's buffers."""
     f = functools.partial(_scan_window, step, window, reset_at,
-                          per_lane_faults)
+                          per_lane_faults, K)
     if mesh is not None:
         lane_spec = PartitionSpec("lanes")
         scal_spec = PartitionSpec()
@@ -332,6 +433,14 @@ class LaneRun(NamedTuple):
     placement: str = "single"   # "single" | "lanes:L" | "lanes:L,shards:K"
     pad_fraction: float = 0.0   # ghost share of the dispatched state
     grant_form: str = "two_pass"   # "combined" | "two_pass" (see fused.py)
+    occupancy_peak: int = 0     # max live request rows over the real lanes
+    compact_capacity: int = 0   # compact step's final ladder rung (0=dense)
+    superstep: int = 1          # K-cycle unroll the dispatch compiled
+    escalations: int = 0        # capacity-ladder reruns this run needed
+    # compiles spent on ABANDONED (breached) rungs: kept out of
+    # `compile_count` so the one-compile-per-grid accounting stays exact
+    # per executable — each ladder rung is its own executable
+    escalation_compiles: int = 0
 
 
 @dataclass
@@ -362,6 +471,17 @@ class SweepResult:
     # the packed key would overflow int32; `fused.grant_form` decides,
     # and the static spec pass reports/warns per scenario)
     grant_form: str = "two_pass"
+    # occupancy / compaction telemetry (see engine.fused.make_compact_step):
+    # peak live request rows over the whole grid, the compact step's FINAL
+    # capacity rung (0 for the dense steps), the K-cycle superstep the
+    # dispatch compiled, and how many capacity-ladder reruns were needed
+    occupancy_peak: int = 0
+    compact_capacity: int = 0
+    superstep: int = 1
+    escalations: int = 0
+    # compiles the abandoned rungs cost (separate from `compile_count`:
+    # every rung is its own executable, so the per-grid count stays 1)
+    escalation_compiles: int = 0
 
     def result(self, rate_idx: int, seed_idx: int = 0):
         return self.results[rate_idx][seed_idx]
@@ -392,7 +512,8 @@ class SweepResult:
                 generated_pkts=sum(r.generated_pkts for r in row) // n,
                 dropped_pkts=sum(r.dropped_pkts for r in row) // n,
                 hops_by_type=hops, avg_hops_by_type=avg_hops,
-                stranded_pkts=sum(r.stranded_pkts for r in row) // n))
+                stranded_pkts=sum(r.stranded_pkts for r in row) // n,
+                occupancy_peak=max(r.occupancy_peak for r in row)))
         return out
 
     def saturation_throughput(self) -> float:
@@ -409,11 +530,13 @@ class _LanePlan:
 
     __slots__ = ("lane_triples", "fault_sets", "args", "compiled",
                  "compile_s", "compile_count", "placement",
-                 "pad_fraction", "grant_form", "used")
+                 "pad_fraction", "grant_form", "capacity", "rows",
+                 "superstep", "device", "used")
 
     def __init__(self, lane_triples, fault_sets, args, compiled,
                  compile_s, compile_count, placement, pad_fraction,
-                 grant_form):
+                 grant_form, capacity=0, rows=0, superstep=1,
+                 device=None):
         self.lane_triples = lane_triples
         self.fault_sets = fault_sets
         self.args = args
@@ -423,6 +546,10 @@ class _LanePlan:
         self.placement = placement
         self.pad_fraction = pad_fraction
         self.grant_form = grant_form
+        self.capacity = capacity      # compact rung this plan compiled
+        self.rows = rows              # N, the dense request-row count
+        self.superstep = superstep
+        self.device = device          # pinned device (escalation reruns)
         self.used = False
 
 
@@ -438,7 +565,8 @@ class _PendingLanes:
 
     def __init__(self, sweep, stats, num_lanes, lane_triples, fault_sets,
                  compile_s, compile_count, t0, placement, pad_fraction,
-                 grant_form):
+                 grant_form, capacity=0, rows=0, superstep=1,
+                 device=None):
         self._sweep, self._stats = sweep, stats
         self._B, self._lanes = num_lanes, lane_triples
         self._fsets = fault_sets
@@ -446,18 +574,44 @@ class _PendingLanes:
         self._t0 = t0
         self._placement, self._pad_frac = placement, pad_fraction
         self._grant_form = grant_form
+        self._capacity, self._rows = capacity, rows
+        self._superstep = superstep
+        self._device = device
 
     def finish(self) -> LaneRun:
         stats = jax.tree.map(np.asarray, self._stats)      # blocks
         wall = time.perf_counter() - self._t0
         cfg = self._sweep.cfg
+        occ = int(np.max(stats.occ_peak[:self._B]))
+        if self._capacity and occ > self._capacity:
+            # capacity breach: the live set outgrew this rung, so every
+            # cycle after the crossing arbitrated over a TRUNCATED active
+            # set — nothing from this run can be trusted (or reused).
+            # Re-dispatch the WHOLE grid at the next ladder rung; the
+            # rerun is deterministic (same lanes, same keys), so the
+            # escalated result is bit-identical to the oracle.  `occ` is
+            # exact (the census is computed densely, independent of C),
+            # and the top rung C = N cannot breach, so the walk
+            # terminates.
+            rung = next_rung(self._rows, occ)
+            self._sweep._capacity_floor = max(
+                self._sweep._capacity_floor, rung)
+            redo = self._sweep.run_lanes_async(
+                self._lanes, device=self._device, capacity=rung).finish()
+            return redo._replace(
+                wall_s=redo.wall_s + wall,
+                compile_s=redo.compile_s + self._compile_s,
+                escalations=redo.escalations + 1,
+                escalation_compiles=(redo.escalation_compiles
+                                     + self._compiles))
         pick = lambda i: jax.tree.map(lambda x: x[i], stats)
         results = [finalize(pick(i), cfg, self._lanes[i][0],
                             self._sweep._chips(self._fsets[i]))
                    for i in range(self._B)]     # ghost pad lanes excluded
         return LaneRun(results, wall, self._compile_s, self._compiles,
                        self._fsets, self._placement, self._pad_frac,
-                       self._grant_form)
+                       self._grant_form, occ, self._capacity,
+                       self._superstep)
 
 
 class LaneSession:
@@ -483,12 +637,13 @@ class LaneSession:
     __slots__ = ("sweep", "lane_triples", "fault_sets", "window", "total",
                  "cycle", "state", "keys", "compiled", "placement",
                  "pad_fraction", "grant_form", "compile_s", "compile_count",
-                 "num_lanes", "_rate_pkt_dev", "_lane_data")
+                 "num_lanes", "capacity", "superstep", "_rate_pkt_dev",
+                 "_lane_data")
 
     def __init__(self, sweep, lane_triples, fault_sets, window, total,
                  cycle, state, keys, compiled, rate_pkt, lane_data,
                  placement, pad_fraction, grant_form, compile_s,
-                 compile_count):
+                 compile_count, capacity=0, superstep=1):
         self.sweep = sweep
         self.lane_triples = lane_triples
         self.fault_sets = fault_sets
@@ -505,6 +660,8 @@ class LaneSession:
         self.grant_form = grant_form
         self.compile_s = compile_s
         self.compile_count = compile_count
+        self.capacity = capacity      # compact rung (0 for dense steps)
+        self.superstep = superstep
         self.num_lanes = len(lane_triples)
 
     def done(self) -> bool:
@@ -553,13 +710,24 @@ class LaneSession:
                 f"to the full budget before finish()")
         stats = self.stats_host()
         cfg = self.sweep.cfg
+        occ = int(np.max(stats.occ_peak[:self.num_lanes]))
+        if self.capacity and occ > self.capacity:
+            # a windowed session cannot escalate (its exported snapshots
+            # and streamed stats already reflect the truncated active
+            # set), so a breach is a hard error with the fix spelled out
+            raise RuntimeError(
+                f"compact capacity {self.capacity} overflowed: the live "
+                f"set peaked at {occ} rows — windowed sessions cannot "
+                f"re-dispatch at a larger ladder rung mid-run; rerun "
+                f"with REPRO_COMPACT_CAP>={occ} (or step_impl='fused')")
         pick = lambda i: jax.tree.map(lambda x: x[i], stats)
         results = [finalize(pick(i), cfg, self.lane_triples[i][0],
                             self.sweep._chips(self.fault_sets[i]))
                    for i in range(self.num_lanes)]
         return LaneRun(results, 0.0, self.compile_s, self.compile_count,
                        self.fault_sets, self.placement, self.pad_fraction,
-                       self.grant_form)
+                       self.grant_form, occ, self.capacity,
+                       self.superstep)
 
 
 class BatchedSweep:
@@ -583,6 +751,8 @@ class BatchedSweep:
         self.NV = consts["NV"]
         self._pattern = pattern
         self._sharded_steps: dict[int, object] = {}
+        self._compact_steps: dict[int, object] = {}
+        self._capacity_floor = 0    # highest escalated rung seen so far
         self.faults = faults
         self.lane0 = build_lane(net, cfg, faults) if lane is None else lane
         self.terms_per_chip = net.num_terminals / net.num_chips
@@ -604,6 +774,21 @@ class BatchedSweep:
             self._sharded_steps[K] = step
         return step
 
+    def _compact_step(self, C: int):
+        """The capacity-C compact step (memoized per ladder rung: the
+        base `self.step` for its own rung, a fresh build otherwise — so
+        an escalation's first rerun compiles once and later reruns at
+        the same rung hit the AOT cache)."""
+        step = self._compact_steps.get(C)
+        if step is None:
+            if getattr(self.step, "compact_capacity", None) == C:
+                step = self.step
+            else:
+                step, _ = make_compact_step(self.net, self.cfg,
+                                            self._pattern, capacity=C)
+            self._compact_steps[C] = step
+        return step
+
     def _chips(self, faults) -> float:
         """Accepted-throughput divisor: chips weighted by the fraction of
         terminals that actually inject (mask AND alive).  A schedule
@@ -613,21 +798,25 @@ class BatchedSweep:
                  else self._inj_mask & faults.term_alive(self.net))
         return self.net.num_chips * alive.sum() / self.net.num_terminals
 
-    def _plan(self, lanes, device=None) -> "_LanePlan":
+    def _plan(self, lanes, device=None, capacity=None) -> "_LanePlan":
         """Prepare, place, and compile (cache-aware) ONE batched scan
         over the (ghost-padded) lane axis — without executing it.
 
         `device=None` shards lanes over the full device mesh (no-op with
         one device); an explicit `device` pins the whole dispatch there
-        (the runner's cell round-robin).  The returned plan is
-        single-use: executing it donates its initial state buffer.
+        (the runner's cell round-robin).  `capacity` overrides the
+        compact step's ladder rung (the escalation rerun path; ignored
+        for the dense steps).  The returned plan is single-use:
+        executing it donates its initial state buffer.
         """
         lane_triples, lane_rates, lane_keys, lane_data, per_lane_faults, \
             fsets = self._prepare_lanes(lanes)
         cfg = self.cfg
         B = int(lane_rates.shape[0])
         cycles = cfg.warmup + cfg.measure
-        fused = getattr(cfg, "step_impl", "jnp") == "fused"
+        impl = getattr(cfg, "step_impl", "jnp")
+        fused = impl == "fused"
+        compact = impl == "compact"
         K = channel_shards() if (fused and device is None) else 1
         mesh = lane_mesh(K) if K > 1 else None
         if mesh is None:
@@ -635,10 +824,24 @@ class BatchedSweep:
             small = B * cycles < shard_min_work()
             if device is None and B > 1 and not small:
                 mesh = lane_mesh()
-        step = self._sharded_step(K) if K > 1 else self.step
+        if K > 1:
+            step = self._sharded_step(K)
+        elif compact and capacity is not None:
+            step = self._compact_step(int(capacity))
+        elif compact and self._capacity_floor:
+            # warm start: an earlier dispatch of this sweep escalated, so
+            # later dispatches start straight at the proven rung instead
+            # of re-breaching the default one every run
+            step = self._compact_step(self._capacity_floor)
+        else:
+            step = self.step
         # the arbitration form this dispatch compiles: the oracle step IS
-        # the two-pass form; the fused step picks per `fused.grant_form`
-        gform = grant_form(self.net, cfg, K) if fused else "two_pass"
+        # the two-pass form; the fused/compact steps pick per
+        # `fused.grant_form`
+        gform = (grant_form(self.net, cfg, K) if fused or compact
+                 else "two_pass")
+        cap = getattr(step, "compact_capacity", 0)
+        kss = superstep(cycles)
         ch_pad, term_pad = fused_pad(self.net, K) if K > 1 else (0, 0)
         nd = int(mesh.shape["lanes"]) if mesh is not None else 1
         pad = (-B) % nd
@@ -699,14 +902,14 @@ class BatchedSweep:
             state0, lane_rates, lane_keys, lane_data = jax.device_put(
                 (state0, lane_rates, lane_keys, lane_data), device)
         cache_key = (step, cycles, cfg.warmup, per_lane_faults, mesh,
-                     device, _sig((state0, lane_rates, lane_keys,
-                                   lane_data)))
+                     device, kss, _sig((state0, lane_rates, lane_keys,
+                                        lane_data)))
         compiled = _AOT_CACHE.get(cache_key)
         compile_s = 0.0
         compiles = 0
         if compiled is None:
             fn = _make_dispatch_fn(step, cycles, cfg.warmup,
-                                   per_lane_faults, mesh, state_spec)
+                                   per_lane_faults, mesh, state_spec, kss)
             before = _TRACE_COUNT[0]
             t0 = time.perf_counter()
             compiled = fn.lower(state0, lane_rates, lane_keys,
@@ -717,7 +920,8 @@ class BatchedSweep:
         return _LanePlan(lane_triples, fsets,
                          (state0, lane_rates, lane_keys, lane_data),
                          compiled, compile_s, compiles, placement,
-                         pad_fraction, gform)
+                         pad_fraction, gform, cap,
+                         getattr(step, "compact_rows", 0), kss, device)
 
     def _prepare_lanes(self, lanes, force_stack: bool = False,
                        epochs: int | None = None):
@@ -812,8 +1016,17 @@ class BatchedSweep:
         Bp = target + (-target) % nd
         pad = Bp - B
         placement = "single" if mesh is None else f"lanes:{nd}"
-        fused = getattr(cfg, "step_impl", "jnp") == "fused"
-        gform = grant_form(self.net, cfg, 1) if fused else "two_pass"
+        impl = getattr(cfg, "step_impl", "jnp")
+        gform = (grant_form(self.net, cfg, 1) if impl in ("fused", "compact")
+                 else "two_pass")
+        step = self.step
+        if impl == "compact" and self._capacity_floor:
+            # sessions cannot escalate mid-run (finish() raises on a
+            # breach), so start at the highest rung this sweep has ever
+            # had to escalate to
+            step = self._compact_step(self._capacity_floor)
+        cap = getattr(step, "compact_capacity", 0)
+        kss = superstep(window)
         if pad:
             lane_rates = jnp.concatenate(
                 [lane_rates, jnp.zeros((pad,), lane_rates.dtype)])
@@ -854,16 +1067,16 @@ class BatchedSweep:
         elif device is not None:
             state0, lane_rates, lane_keys, lane_data = jax.device_put(
                 (state0, lane_rates, lane_keys, lane_data), device)
-        cache_key = ("window", self.step, window, cfg.warmup,
-                     per_lane_faults, mesh, device,
+        cache_key = ("window", step, window, cfg.warmup,
+                     per_lane_faults, mesh, device, kss,
                      _sig((state0, lane_keys, t0, t_end, lane_rates,
                            lane_data)))
         compiled = _AOT_CACHE.get(cache_key)
         compile_s = 0.0
         compiles = 0
         if compiled is None:
-            fn = _make_window_fn(self.step, window, cfg.warmup,
-                                 per_lane_faults, mesh)
+            fn = _make_window_fn(step, window, cfg.warmup,
+                                 per_lane_faults, mesh, kss)
             before = _TRACE_COUNT[0]
             t_c = time.perf_counter()
             compiled = fn.lower(state0, lane_keys, t0, t_end, lane_rates,
@@ -874,10 +1087,11 @@ class BatchedSweep:
         return LaneSession(self, lane_triples, fsets, window, cycles,
                            cycle, state0, lane_keys, compiled, lane_rates,
                            lane_data, placement, 1.0 - B / Bp, gform,
-                           compile_s, compiles)
+                           compile_s, compiles, cap, kss)
 
     def run_lanes_async(self, lanes=None, device=None,
-                        plan: "_LanePlan | None" = None) -> _PendingLanes:
+                        plan: "_LanePlan | None" = None,
+                        capacity=None) -> _PendingLanes:
         """Dispatch the lane grid without blocking on the result.
 
         Compilation (cache-miss only) still blocks the host, but the
@@ -885,9 +1099,11 @@ class BatchedSweep:
         further independent grids (e.g. on other devices) and `finish()`
         them in order.  `device` pins the whole grid to one device
         instead of sharding it over the mesh; `plan` executes an
-        already-warm `warm_compile` plan instead of preparing anew."""
+        already-warm `warm_compile` plan instead of preparing anew;
+        `capacity` pins the compact step's ladder rung (the escalation
+        rerun re-enters here with the next rung up)."""
         if plan is None:
-            plan = self._plan(lanes, device=device)
+            plan = self._plan(lanes, device=device, capacity=capacity)
         if plan.used:
             raise ValueError(
                 "a lane plan is single-use: its initial state buffer is "
@@ -900,7 +1116,8 @@ class BatchedSweep:
                              plan.lane_triples, plan.fault_sets,
                              plan.compile_s, plan.compile_count, t0,
                              plan.placement, plan.pad_fraction,
-                             plan.grant_form)
+                             plan.grant_form, plan.capacity, plan.rows,
+                             plan.superstep, plan.device)
 
     def run_lanes(self, lanes, device=None) -> LaneRun:
         """The fully general lane axis: one compiled batched scan over an
@@ -946,7 +1163,12 @@ class BatchedSweep:
                            wall_s=run.wall_s, compile_s=run.compile_s,
                            placement=run.placement,
                            pad_fraction=run.pad_fraction,
-                           grant_form=run.grant_form)
+                           grant_form=run.grant_form,
+                           occupancy_peak=run.occupancy_peak,
+                           compact_capacity=run.compact_capacity,
+                           superstep=run.superstep,
+                           escalations=run.escalations,
+                           escalation_compiles=run.escalation_compiles)
 
     def run_faults(self, offered_per_chip: float, fault_grid,
                    seeds=None) -> SweepResult:
@@ -987,4 +1209,9 @@ class BatchedSweep:
                            wall_s=run.wall_s, compile_s=run.compile_s,
                            fault_fracs=fracs, placement=run.placement,
                            pad_fraction=run.pad_fraction,
-                           grant_form=run.grant_form)
+                           grant_form=run.grant_form,
+                           occupancy_peak=run.occupancy_peak,
+                           compact_capacity=run.compact_capacity,
+                           superstep=run.superstep,
+                           escalations=run.escalations,
+                           escalation_compiles=run.escalation_compiles)

@@ -68,9 +68,12 @@ class SimConfig:
     # `repro.kernels.netsim` — bit-identical, TPU-ready fast path)
     grant_impl: str = "jnp"
     # cycle-step implementation: "jnp" (the modular phase pipeline,
-    # default and oracle) or "fused" (the per-channel-winner fused step,
+    # default and oracle), "fused" (the per-channel-winner fused step,
     # `engine.fused` — bit-identical, and the only step the 2-D
-    # (lanes x shards) channel-sharded mesh can run)
+    # (lanes x shards) channel-sharded mesh can run), or "compact"
+    # (the fused step with live rows compacted into a capacity-C active
+    # set before arbitration — bit-identical, occupancy-proportional;
+    # see `engine.fused.make_compact_step` and REPRO_COMPACT_CAP)
     step_impl: str = "jnp"
 
     def __post_init__(self):
@@ -100,6 +103,9 @@ class SimResult:
     avg_hops_by_type: dict = field(default_factory=dict)
     stranded_pkts: int = 0         # parked on the -1 non-channel at exit
                                    # (warm faults left them unroutable)
+    occupancy_peak: int = 0        # high-water mark of live request rows
+                                   # (whole run incl. warmup; the compact
+                                   # step's capacity certificate)
 
     def row(self) -> str:
         return (f"{self.offered_per_chip:.3f},{self.throughput_per_chip:.3f},"

@@ -267,6 +267,25 @@ def smoke_fused_spec() -> ExperimentSpec:
         notes="smoke on the fused step (channel-shardable)")
 
 
+def smoke_compact_spec() -> ExperimentSpec:
+    """The smoke grid on the occupancy-compacted step
+    (`step_impl="compact"`): live rows are compacted into a
+    capacity-C active set before arbitration (C starts at a
+    `fused.capacity_ladder` rung; breaches escalate to the next rung
+    with a bit-identical whole-grid rerun).  CI runs this next to
+    `smoke_fused` and the parity tests pin all three step impls
+    bit-identical; the analysis capacity pass proves/annotates the
+    rung choice statically."""
+    return ExperimentSpec(
+        name="smoke_compact",
+        topologies=TopologySpec.switchless(
+            a=1, b=1, m=2, n=6, noc=2, g=3, label="smoke-compact"),
+        traffics=TrafficSpec("uniform"),
+        routings=RoutingSpec(vcs_per_class=2, step_impl="compact"),
+        axes=SweepAxes(rates=(0.5, 1.5), warmup=50, measure=200),
+        notes="smoke on the occupancy-compacted step (capacity ladder)")
+
+
 def smoke_fig10a_spec() -> ExperimentSpec:
     """Fig. 10(a) topology + patterns at smoke scale: the tier-1 parity
     fixture (run_experiment vs legacy Simulator.sweep, lane-for-lane)."""
@@ -367,7 +386,8 @@ def _register_defaults() -> None:
     register_scenario(fig15_spec(), builder=fig15_spec)
     register_scenario(yield_curve_spec(), builder=yield_curve_spec)
     for spec in (bench_sweep_spec(), bench_faults_spec(), smoke_spec(),
-                 smoke_fused_spec(), smoke_fig10a_spec(),
+                 smoke_fused_spec(), smoke_compact_spec(),
+                 smoke_fig10a_spec(),
                  smoke_faults_spec(), smoke_warm_faults_spec()):
         register_scenario(spec)
 

@@ -125,6 +125,13 @@ class GridResult:
                                 # ("combined" | "two_pass"; fused steps
                                 # fall back to two_pass on int32 packed-
                                 # key overflow — see fused.grant_form)
+    occupancy_peak: int = 0     # max live request rows over the grid
+    compact_capacity: int = 0   # compact ladder rung (0 = dense step)
+    superstep: int = 1          # K-cycle unroll the grid compiled
+    escalations: int = 0        # capacity-ladder reruns (compact step)
+    escalation_compiles: int = 0   # compiles spent on abandoned rungs
+                                   # (kept out of compile_count: each
+                                   # rung is its own executable)
 
     def result(self, fault_idx: int, rate_idx: int,
                seed_idx: int = 0) -> SimResult:
@@ -137,7 +144,12 @@ class GridResult:
                            compile_count=self.compile_count,
                            wall_s=self.wall_s, placement=self.placement,
                            pad_fraction=self.pad_fraction,
-                           grant_form=self.grant_form)
+                           grant_form=self.grant_form,
+                           occupancy_peak=self.occupancy_peak,
+                           compact_capacity=self.compact_capacity,
+                           superstep=self.superstep,
+                           escalations=self.escalations,
+                           escalation_compiles=self.escalation_compiles)
 
 
 @dataclass
@@ -197,6 +209,11 @@ class ExperimentResult:
                         placement=g.placement,
                         pad_fraction=g.pad_fraction,
                         grant_form=g.grant_form,
+                        occupancy_peak=res.occupancy_peak,
+                        compact_capacity=g.compact_capacity,
+                        superstep=g.superstep,
+                        escalations=g.escalations,
+                        escalation_compiles=g.escalation_compiles,
                         wall_s=dt))
         return out
 
@@ -294,7 +311,12 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = False
             compile_s=compile_s,
             placement=getattr(run, "placement", "single"),
             pad_fraction=getattr(run, "pad_fraction", 0.0),
-            grant_form=getattr(run, "grant_form", "two_pass")))
+            grant_form=getattr(run, "grant_form", "two_pass"),
+            occupancy_peak=getattr(run, "occupancy_peak", 0),
+            compact_capacity=getattr(run, "compact_capacity", 0),
+            superstep=getattr(run, "superstep", 1),
+            escalations=getattr(run, "escalations", 0),
+            escalation_compiles=getattr(run, "escalation_compiles", 0)))
         if verbose:
             print(f"[exp:{spec.name}]   {cell.topology.label} "
                   f"{cell.routing.label} {cell.traffic.label} done in "

@@ -27,15 +27,16 @@ class Pack:
     """One active windowed dispatch of `units` (real lanes, in order)."""
 
     __slots__ = ("sid", "bucket", "units", "sweep", "session", "chips",
-                 "prev_cycle")
+                 "prev_cycle", "device")
 
     def __init__(self, sid: int, bucket: BucketKey, units: list,
-                 session, sweep):
+                 session, sweep, device=None):
         self.sid = sid
         self.bucket = bucket
         self.units = units
         self.sweep = sweep
         self.session = session
+        self.device = device          # pinned device (None = engine default)
         # accepted-throughput divisor per real lane (mask AND alive)
         self.chips = [sweep._chips(f)
                       for f in session.fault_sets[:len(units)]]
@@ -43,14 +44,20 @@ class Pack:
 
     @classmethod
     def open(cls, sid: int, bucket: BucketKey, units: list, *,
-             window: int, pack: int, restore: dict | None = None
-             ) -> "Pack":
+             window: int, pack: int, restore: dict | None = None,
+             device=None) -> "Pack":
+        """`device` pins the whole pack's dispatch to one device (the
+        service round-robins concurrent packs across the host devices —
+        see `service.pack_device`); None keeps the engine's default
+        placement.  Placement never changes per-lane math, so packs are
+        bit-identical wherever they land."""
         sweep = bucket_sweep(bucket)
         session = sweep.start_lanes(
             [u.triple() for u in units], window=window,
             pad_to=max(pack, len(units)), force_stack=True,
-            epochs=bucket.epochs or None, restore=restore)
-        return cls(sid, bucket, units, session, sweep)
+            epochs=bucket.epochs or None, restore=restore,
+            device=device)
+        return cls(sid, bucket, units, session, sweep, device)
 
     @property
     def done(self) -> bool:

@@ -60,6 +60,23 @@ def serve_pack() -> int:
     return max(1, env_int("REPRO_SERVE_PACK", 8))
 
 
+def pack_device(sid: int):
+    """Deterministic round-robin placement for pack `sid`: with N > 1
+    host devices (`REPRO_HOST_DEVICES`, or a real multi-device backend)
+    pack sid pins its whole dispatch to device ``(sid - 1) % N``, so
+    concurrent packs of different buckets execute on DIFFERENT devices
+    (dispatch is async; only compilation serializes on the host).  The
+    choice is a pure function of the sid, and sids are checkpointed —
+    a resumed pack lands back on the same device.  None on
+    single-device hosts (the engine's default placement).  Placement
+    never changes per-lane math; results stay bit-identical."""
+    import jax
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None
+    return devs[(sid - 1) % len(devs)]
+
+
 @dataclass
 class _Request:
     rid: int
@@ -180,12 +197,14 @@ class SimService:
             sid = self._next_sid
             self._next_sid += 1
             pk = Pack.open(sid, bucket, units, window=self.window,
-                           pack=self.pack)
+                           pack=self.pack, device=pack_device(sid))
             self.compile_s += pk.session.compile_s
             self._active[sid] = pk
             self._log(f"pack {sid}: {len(units)} lanes "
                       f"(+{pk.session.pad_fraction:.0%} ghost) "
                       f"[{bucket.label}]"
+                      + (f" @ {pk.device}" if pk.device is not None
+                         else "")
                       + (f" compiled in {pk.session.compile_s:.1f}s"
                          if pk.session.compile_count else ""))
 
@@ -291,7 +310,8 @@ class SimService:
             units = [unit_index[tuple(k)] for k in row["units"]]
             fresh[row["sid"]] = Pack.open(
                 row["sid"], units[0].bucket, units,
-                window=svc.window, pack=svc.pack)
+                window=svc.window, pack=svc.pack,
+                device=pack_device(row["sid"]))
             svc.compile_s += fresh[row["sid"]].session.compile_s
         if fresh:
             template = {f"s{sid}": pk.export()
@@ -302,7 +322,8 @@ class SimService:
                 snap["cycle"] = int(snap["cycle"])
                 svc._active[sid] = Pack.open(
                     sid, pk.bucket, pk.units, window=svc.window,
-                    pack=svc.pack, restore=snap)
+                    pack=svc.pack, restore=snap,
+                    device=pack_device(sid))
         svc._log(f"resumed @ round {svc._round}: "
                  f"{len(svc._active)} sessions, "
                  f"{svc._sched.pending} pending lanes")

@@ -22,13 +22,16 @@ plus BOTH segment-min passes.  Grid `(3 phases, row chunks)`:
 
 `_cycle_kernel` (ops.cycle_core): the fused cycle step's grant + apply
 decisions in ONE pass over the rows — the packed key
-``itime * R2 + row`` makes (oldest age, smallest row id) a single
+``itime * R2 + prio`` makes (oldest age, smallest priority) a single
 lexicographic min, so one accumulation phase replaces the two-pass
 chain, and the emit phase produces the complete per-channel winner
-table (`won_ch`, winner row id `wprio`) AND the per-row pop mask that
-drive the fused step's apply phase.  Grid `(2 phases, row chunks)`:
+table (`won_ch`, winner priority `wprio`) AND the per-row pop mask
+that drive the fused step's apply phase.  `prio` is an explicit row
+input: the dense fused step feeds the row iota, the occupancy-compacted
+step feeds each active slot's GLOBAL row id.  Grid
+`(2 phases, row chunks)`:
 
-  phase 0   accumulate m[c] = min (itime * R2 + row) over rows with
+  phase 0   accumulate m[c] = min (itime * R2 + prio) over rows with
             `ok` requesting c
   phase 1   emit, after the dense busy/alive channel mask:
             won_ch[c] = m[c] != INF, wprio[c] = m[c] & (R2-1), and
@@ -141,7 +144,7 @@ def grant_pallas(out, itime, valid, ovc, isej, busy, alive,
     return win, won
 
 
-def _cycle_kernel(out_ref, itime_ref, ok_ref, chok_ref,
+def _cycle_kernel(out_ref, itime_ref, ok_ref, prio_ref, chok_ref,
                   win_ref, won_ref, wprio_ref, m_ref,
                   *, chunk, num_seg, r2):
     phase = pl.program_id(0)
@@ -151,10 +154,14 @@ def _cycle_kernel(out_ref, itime_ref, ok_ref, chok_ref,
     ok = ok_ref[0, :] != 0
     seg_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, num_seg), 1)
     onehot = out[:, None] == seg_ids                       # [C, Es]
-    ridx = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
-    # packed lexicographic key (age, row id); garbage itime on !ok rows
-    # may wrap, but the where() keeps only in-range keys < INF32
-    key = jnp.where(ok, itime_ref[0, :] * r2 + ridx, INF32)
+    # the tie-break priority is an explicit input (the compacted step
+    # feeds GLOBAL row ids of its active slots; the dense fused step
+    # feeds the plain row iota) — unique over ok rows, so the packed
+    # key stays a total order per channel
+    prio = prio_ref[0, :]
+    # packed lexicographic key (age, priority); garbage itime on !ok
+    # rows may wrap, but the where() keeps only in-range keys < INF32
+    key = jnp.where(ok, itime_ref[0, :] * r2 + prio, INF32)
 
     @pl.when((phase == 0) & (ci == 0))
     def _init_m():
@@ -180,12 +187,14 @@ def _cycle_kernel(out_ref, itime_ref, ok_ref, chok_ref,
         win_ref[0, :] = (ok & (m_row == key)).astype(jnp.int32)
 
 
-def cycle_core_pallas(out, itime, ok, ch_ok, *, r2, interpret=True):
+def cycle_core_pallas(out, itime, ok, prio, ch_ok, *, r2,
+                      interpret=True):
     """Raw tiled dispatch; padding/reshaping is ops.py's responsibility.
 
     Row inputs are `[nc, chunk]` int32 (padded rows carry ok=0, and
-    `itime * r2 + row` must be < INF32 on ok rows); `ch_ok` is
-    `[1, Es]` int32 with Es a lane-width multiple of E + 1.  Returns
+    `itime * r2 + prio` must be < INF32 on ok rows, with `prio` unique
+    over ok rows); `ch_ok` is `[1, Es]` int32 with Es a lane-width
+    multiple of E + 1.  Returns
     (win `[nc, chunk]`, won_ch `[1, Es]`, wprio `[1, Es]`) int32.
     """
     nc, C = out.shape
@@ -196,7 +205,7 @@ def cycle_core_pallas(out, itime, ok, ch_ok, *, r2, interpret=True):
     win, won, wprio = pl.pallas_call(
         kern,
         grid=(2, nc),
-        in_specs=[row, row, row, chan],
+        in_specs=[row, row, row, row, chan],
         out_specs=[row, chan, chan],
         out_shape=[jax.ShapeDtypeStruct((nc, C), jnp.int32),
                    jax.ShapeDtypeStruct((1, Es), jnp.int32),
@@ -205,5 +214,5 @@ def cycle_core_pallas(out, itime, ok, ch_ok, *, r2, interpret=True):
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
-    )(out, itime, ok, ch_ok)
+    )(out, itime, ok, prio, ch_ok)
     return win, won, wprio

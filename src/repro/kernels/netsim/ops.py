@@ -61,19 +61,23 @@ def grant(out, itime, valid, ovc_count, is_eject, ch_busy, ch_alive,
             won[0, :E].astype(bool))
 
 
-def cycle_core(out, itime, ok, ch_ok, *, r2: int, chunk: int = _CHUNK,
-               interpret: bool | None = None):
+def cycle_core(out, itime, ok, ch_ok, *, r2: int, prio=None,
+               chunk: int = _CHUNK, interpret: bool | None = None):
     """Fused-step arbitration core: one `pallas_call` computing the
     channel winner table and the per-row pop mask from the packed key
-    ``itime * r2 + row``.
+    ``itime * r2 + prio``.
 
     `ok` is the complete per-row eligibility (valid & routable & credit
     & alive — the fused step computes it from its cached routes), and
-    `ch_ok` the dense per-channel mask (not busy & alive).  `r2` must be
-    a power of two > N with ``max(itime) * r2 + r2 - 1 < 2^31 - 1`` (the
+    `ch_ok` the dense per-channel mask (not busy & alive).  `prio` is
+    the per-row tie-break priority, unique over ok rows; when omitted
+    it defaults to the row iota (the dense fused step's tie-break — the
+    occupancy-compacted step passes each active slot's GLOBAL row id so
+    the winner ids match the oracle bit-for-bit).  `r2` must be a power
+    of two > max(prio) with ``max(itime) * r2 + r2 - 1 < 2^31 - 1`` (the
     caller guards this and falls back to the two-pass jnp grant when the
     cycle budget would overflow).  Returns
-    (won_ch [E] bool, wprio [E] int32 winner row id, win [N] bool).
+    (won_ch [E] bool, wprio [E] int32 winner priority, win [N] bool).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -83,6 +87,8 @@ def cycle_core(out, itime, ok, ch_ok, *, r2: int, chunk: int = _CHUNK,
     nc = -(-N // C)
     rpad = nc * C - N
     Es = _round_up(E + 1, _LANE)
+    if prio is None:
+        prio = jnp.arange(N, dtype=jnp.int32)
 
     def rows(x, fill=0):
         x = x.astype(jnp.int32)
@@ -92,7 +98,7 @@ def cycle_core(out, itime, ok, ch_ok, *, r2: int, chunk: int = _CHUNK,
         return x.reshape(nc, C)
 
     win, won, wprio = cycle_core_pallas(
-        rows(out, fill=-1), rows(itime), rows(ok),
+        rows(out, fill=-1), rows(itime), rows(ok), rows(prio),
         jnp.pad(ch_ok.astype(jnp.int32), (0, Es - E)).reshape(1, Es),
         r2=r2, interpret=interpret)
     return (won[0, :E].astype(bool), wprio[0, :E],

@@ -1,0 +1,214 @@
+"""Occupancy-compacted step (`step_impl="compact"`) vs the jnp oracle.
+
+The compact step partitions the live rows into a statically-bounded
+active set of `capacity` rows before routing and arbitration (see
+repro/core/engine/fused.py `make_compact_step`), so per-cycle cost
+tracks occupancy instead of network capacity — but every counter must
+stay BIT-IDENTICAL to the classic phase pipeline: the compaction is a
+stable partition and each active slot's grant priority is its GLOBAL
+row id, so every age tie resolves to the same packet.  Pinned here on
+live engine runs across vc_modes, cold fault sets, and warm
+`FaultSchedule`s, plus the ladder mechanics the sweep layer builds on
+top:
+
+  * capacity ESCALATION: a run whose live-row census overflows its rung
+    is re-dispatched whole at the next ladder rung, and the rerun is
+    still bit-identical to the oracle (`_PendingLanes.finish`);
+  * windowed sessions can NOT escalate mid-run (snapshots already
+    streamed) — `LaneSession.finish` must raise, never truncate;
+  * K-cycle SUPERSTEPS (REPRO_SUPERSTEP): K unrolled cycles per scan
+    iteration are bit-identical for any K dividing the run — including
+    a warm-fault epoch onset landing MID-superstep — and silently fall
+    back to K=1 when K does not divide;
+  * the `grant_impl="pallas"` variant feeds the compacted rows' GLOBAL
+    ids through the `cycle_core` kernel's explicit `prio` input and
+    must also be bit-identical.
+"""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.engine.fused import (capacity_ladder, initial_capacity,
+                                     next_rung)
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.topology import FaultSchedule, FaultSet
+
+NET = T.build_switchless(
+    T.SwitchlessParams(a=1, b=1, m=2, n=6, noc=2, g=3), "compact-par")
+GLOB = np.where(np.asarray(NET.ch_type) == T.GLOBAL)[0]
+WARMUP, MEASURE = 40, 140
+RATES, SEEDS = [0.4, 1.2], (0, 1)
+
+
+def _faults(vc_mode):
+    if vc_mode == "baseline":
+        return FaultSet(dead_ch=frozenset(int(c) for c in GLOB[:2]))
+    return FaultSet(dead_routers=frozenset({5, 11}))
+
+
+def _schedule(vc_mode, onset=60):
+    return FaultSchedule(((0, FaultSet()), (onset, _faults(vc_mode))))
+
+
+def _rows(cfg, faults):
+    sim = Simulator(NET, cfg, TR.uniform(NET), faults=faults)
+    return [(r.delivered_pkts, r.generated_pkts, r.dropped_pkts,
+             r.avg_latency, r.throughput_per_chip, r.stranded_pkts,
+             r.occupancy_peak, tuple(sorted(r.hops_by_type.items())))
+            for r in sim.sweep(RATES, seeds=SEEDS)]
+
+
+def _cfg(impl, **kw):
+    return SimConfig(warmup=WARMUP, measure=MEASURE, step_impl=impl, **kw)
+
+
+CASES = [("baseline", "min", 2), ("baseline", "ugal", 1),
+         ("updown", "val", 2)]
+
+
+@pytest.mark.parametrize("vc_mode,route_mode,vpc", CASES)
+@pytest.mark.parametrize("fkind", ["pristine", "cold", "warm"])
+def test_compact_step_bit_identical(vc_mode, route_mode, vpc, fkind):
+    faults = (None if fkind == "pristine"
+              else _faults(vc_mode) if fkind == "cold"
+              else _schedule(vc_mode))
+    rows = {}
+    for impl in ("jnp", "compact"):
+        rows[impl] = _rows(_cfg(impl, vc_mode=vc_mode,
+                                route_mode=route_mode,
+                                vcs_per_class=vpc), faults)
+    assert rows["compact"] == rows["jnp"]
+
+
+def test_compact_telemetry_and_ladder():
+    """SweepResult carries the compact telemetry: the occupancy peak is
+    the oracle's (the census is capacity-independent), the capacity is
+    the default starting rung, and no escalation fired (the rung has
+    headroom on this net)."""
+    sim = Simulator(NET, _cfg("compact", vcs_per_class=2), TR.uniform(NET))
+    g = sim.sweep_grid(RATES, seeds=SEEDS)
+    ref = Simulator(NET, _cfg("jnp", vcs_per_class=2),
+                    TR.uniform(NET)).sweep_grid(RATES, seeds=SEEDS)
+    N = sim._batched.step.compact_rows
+    assert g.compact_capacity == initial_capacity(N)
+    assert g.compact_capacity in capacity_ladder(N)
+    assert 0 < g.occupancy_peak == ref.occupancy_peak
+    assert g.occupancy_peak <= g.compact_capacity
+    assert g.escalations == 0
+    assert g.superstep == 1
+    # the jnp oracle reports no capacity (nothing to escalate)
+    assert ref.compact_capacity == 0
+    # ladder algebra
+    assert capacity_ladder(N)[-1] == N
+    assert next_rung(N, N + 5) == N
+    assert next_rung(N, 1) == capacity_ladder(N)[0]
+
+
+def test_capacity_escalation_bit_identical():
+    """A capacity pinned below the live-row peak must be DETECTED and
+    escalated — the whole grid re-dispatched at the next ladder rung —
+    and the escalated results still match the oracle bit for bit
+    (per-lane rows here: the async path returns one result per lane,
+    not the seed-averaged `sweep()` form)."""
+    ref_sim = Simulator(NET, _cfg("jnp", vcs_per_class=2),
+                        TR.uniform(NET))
+    ref = [(r.delivered_pkts, r.generated_pkts, r.dropped_pkts,
+            r.avg_latency, r.throughput_per_chip, r.stranded_pkts,
+            r.occupancy_peak, tuple(sorted(r.hops_by_type.items())))
+           for r in ref_sim.sweep_grid(RATES, seeds=SEEDS).flat()]
+    sim = Simulator(NET, _cfg("compact", vcs_per_class=2), TR.uniform(NET))
+    lanes = [(r, s, None) for r in RATES for s in SEEDS]
+    # occupancy peaks near ~90 live rows on this net; 50 overflows
+    run = sim._batched.run_lanes_async(lanes, capacity=50).finish()
+    got = [(r.delivered_pkts, r.generated_pkts, r.dropped_pkts,
+            r.avg_latency, r.throughput_per_chip, r.stranded_pkts,
+            r.occupancy_peak, tuple(sorted(r.hops_by_type.items())))
+           for r in run.results]
+    assert got == ref
+    assert run.escalations == 1
+    assert run.occupancy_peak > 50
+    N = sim._batched.step.compact_rows
+    assert run.compact_capacity == next_rung(N, run.occupancy_peak)
+    # each ladder rung is its own executable: the grid's compile count
+    # stays 1 and the abandoned rung's compile is booked separately
+    assert run.compile_count == 1
+    assert run.escalation_compiles == 1
+    # warm start: the sweep remembers the escalated rung, so the next
+    # dispatch starts there and never re-breaches
+    redo = sim._batched.run_lanes_async(lanes, capacity=50).finish()
+    again = sim._batched.run_lanes_async(lanes).finish()
+    assert again.escalations == 0
+    assert again.compact_capacity == run.compact_capacity
+    assert redo.escalations == 1   # explicit pins still escalate
+
+
+def test_windowed_session_overflow_raises():
+    """`LaneSession.finish` must refuse a capacity breach instead of
+    truncating: windowed runs stream stats mid-flight, so re-dispatching
+    at a larger rung can't happen transparently."""
+    sim = Simulator(NET, _cfg("compact", vcs_per_class=2), TR.uniform(NET))
+    lanes = [(r, s, None) for r in RATES for s in SEEDS]
+    sess = sim._batched.start_lanes(lanes, window=60)
+    while not sess.done():
+        sess.advance()
+    # simulate an undersized pinned rung (the default rung has headroom
+    # on this net, so the breach is injected post-run; the guard only
+    # compares the census against the session's rung)
+    sess.capacity = 50
+    with pytest.raises(RuntimeError, match="REPRO_COMPACT_CAP"):
+        sess.finish()
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_superstep_bit_identical(k, monkeypatch):
+    """K compacted cycles unrolled per scan iteration (K divides the
+    180-cycle run) reproduce the oracle exactly, including a warm-fault
+    epoch onset at cycle 61 — mid-superstep for K in {2, 4}."""
+    ref = _rows(_cfg("jnp", vcs_per_class=2), _schedule("baseline", 61))
+    monkeypatch.setenv("REPRO_SUPERSTEP", str(k))
+    got = _rows(_cfg("compact", vcs_per_class=2),
+                _schedule("baseline", 61))
+    assert got == ref
+    sim = Simulator(NET, _cfg("compact", vcs_per_class=2), TR.uniform(NET))
+    assert sim.sweep_grid(RATES, seeds=SEEDS).superstep == k
+
+
+def test_superstep_non_divisor_falls_back(monkeypatch):
+    """K that does not divide warmup+measure falls back to K=1 (and the
+    result is still exact) — the capacity pass warns about the silent
+    fallback statically (analysis/capacitypass.py)."""
+    from repro.core.engine.sweep import superstep
+
+    ref = _rows(_cfg("jnp", vcs_per_class=2), None)
+    monkeypatch.setenv("REPRO_SUPERSTEP", "7")   # 180 % 7 != 0
+    assert superstep(WARMUP + MEASURE) == 1
+    got = _rows(_cfg("compact", vcs_per_class=2), None)
+    assert got == ref
+    sim = Simulator(NET, _cfg("compact", vcs_per_class=2), TR.uniform(NET))
+    assert sim.sweep_grid(RATES, seeds=SEEDS).superstep == 1
+
+
+@pytest.mark.parametrize("fkind", ["pristine", "cold"])
+def test_compact_pallas_grant_bit_identical(fkind):
+    """grant_impl="pallas" inside the compact step: the kernel's
+    explicit `prio` input carries the compacted rows' GLOBAL ids, and
+    the grants match the jnp compact path exactly."""
+    faults = None if fkind == "pristine" else _faults("baseline")
+    rows = {}
+    for gi in ("jnp", "pallas"):
+        rows[gi] = _rows(_cfg("compact", vc_mode="baseline",
+                              route_mode="min", vcs_per_class=2,
+                              grant_impl=gi), faults)
+    assert rows["pallas"] == rows["jnp"]
+
+
+def test_capacity_bounds_validated():
+    """make_compact_step rejects capacities outside [1, N]."""
+    from repro.core.engine.fused import make_compact_step
+
+    cfg = _cfg("compact", vcs_per_class=2)
+    with pytest.raises(ValueError, match="capacity"):
+        make_compact_step(NET, cfg, TR.uniform(NET), capacity=0)
+    with pytest.raises(ValueError, match="capacity"):
+        make_compact_step(NET, cfg, TR.uniform(NET), capacity=10 ** 9)

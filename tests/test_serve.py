@@ -200,3 +200,79 @@ def test_windows_doc_example_paths_exist():
     rec = windows.done_record(request=1, tenant="t", scenario="s",
                               lanes=2)
     assert json.loads(windows.dumps(rec))["kind"] == "done"
+
+
+# ---------------------------------------------------------------------------
+# multi-device pack placement: concurrent packs round-robin host devices
+# ---------------------------------------------------------------------------
+
+_DEVICE_CHILD = r"""
+import json
+import repro            # applies REPRO_HOST_DEVICES before jax init
+import jax
+from repro.exp import get_scenario
+from repro.exp.serve import SimService
+from repro.exp.serve import service as service_mod
+from repro.exp.serve.packer import Pack
+
+opened = []
+_orig = Pack.open.__func__
+
+
+def _record(cls, sid, bucket, units, **kw):
+    pk = _orig(cls, sid, bucket, units, **kw)
+    opened.append((sid, str(pk.device)))
+    return pk
+
+
+Pack.open = classmethod(_record)
+svc = SimService(window=100)
+svc.submit(get_scenario("smoke"), tenant="alice")
+svc.submit(get_scenario("smoke_faults"), tenant="bob")
+svc.run()
+assert svc.idle
+print(json.dumps(dict(
+    ndev=len(jax.devices()),
+    packs=opened,
+    pd=[str(service_mod.pack_device(s)) for s in (1, 2, 3)])))
+"""
+
+
+def test_two_buckets_land_on_two_devices():
+    """Under REPRO_HOST_DEVICES=2 two concurrently-active buckets are
+    pinned to two DISTINCT devices (sid round-robin), and `pack_device`
+    wraps around — placement is a pure function of the checkpointed sid,
+    so resumed packs land where they left off."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ, REPRO_HOST_DEVICES="2")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in sys.path if p] +
+        [p for p in (env.get("PYTHONPATH") or "").split(os.pathsep) if p])
+    proc = subprocess.run([sys.executable, "-c", _DEVICE_CHILD],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.splitlines()[-1])
+    assert out["ndev"] == 2
+    by_sid = dict(out["packs"])
+    assert len(out["packs"]) >= 2
+    devs = {d for d in by_sid.values()}
+    assert len(devs) == 2, out["packs"]     # both devices carried a pack
+    assert "None" not in devs
+    # deterministic round-robin: sid 1 and 2 differ, sid 3 wraps to 1's
+    assert out["pd"][0] != out["pd"][1]
+    assert out["pd"][2] == out["pd"][0]
+
+
+def test_pack_device_single_device_is_none():
+    """Without forced devices placement opts out (engine default)."""
+    import jax
+
+    from repro.exp.serve import service as service_mod
+    if len(jax.devices()) > 1:
+        pytest.skip("multi-device host: pack_device pins by design")
+    assert service_mod.pack_device(1) is None
+    assert service_mod.pack_device(7) is None
