@@ -53,6 +53,18 @@ def bench(fast: bool = True) -> dict:
             delivered_pkts=[[grid.result(fi, 0, si).delivered_pkts
                              for si in range(len(grid.seeds))]
                             for fi in range(len(fault_labels))],
+            # exact per-seed stranded populations at exit plus the
+            # seed-aggregated view (max + exact mean, the
+            # mean_over_seeds convention)
+            stranded_pkts=[[grid.result(fi, 0, si).stranded_pkts
+                            for si in range(len(grid.seeds))]
+                           for fi in range(len(fault_labels))],
+            stranded_max=[grid.sweep_result(fi).mean_over_seeds()[0]
+                          .stranded_pkts
+                          for fi in range(len(fault_labels))],
+            stranded_mean=[grid.sweep_result(fi).mean_over_seeds()[0]
+                           .stranded_mean
+                           for fi in range(len(fault_labels))],
             compiles=grid.compile_count)
     # the acceptance check: adaptive >= minimal at every NONZERO fraction
     # (at zero both route minimally modulo sensor noise)

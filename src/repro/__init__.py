@@ -29,7 +29,9 @@ knob goes through `env_int` below (or `env_raw` for the analysis
 layer's misconfiguration audits), so the full knob surface is auditable
 in one file — `REPRO_SHARD_MIN_WORK` / `REPRO_CHANNEL_SHARDS` /
 `REPRO_SUPERSTEP` (`core.engine.sweep`), `REPRO_COMPACT_CAP`
-(`core.engine.fused`), `REPRO_RR_MAX_CHANNELS` (`exp.runner`), and
+(`core.engine.fused`), `REPRO_REAP_AGE` (`core.engine.state`: the
+router-death reaper's process-wide park-age default when
+`SimConfig.reap_age` is 0), `REPRO_RR_MAX_CHANNELS` (`exp.runner`), and
 `REPRO_SERVE_WINDOW` / `REPRO_SERVE_PACK` (`exp.serve.service`) document
 their semantics at their call sites.
 """

@@ -18,6 +18,11 @@ establishes, per (topology x routing) cell family:
                  a dead channel (`routing.verify.assert_deadlock_free`).
   SPEC_FAULTS    the fault population itself can't be sampled routably
                  (`topology.validate_faults` rejected the composition).
+  SPEC_REPAIR    info: the schedule contains repair (shrinking) epochs;
+                 every such transition was additionally proven
+                 restart-safe for packets in flight across the table
+                 swap (`verify.assert_transition_safe`) — this is how
+                 `check --spec` certifies a repair schedule statically.
   SPEC_GRANT_OVERFLOW  a `step_impl="fused"` cell whose packed
                  age<<log2(N)|key arbitration key would overflow int32,
                  so the engine takes the two-pass grant instead of the
@@ -60,12 +65,15 @@ DEFAULT_EXHAUSTIVE = 20_000
 
 def _fault_key(f) -> tuple:
     return (f.kind, f.frac, f.num, f.num_clusters, f.radius, f.types,
-            f.seed, f.per_seed, f.onsets)
+            f.seed, f.per_seed, f.onsets, f.repairs)
 
 
 def _prove(net, topo, vc_mode, nonminimal, fault_spec, lane_seed,
            n_pairs, exhaustive_limit) -> tuple:
-    """One memoized deadlock proof; returns (edges, cached, epochs)."""
+    """One memoized deadlock proof; returns (edges, epochs, repairs,
+    cached).  `repairs` counts the schedule's shrinking (repair)
+    transitions, each additionally proven restart-safe for in-flight
+    packets (`assert_schedule_deadlock_free(check_transitions=True)`)."""
     key = (topo.kind, topo.params, vc_mode, nonminimal,
            None if fault_spec is None else _fault_key(fault_spec),
            None if fault_spec is None else lane_seed,
@@ -73,6 +81,7 @@ def _prove(net, topo, vc_mode, nonminimal, fault_spec, lane_seed,
     if key in _PROOF_CACHE:
         return _PROOF_CACHE[key] + (True,)
     rng = np.random.default_rng(0)
+    repairs = 0
     if fault_spec is None:
         edges = assert_deadlock_free(
             net, vc_mode, nonminimal, rng, n_pairs=n_pairs,
@@ -84,13 +93,16 @@ def _prove(net, topo, vc_mode, nonminimal, fault_spec, lane_seed,
             per_epoch = assert_schedule_deadlock_free(
                 net, vc_mode, nonminimal, rng, sampled, n_pairs=n_pairs)
             edges, epochs = sum(per_epoch), len(per_epoch)
+            repairs = sum(
+                1 for i in range(1, sampled.num_epochs)
+                if not sampled.repaired_at(i).is_empty)
         else:
             edges = assert_deadlock_free(
                 net, vc_mode, nonminimal, rng, n_pairs=n_pairs,
                 exhaustive_limit=exhaustive_limit, faults=sampled)
             epochs = 1
-    _PROOF_CACHE[key] = (edges, epochs)
-    return edges, epochs, False
+    _PROOF_CACHE[key] = (edges, epochs, repairs)
+    return edges, epochs, repairs, False
 
 
 def check_spec(spec: ExperimentSpec, origin: str, report, *,
@@ -114,18 +126,19 @@ def check_spec(spec: ExperimentSpec, origin: str, report, *,
                 f"{nv} VC classes x {routing.vcs_per_class} per class")
 
             net = topo.build()
-            proofs, edges, cached = 0, 0, 0
+            proofs, edges, cached, repairs = 0, 0, 0, 0
             try:
-                e, _, hit = _prove(net, topo, routing.vc_mode, nonmin,
-                                   None, lane_seed, n_pairs,
-                                   exhaustive_limit)
+                e, _, _, hit = _prove(net, topo, routing.vc_mode, nonmin,
+                                      None, lane_seed, n_pairs,
+                                      exhaustive_limit)
                 proofs, edges, cached = 1, e, int(hit)
                 for f in faulty:
-                    e, epochs, hit = _prove(
+                    e, epochs, reps, hit = _prove(
                         net, topo, routing.vc_mode, nonmin, f, lane_seed,
                         n_pairs, exhaustive_limit)
                     proofs += epochs
                     edges += e
+                    repairs += reps
                     cached += int(hit)
             except AssertionError as e:
                 report.add(PASS, "SPEC_CDG", "error", where,
@@ -140,6 +153,12 @@ def check_spec(spec: ExperimentSpec, origin: str, report, *,
                 f"{proofs} epoch CDG(s) acyclic ({edges} dependency "
                 f"edges, {cached} proof(s) shared with earlier "
                 f"scenarios)")
+            if repairs:
+                report.add(
+                    PASS, "SPEC_REPAIR", "info", where,
+                    f"{repairs} repair (shrinking) transition(s) proven "
+                    f"restart-safe for in-flight packets on the "
+                    f"recovered subgraph")
 
             if routing.step_impl in ("fused", "compact"):
                 cfg = routing.to_simconfig(spec.axes)

@@ -17,17 +17,26 @@ def make_apply_fn(net: Network, cfg, consts):
     S, Q = cfg.buf_pkts, cfg.srcq_pkts
 
     def apply_moves(state: SimState, req: Requests, win, won_ch,
-                    t) -> SimState:
+                    t, reap=None) -> SimState:
         win_buf = win[:ER * NV].reshape(ER, NV)
         win_src = win[ER * NV:]
+        # reaped rows pop exactly like winners (head advance + count
+        # decrement) but push nowhere and charge no serialization; the
+        # masks are disjoint (a winner's out channel is live, a reap
+        # victim's is -1 or dead).  Reap can hit source rows too — a
+        # source head whose injection channel died is undeliverable —
+        # so both the buffer and the source pops widen.
+        pop_buf = (win_buf if reap is None
+                   else win_buf | reap[:ER * NV].reshape(ER, NV))
+        pop_src = win_src if reap is None else win_src | reap[ER * NV:]
 
         # pops (the trailing eject rows never pop: concat keeps them dense)
         b_head = jnp.concatenate(
-            [(state.b_head[:ER] + win_buf) % S, state.b_head[ER:]])
+            [(state.b_head[:ER] + pop_buf) % S, state.b_head[ER:]])
         b_count = jnp.concatenate(
-            [state.b_count[:ER] - win_buf, state.b_count[ER:]])
-        s_head = (state.s_head + win_src) % Q
-        s_count = state.s_count - win_src
+            [state.b_count[:ER] - pop_buf, state.b_count[ER:]])
+        s_head = (state.s_head + pop_src) % Q
+        s_count = state.s_count - pop_src
 
         # pushes
         is_ej = req.otype == EJECT

@@ -91,7 +91,7 @@ from ..traffic import as_pattern
 from .inject import make_inject_fn, make_misroute_fn
 from .state import (F_CLS, F_DEST, F_ITIME, F_META, F_META2, F_MIS,
                     F_OUT, F_READY, INF32, build_consts, is_scheduled,
-                    resolve_epoch)
+                    resolve_epoch, resolve_reap_age)
 from .stats import live_rows
 
 # winner-record columns (the dense [E, 5] table exchanged across shards):
@@ -320,6 +320,7 @@ def _make_compact(net, cfg, pattern, inject_mask, consts, route_kernel,
         and use_combined
     if use_pallas:
         from ...kernels.netsim.ops import cycle_core
+    reap_age = resolve_reap_age(cfg)   # 0 = reaper off (trace-time)
 
     ch_dst = consts["ch_dst"]
     ch_tbl = consts["ch_tbl"]
@@ -393,6 +394,17 @@ def _make_compact(net, cfg, pattern, inject_mask, consts, route_kernel,
         mis = jnp.where(is_buf, brec[:, F_MIS], srec[:, F_MIS])
         meta2 = jnp.where(is_buf, meta2_b, 0).astype(jnp.int32)
         rowok = valid & (out >= 0)
+        # router-death reaper over the active rows: undeliverable rows
+        # (parked on -1 OR requesting a dead channel — see
+        # stats.undeliverable_mask) are live, so whenever occ <= C they
+        # are ALL in the active set — the reap mask is exact under the
+        # same occ_peak certificate that covers the grant
+        if reap_age:
+            undel = valid & ((out < 0)
+                             | ~fl["ch_alive"][jnp.clip(out, 0, E - 1)])
+            reap = undel & (t - itime >= reap_age)
+        else:
+            undel = reap = None
         prio = aid      # the global row id IS the oracle's tie-break
 
         # grant over the C active rows — same segments, same packed
@@ -449,14 +461,19 @@ def _make_compact(net, cfg, pattern, inject_mask, consts, route_kernel,
                                 == aid)
         else:
             won_slot = win_slot
-        pe_b = jnp.where(won_slot & is_buf, e, E)
+        # reaped rows pop like winners but push nowhere (masks disjoint:
+        # a winner's out channel is live, a reap victim's is -1 or
+        # dead); source rows are reapable too — a source head whose
+        # injection channel died can never be granted
+        pop_slot = won_slot if reap is None else won_slot | reap
+        pe_b = jnp.where(pop_slot & is_buf, e, E)
         pop1 = jnp.zeros((E, NV), jnp.int32).at[(pe_b, v)].add(
             1, mode="drop")
         b_head = (state.b_head + pop1) % S
         vc_oh = wvc[:, None] == vc_iota[None, :]
         b_count = (state.b_count - pop1
                    + (push[:, None] & vc_oh).astype(jnp.int32))
-        ts_m = jnp.where(won_slot & ~is_buf, tt, T)
+        ts_m = jnp.where(pop_slot & ~is_buf, tt, T)
         pop_s = jnp.zeros((T,), jnp.int32).at[ts_m].add(1, mode="drop")
         s_head = (state.s_head + pop_s) % Q
         s_count = state.s_count - pop_s
@@ -470,12 +487,17 @@ def _make_compact(net, cfg, pattern, inject_mask, consts, route_kernel,
         w_ej = won_ch & is_ej_ch
         hops = (won_ch[:, None]
                 & (ch_type[:, None] == type_iota[None, :]))
-        stranded = (valid & (out < 0)).sum().astype(jnp.int32)
+        if reap is None:
+            stranded = (valid & (out < 0)).sum().astype(jnp.int32)
+            reaped = st.reaped
+        else:
+            stranded = (undel & ~reap).sum().astype(jnp.int32)
+            reaped = st.reaped + reap.sum().astype(jnp.int32)
         st = st.replace(
             delivered=st.delivered + w_ej.sum(),
             lat_sum=st.lat_sum + jnp.where(w_ej, t - witime, 0).sum(),
             hops=st.hops + hops.astype(jnp.int32).sum(0),
-            stranded=stranded,
+            stranded=stranded, reaped=reaped,
             occ_peak=jnp.maximum(st.occ_peak, occ))
         return state.replace(
             b_pkt=b_pkt, b_head=b_head, b_count=b_count,
@@ -502,6 +524,7 @@ def _make_unsharded(net, cfg, pattern, inject_mask, consts, route_kernel):
         and use_combined
     if use_pallas:
         from ...kernels.netsim.ops import cycle_core
+    reap_age = resolve_reap_age(cfg)   # 0 = reaper off (trace-time)
 
     ch_dst = consts["ch_dst"]
     ch_tbl = consts["ch_tbl"]
@@ -546,6 +569,15 @@ def _make_unsharded(net, cfg, pattern, inject_mask, consts, route_kernel):
         itime = jnp.concatenate([head[:, F_ITIME], sq[:, F_ITIME]])
         valid = jnp.concatenate([r_valid, state.s_count > 0])
         rowok = valid & (out >= 0)
+        # router-death reaper: undeliverable rows (parked on -1 OR
+        # requesting a dead channel) past the park age — disjoint from
+        # winners, which need a live channel (see stats.reap_mask)
+        if reap_age:
+            undel = valid & ((out < 0)
+                             | ~fl["ch_alive"][jnp.clip(out, 0, E - 1)])
+            reap = undel & (t - itime >= reap_age)
+        else:
+            undel = reap = None
 
         # grant: per-row credit gather, one segment-min, dense channel
         # mask; at most one winner (row priority) per output channel
@@ -612,13 +644,17 @@ def _make_unsharded(net, cfg, pattern, inject_mask, consts, route_kernel):
                                == row_id)
         else:
             won_row = win_row
+        # reaped rows pop like winners but push nowhere (disjoint masks:
+        # a winner's out channel is live, a reap victim's is -1 or
+        # dead); the source tail is reapable too, so pop_s widens
+        pop_row = won_row if reap is None else won_row | reap
         pop1 = jnp.pad(
-            won_row[: ER * NV].reshape(ER, NV).astype(jnp.int32),
+            pop_row[: ER * NV].reshape(ER, NV).astype(jnp.int32),
             ((0, E - ER), (0, 0)))
         b_head = (state.b_head + pop1) % S
         b_count = (state.b_count - pop1
                    + (push[:, None] & vc_oh).astype(jnp.int32))
-        pop_s = won_row[ER * NV:].astype(jnp.int32)
+        pop_s = pop_row[ER * NV:].astype(jnp.int32)
         s_head = (state.s_head + pop_s) % Q
         s_count = state.s_count - pop_s
         ch_busy = jnp.where(won_ch, ch_ser - 1,
@@ -630,12 +666,17 @@ def _make_unsharded(net, cfg, pattern, inject_mask, consts, route_kernel):
         w_ej = won_ch & is_ej_ch
         hops = (won_ch[:, None]
                 & (ch_type[:, None] == type_iota[None, :]))
-        stranded = (valid & (out < 0)).sum().astype(jnp.int32)
+        if reap is None:
+            stranded = (valid & (out < 0)).sum().astype(jnp.int32)
+            reaped = st.reaped
+        else:
+            stranded = (undel & ~reap).sum().astype(jnp.int32)
+            reaped = st.reaped + reap.sum().astype(jnp.int32)
         st = st.replace(
             delivered=st.delivered + w_ej.sum(),
             lat_sum=st.lat_sum + jnp.where(w_ej, t - witime, 0).sum(),
             hops=st.hops + hops.astype(jnp.int32).sum(0),
-            stranded=stranded,
+            stranded=stranded, reaped=reaped,
             occ_peak=jnp.maximum(st.occ_peak, occ))
         return state.replace(
             b_pkt=b_pkt, b_head=b_head, b_count=b_count,
@@ -661,6 +702,7 @@ def _make_sharded(net, cfg, pattern, inject_mask, consts, route_kernel,
     Ek, Tk = Ep // K, Tp // K
     R2 = _pow2(Ep * NV + Tp)                 # global-priority modulus
     use_combined = grant_form(net, cfg, K) == "combined"
+    reap_age = resolve_reap_age(cfg)         # 0 = reaper off (trace-time)
 
     # padded static tables (ghost channels: dead, type -1; ghost
     # terminals: no injection channel, never generate)
@@ -755,6 +797,16 @@ def _make_sharded(net, cfg, pattern, inject_mask, consts, route_kernel,
             [(cid[:, None] * NV + vc_iota[None, :]).reshape(-1),
              Ep * NV + t0 + jnp.arange(Tk, dtype=jnp.int32)])
         rowok = valid & (out >= 0)
+        # router-death reaper over the LOCAL rows (ghost rows are never
+        # valid): undeliverable rows — parked on -1 OR requesting a
+        # channel this epoch's fault set killed (dead eject at a dead
+        # router; dead injection channel under a dead terminal's head)
+        if reap_age:
+            undel = valid & ((out < 0)
+                             | ~alive[jnp.clip(out, 0, Ep - 1)])
+            reap = undel & (t - itime >= reap_age)
+        else:
+            undel = reap = None
 
         # grant: per-row credit gather (replicated tables), local
         # segment-min partials, then the [E'] pmin halo exchange
@@ -823,9 +875,29 @@ def _make_sharded(net, cfg, pattern, inject_mask, consts, route_kernel,
         se_m = jnp.where(won_ch & is_buf, se, Ep)
         pop1 = jnp.zeros((Ep, NV), jnp.int32).at[(se_m, sv)].add(
             1, mode="drop")
+        if reap is not None:
+            # reap pops: only the owning shard sees a row's reap
+            # decision, but head/count state is replicated, so the reap
+            # pop table is exchanged like the winner records (shards
+            # own disjoint channel blocks, so psum is a concatenation)
+            pop1 = pop1 + jax.lax.psum(
+                jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros((Ep, NV), jnp.int32),
+                    reap[:Ek * NV].reshape(Ek, NV).astype(jnp.int32),
+                    c0, axis=0), axis)
         b_head = (state.b_head + pop1) % S
         ts_m = jnp.where(won_ch & ~is_buf, ts, Tp)
         pop_s = jnp.zeros((Tp,), jnp.int32).at[ts_m].add(1, mode="drop")
+        if reap is not None:
+            # source-queue reap pops: like the buffer reap pops above,
+            # the decision is shard-local but s_head/s_count are
+            # replicated, so the pop vector is psum-exchanged (shards
+            # own disjoint terminal blocks — psum is a concatenation)
+            pop_s = pop_s + jax.lax.psum(
+                jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros((Tp,), jnp.int32),
+                    reap[Ek * NV:].astype(jnp.int32), t0, axis=0),
+                axis)
         s_head = (state.s_head + pop_s) % Q
         s_count = state.s_count - pop_s
         b_count = (state.b_count - pop1
@@ -859,13 +931,20 @@ def _make_sharded(net, cfg, pattern, inject_mask, consts, route_kernel,
         w_ej = won_ch & is_ej_ch
         hops = (won_ch[:, None]
                 & (ch_type[:, None] == type_iota[None, :]))
-        stranded = jax.lax.psum(
-            (valid & (out < 0)).sum().astype(jnp.int32), axis)
+        if reap is None:
+            stranded = jax.lax.psum(
+                (valid & (out < 0)).sum().astype(jnp.int32), axis)
+            reaped = st.reaped
+        else:
+            stranded = jax.lax.psum(
+                (undel & ~reap).sum().astype(jnp.int32), axis)
+            reaped = st.reaped + jax.lax.psum(
+                reap.sum().astype(jnp.int32), axis)
         st = st.replace(
             delivered=st.delivered + w_ej.sum(),
             lat_sum=st.lat_sum + jnp.where(w_ej, t - witime, 0).sum(),
             hops=st.hops + hops.astype(jnp.int32).sum(0),
-            stranded=stranded,
+            stranded=stranded, reaped=reaped,
             occ_peak=jnp.maximum(st.occ_peak, occ))
         return state.replace(
             b_pkt=b_pkt, b_head=b_head, b_count=b_count,

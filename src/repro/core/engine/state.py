@@ -19,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ... import env_int
 from ..topology import (NUM_CH_TYPES, FaultSchedule, FaultSet, Network,
                         glob_pair_alive, wg_channel_alive_frac)
 from ..routing import make_route_kernel, num_vcs, route_tables
@@ -52,6 +53,26 @@ NUM_FUSED_FIELDS = 8
 CACHED_ROUTE_IMPLS = ("fused", "compact")
 
 
+def resolve_reap_age(cfg) -> int:
+    """Effective router-death reaper park age for this run (cycles).
+
+    `cfg.reap_age` wins when nonzero; otherwise the process-wide
+    REPRO_REAP_AGE default applies.  0 disables the reaper entirely —
+    the branch is TRACE-TIME, so a disabled reaper compiles the exact
+    step the pre-reaper engine compiled (no extra ops, bit-identical).
+
+    Age is measured as ``t - itime`` (cycles since generation), which
+    upper-bounds the time a packet has been PARKED on the -1
+    non-channel (a packet cannot strand before it exists): no packet
+    ever stays parked longer than `reap_age` cycles, though a packet
+    that traveled before stranding is reaped correspondingly earlier.
+    Using generation age avoids a per-slot park-time state array and
+    keeps the reap decision a pure function of the request row.
+    """
+    age = int(getattr(cfg, "reap_age", 0))
+    return age if age > 0 else env_int("REPRO_REAP_AGE", 0)
+
+
 @jax.tree_util.register_dataclass
 @dataclass
 class SimStats:
@@ -62,6 +83,16 @@ class SimStats:
     -1 non-channel (packets a warm fault left with no route, see the
     updown kernel).  Its final value is the stranded population at exit
     — previously only inferable as "in flight when the run ended".
+
+    `reaped` is the router-death reaper's cumulative drop counter
+    (`resolve_reap_age`): parked packets whose age reached the park age
+    are removed from their buffers and tallied here, DISJOINT from
+    `dropped` (source-queue overflow), so exact conservation is
+    ``generated == delivered + dropped + reaped + in-flight`` at every
+    cycle — including across repair-epoch boundaries, where a table
+    swap can unstrand a parked packet before the reaper reaches it.
+    With the reaper on, `stranded` gauges the POST-reap parked
+    population of the cycle.
 
     `occ_peak` is a high-water mark, not a per-measure counter: the
     maximum number of LIVE request rows (non-empty (channel, vc)
@@ -80,6 +111,7 @@ class SimStats:
     generated: jax.Array      # [] packets generated (incl. dropped)
     dropped: jax.Array        # [] source-queue overflow
     stranded: jax.Array       # [] gauge: requests parked on the -1 channel
+    reaped: jax.Array         # [] packets the reaper dropped (age-based)
     occ_peak: jax.Array       # [] high-water mark of live request rows
     hops: jax.Array           # [NUM_CH_TYPES] channel traversals by type
 
@@ -90,7 +122,7 @@ class SimStats:
     def zeros(cls, batch: tuple[int, ...] = ()) -> "SimStats":
         z = lambda *s: jnp.zeros(batch + s, dtype=jnp.int32)
         return cls(delivered=z(), lat_sum=jnp.zeros(batch, jnp.float32),
-                   generated=z(), dropped=z(), stranded=z(),
+                   generated=z(), dropped=z(), stranded=z(), reaped=z(),
                    occ_peak=z(), hops=z(NUM_CH_TYPES))
 
 

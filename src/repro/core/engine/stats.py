@@ -11,8 +11,46 @@ from .arbitrate import Requests
 from .state import SimStats
 
 
-def accumulate(stats: SimStats, req: Requests, win, consts, t) -> SimStats:
-    """Fold this cycle's granted movements into the accumulators."""
+def undeliverable_mask(req: Requests, ch_alive):
+    """Head-of-line rows that can NEVER be granted in the current fault
+    epoch: parked on the -1 non-channel (routing found no live path), or
+    requesting a channel the epoch's fault set killed.  The second case
+    covers the two zombie classes the ``out < 0`` test misses — a packet
+    buffered AT its dead destination router requests that router's
+    (dead) eject channel, and a source head whose terminal's router died
+    requests its (dead) injection channel.  These rows are the reaper's
+    candidate population and, with the reaper on, the `stranded` gauge's
+    population; a later repair epoch revives them (the mask is
+    re-evaluated every cycle against the epoch's ``ch_alive``)."""
+    dead_out = ~ch_alive[jnp.clip(req.out, 0, ch_alive.shape[0] - 1)]
+    return req.valid & ((req.out < 0) | dead_out)
+
+
+def reap_mask(req: Requests, t, reap_age: int, ch_alive):
+    """The rows the router-death reaper drops this cycle: undeliverable
+    head-of-line requests whose generation age reached the park age
+    (`state.resolve_reap_age` for the age semantics).  Disjoint from the
+    grant mask by construction — a winner needs a LIVE ``out >= 0``
+    channel (the grant is masked by ``ch_alive``), a reap victim has
+    none — so reap pops compose with winner pops without collisions, on
+    buffer rows and source rows alike."""
+    return undeliverable_mask(req, ch_alive) & ((t - req.itime) >= reap_age)
+
+
+def accumulate(stats: SimStats, req: Requests, win, consts, t,
+               reap=None, ch_alive=None) -> SimStats:
+    """Fold this cycle's granted movements into the accumulators.
+
+    `reap` (the reaper's drop mask, or None when the reaper is off —
+    a trace-time switch) moves its rows out of the `stranded` gauge
+    and into the cumulative `reaped` counter, keeping
+    ``generated == delivered + dropped + reaped + in-flight`` exact.
+    With the reaper on, `ch_alive` must be the epoch's channel liveness
+    so the gauge counts the full undeliverable population (including
+    dead-out rows) — otherwise reaped dead-out rows would read as a
+    negative gauge contribution.  With the reaper off the gauge keeps
+    its original parked-only (``out < 0``) definition, preserving
+    bit-identity with the pre-reaper step."""
     w_ej = win & (req.otype == EJECT)
     delivered = stats.delivered + w_ej.sum()
     lat_sum = stats.lat_sum + jnp.where(w_ej, (t - req.itime), 0).sum()
@@ -22,10 +60,18 @@ def accumulate(stats: SimStats, req: Requests, win, consts, t) -> SimStats:
     hops = stats.hops + onehot.astype(jnp.int32).sum(0)
     # gauge, not a counter: head-of-line requests parked on the -1
     # non-channel THIS cycle (warm-fault strandings; arbitration never
-    # grants them, so the last cycle's value is the population at exit)
-    stranded = (req.valid & (req.out < 0)).sum().astype(jnp.int32)
+    # grants them, so the last cycle's value is the population at exit).
+    # With the reaper on, the gauge counts the POST-reap population.
+    if reap is None:
+        parked = req.valid & (req.out < 0)
+        stranded = parked.sum().astype(jnp.int32)
+        return stats.replace(delivered=delivered, lat_sum=lat_sum,
+                             hops=hops, stranded=stranded)
+    parked = undeliverable_mask(req, ch_alive)
+    stranded = (parked & ~reap).sum().astype(jnp.int32)
+    reaped = stats.reaped + reap.sum().astype(jnp.int32)
     return stats.replace(delivered=delivered, lat_sum=lat_sum, hops=hops,
-                         stranded=stranded)
+                         stranded=stranded, reaped=reaped)
 
 
 def live_rows(state) -> jax.Array:
@@ -77,4 +123,6 @@ def finalize(stats: SimStats, cfg, offered_per_chip: float, chips: float):
         generated_pkts=int(st.generated), dropped_pkts=int(st.dropped),
         hops_by_type=hops, avg_hops_by_type=avg_hops,
         stranded_pkts=int(st.stranded),
+        stranded_mean=float(st.stranded),
+        reaped_pkts=int(st.reaped),
         occupancy_peak=int(st.occ_peak))

@@ -23,8 +23,8 @@ from ..traffic import as_pattern
 from .apply import make_apply_fn
 from .arbitrate import make_arbitrate_fn
 from .inject import make_inject_fn
-from .state import build_consts, resolve_epoch
-from .stats import accumulate, track_occ, zero_stats
+from .state import build_consts, resolve_epoch, resolve_reap_age
+from .stats import accumulate, reap_mask, track_occ, zero_stats
 
 # the valid `cfg.step_impl` values — the single source of truth
 # (SimConfig and exp.RoutingSpec validate against this): "jnp" is the
@@ -66,6 +66,8 @@ def make_step(net: Network, cfg, pattern, inject_mask=None):
     inject = make_inject_fn(net, cfg, consts, pattern, inject_mask)
     arbitrate = make_arbitrate_fn(net, cfg, consts, route_kernel)
     apply_moves = make_apply_fn(net, cfg, consts)
+    # router-death reaper (trace-time: 0 compiles the pre-reaper step)
+    reap_age = resolve_reap_age(cfg)
 
     def step(state, t_key_rate_fl):
         t, key, rate_pkt, fl = t_key_rate_fl
@@ -73,8 +75,12 @@ def make_step(net: Network, cfg, pattern, inject_mask=None):
         state = inject(state, t, key, rate_pkt, fl)
         stats = track_occ(state.stats, state)
         req, win, won_ch = arbitrate(state, t, fl)
-        stats = accumulate(stats, req, win, consts, t)
-        state = apply_moves(state, req, win, won_ch, t)
+        alive = fl["ch_alive"]
+        reap = (reap_mask(req, t, reap_age, alive)
+                if reap_age else None)
+        stats = accumulate(stats, req, win, consts, t, reap=reap,
+                           ch_alive=alive if reap_age else None)
+        state = apply_moves(state, req, win, won_ch, t, reap=reap)
         return state.replace(stats=stats), None
 
     return step, consts

@@ -494,7 +494,11 @@ class SweepResult:
 
         Rates/latencies are means over the seed lanes; packet counters are
         floor-averaged (NOT summed) so they stay comparable to a single
-        `Simulator.run`."""
+        `Simulator.run`.  Reliability gauges are different: `stranded_pkts`
+        reports the exact per-lane MAX (a floor-averaged mean hid single
+        stranded wafers — 1 stranded packet across 8 seeds floored to 0),
+        with the exact mean in the float `stranded_mean`; `occupancy_peak`
+        is likewise the max."""
         from ..simulator import SimResult
         out = []
         for row in self.results:
@@ -512,7 +516,10 @@ class SweepResult:
                 generated_pkts=sum(r.generated_pkts for r in row) // n,
                 dropped_pkts=sum(r.dropped_pkts for r in row) // n,
                 hops_by_type=hops, avg_hops_by_type=avg_hops,
-                stranded_pkts=sum(r.stranded_pkts for r in row) // n,
+                stranded_pkts=max(r.stranded_pkts for r in row),
+                stranded_mean=float(
+                    np.mean([r.stranded_pkts for r in row])),
+                reaped_pkts=sum(r.reaped_pkts for r in row) // n,
                 occupancy_peak=max(r.occupancy_peak for r in row)))
         return out
 

@@ -79,6 +79,12 @@ def stack_epoch_tables(net: Network, vc_mode: str,
     index (`epoch_start`-searched from the cycle number) selects the
     active epoch's slice inside the jitted step — the kernels themselves
     stay epoch-oblivious.
+
+    Each epoch builds from its own FULL fault state, so the stacking is
+    direction-agnostic: a repair epoch (fault set SHRINKS — links or
+    routers coming back) simply rebuilds its tables on the larger
+    recovered subgraph, and every table shape is fault-independent, so
+    grow and shrink epochs stack into the same dense `[P, ...]` form.
     """
     return stack_epoch_dicts(
         [route_tables(net, vc_mode, f) for _, f in schedule.epochs],

@@ -13,12 +13,20 @@ import jax.numpy as jnp
 
 from ..topology import EJECT, FaultSchedule, FaultSet, Network
 from .pipeline import make_route_fn
+from .vcs import PHASE_BIT
 
 
 def trace_paths(net: Network, route_fn, src_terms: np.ndarray,
                 dst_terms: np.ndarray, mis_wgs: np.ndarray,
-                max_hops: int | None = None):
+                max_hops: int | None = None,
+                start_nodes: np.ndarray | None = None,
+                meta0: np.ndarray | None = None):
     """Walk packets hop-by-hop with no contention.
+
+    `start_nodes`/`meta0` resume packets mid-flight: the walk starts at
+    an arbitrary router with an arbitrary routing-meta bitfield instead
+    of fresh (meta 0) at `src_terms`' routers — the epoch-transition
+    proofs use this to model packets in flight across a table swap.
 
     Returns (channels [B, H], vcs [B, H], lengths [B]) with -1 padding.
     """
@@ -34,11 +42,13 @@ def trace_paths(net: Network, route_fn, src_terms: np.ndarray,
 
     step = jax.jit(lambda cur, dst, mis, meta: route_fn(cur, dst, mis, meta))
 
-    cur = term_node[src_terms].copy()
-    meta = np.zeros(B, dtype=np.int32)
+    cur = (term_node[src_terms].copy() if start_nodes is None
+           else np.asarray(start_nodes, dtype=np.int64).copy())
+    meta = (np.zeros(B, dtype=np.int32) if meta0 is None
+            else np.asarray(meta0, dtype=np.int32).copy())
     mis = mis_wgs.astype(np.int32).copy()
     # misroute is pointless/undefined if src and dst share the W-group
-    same = node_wg_tbl[term_node[src_terms]] == node_wg_tbl[term_node[dst_terms]]
+    same = node_wg_tbl[cur] == node_wg_tbl[term_node[dst_terms]]
     mis = np.where(same, -1, mis)
     done = np.zeros(B, dtype=bool)
     chans = np.full((B, max_hops), -1, dtype=np.int64)
@@ -146,16 +156,104 @@ def assert_deadlock_free(net: Network, vc_mode: str, nonminimal: bool,
     return cdg.number_of_edges()
 
 
+def assert_transition_safe(net: Network, vc_mode: str, nonminimal: bool,
+                           rng: np.random.Generator,
+                           prev_faults: FaultSet, next_faults: FaultSet,
+                           n_pairs: int = 2000) -> int:
+    """Prove one epoch transition safe for packets already in flight.
+
+    A packet crossing an epoch boundary keeps its routing meta (the
+    up*/down* phase bit, VC-class counters) but resumes on the NEW
+    epoch's tables.  Per-epoch acyclicity only covers fresh injections
+    (meta 0); this check additionally traces RESUMED packets — parked at
+    an arbitrary router shared by both epochs, down-phase bit set, one
+    global hop banked — and asserts (a) every resume terminates (the
+    down-only walk strictly descends the new epoch's rank, and a missing
+    down continuation restarts on the full up*/down* path, which is
+    acyclic by construction on any connected subgraph), (b) no resume
+    crosses a channel dead in the next epoch, and (c) the CDG over fresh
+    AND resumed flows together is acyclic.  Repair (shrinking)
+    transitions are the interesting case — the rank order is recomputed
+    on the recovered subgraph, and formerly stranded packets come back to
+    life mid-walk — but the proof holds for growth transitions too and is
+    run for every adjacent epoch pair.  Returns the combined CDG edge
+    count.
+    """
+    import networkx as nx
+    route_fn = make_route_fn(
+        net, vc_mode, None if next_faults.is_empty else next_faults)
+    nodes_both = np.flatnonzero(prev_faults.node_alive(net)
+                                & next_faults.node_alive(net))
+    terms_next = np.flatnonzero(next_faults.term_alive(net))
+    if len(nodes_both) == 0 or len(terms_next) == 0:
+        return 0
+    # fresh flows of the next epoch (meta 0, injected at alive terminals)
+    s = terms_next[rng.integers(0, len(terms_next), size=n_pairs)]
+    d = terms_next[rng.integers(0, len(terms_next), size=n_pairs)]
+    keep = s != d
+    s, d = s[keep], d[keep]
+    mis = np.full(len(s), -1, dtype=np.int64)
+    chans_f, vcs_f, _ = trace_paths(net, route_fn, s, d, mis)
+    # resumed flows: parked mid-walk at a router both epochs kept, with
+    # the down-phase bit set and one global + one external hop banked —
+    # the canonical "descending toward the destination when the tables
+    # swapped underneath it" state (GLOBAL hops reset the phase, so a
+    # carried phase bit implies the packet is past its last global hop)
+    u = nodes_both[rng.integers(0, len(nodes_both), size=n_pairs)]
+    dr = terms_next[rng.integers(0, len(terms_next), size=n_pairs)]
+    keep = net.term_node[dr] != u
+    if vc_mode == "updown_merged":
+        # only REACHABLE resumed states: with the banked global hop the
+        # merged scheme has already spent its one VC increment, and a
+        # g_count >= 1 packet outside its destination W-group can only
+        # exist in a W-group at or below the destination's (misroutes
+        # are restricted to strictly-below W-groups; the direct global
+        # hop lands in the destination W-group).  Sampling states above
+        # the destination would manufacture VC1 cross-W-group cycles no
+        # engine packet can produce.
+        wg_tbl = net.tables.get("node_wg", net.tables.get("node_grp"))
+        keep &= wg_tbl[u] <= wg_tbl[net.term_node[dr]]
+    u, dr = u[keep], dr[keep]
+    meta0 = np.full(len(u), PHASE_BIT | (1 << 3) | 1, dtype=np.int32)
+    chans_r, vcs_r, _ = trace_paths(
+        net, route_fn, dr, dr, np.full(len(u), -1, dtype=np.int64),
+        start_nodes=u, meta0=meta0)
+    alive = next_faults.ch_alive(net)
+    used = chans_r[chans_r >= 0]
+    if not alive[used].all():
+        bad = np.unique(used[~alive[used]])
+        raise AssertionError(
+            f"resumed packets crossed dead channels {bad[:8]} after the "
+            f"epoch swap ({net.name}, vc_mode={vc_mode})")
+    H = max(chans_f.shape[1], chans_r.shape[1])
+    pad = lambda a: np.pad(a, ((0, 0), (0, H - a.shape[1])),
+                           constant_values=-1)
+    cdg = build_cdg(np.concatenate([pad(chans_f), pad(chans_r)]),
+                    np.concatenate([pad(vcs_f), pad(vcs_r)]))
+    if not nx.is_directed_acyclic_graph(cdg):
+        cyc = nx.find_cycle(cdg)
+        raise AssertionError(
+            f"CDG cycle across epoch transition for {net.name} "
+            f"vc_mode={vc_mode}: {cyc[:12]}")
+    return cdg.number_of_edges()
+
+
 def assert_schedule_deadlock_free(net: Network, vc_mode: str,
                                   nonminimal: bool,
                                   rng: np.random.Generator,
                                   schedule: FaultSchedule,
-                                  n_pairs: int = 4000) -> list:
+                                  n_pairs: int = 4000,
+                                  check_transitions: bool = True) -> list:
     """`assert_deadlock_free` re-proven for EVERY epoch of a warm-fault
     schedule: each epoch's surviving network must be deadlock-free and
     fault-avoiding on its own.  (Packets in flight across an epoch
     boundary are re-routed on the new epoch's tables, so acyclicity per
     epoch is the invariant the engine's drain semantics rely on.)
+
+    With `check_transitions` (the default) every adjacent epoch pair is
+    additionally proven safe for packets IN FLIGHT across the swap
+    (`assert_transition_safe`) — mandatory for repair schedules, where a
+    resumed down-phase walk runs against a recomputed rank order.
 
     Returns the per-epoch CDG edge counts.
     """
@@ -164,4 +262,12 @@ def assert_schedule_deadlock_free(net: Network, vc_mode: str,
         edges.append(assert_deadlock_free(
             net, vc_mode, nonminimal, rng, n_pairs=n_pairs,
             faults=None if faults.is_empty else faults))
+    if check_transitions:
+        for (_, prev), (_, nxt) in zip(schedule.epochs,
+                                       schedule.epochs[1:]):
+            if prev == nxt:
+                continue    # static schedule: nothing swaps
+            assert_transition_safe(net, vc_mode, nonminimal, rng,
+                                   prev, nxt,
+                                   n_pairs=max(200, n_pairs // 4))
     return edges

@@ -75,6 +75,15 @@ class SimConfig:
     # set before arbitration — bit-identical, occupancy-proportional;
     # see `engine.fused.make_compact_step` and REPRO_COMPACT_CAP)
     step_impl: str = "jnp"
+    # router-death reaper park age (cycles): packets parked on the -1
+    # non-channel (destination dead / unroutable) are dropped once their
+    # generation age reaches this, tallied in `SimStats.reaped` /
+    # `SimResult.reaped_pkts` — disjoint from `dropped`, so
+    # ``generated == delivered + dropped + reaped + in-flight`` stays
+    # exact.  0 disables the reaper (the step compiles no reap logic);
+    # the REPRO_REAP_AGE env knob supplies a process-wide default when
+    # the config leaves it off.  See `engine.state.resolve_reap_age`.
+    reap_age: int = 0
 
     def __post_init__(self):
         if self.grant_impl not in GRANT_IMPLS:
@@ -85,6 +94,8 @@ class SimConfig:
             raise ValueError(
                 f"unknown step_impl {self.step_impl!r}; "
                 f"valid: {STEP_IMPLS}")
+        if self.reap_age < 0:
+            raise ValueError(f"reap_age must be >= 0, got {self.reap_age}")
 
     @property
     def nonminimal(self) -> bool:
@@ -102,7 +113,14 @@ class SimResult:
     hops_by_type: dict
     avg_hops_by_type: dict = field(default_factory=dict)
     stranded_pkts: int = 0         # parked on the -1 non-channel at exit
-                                   # (warm faults left them unroutable)
+                                   # (warm faults left them unroutable);
+                                   # seed-averaged rows report the exact
+                                   # per-lane MAX (see mean_over_seeds)
+    stranded_mean: float = 0.0     # exact mean of stranded_pkts over the
+                                   # seed lanes (== stranded_pkts for a
+                                   # single lane)
+    reaped_pkts: int = 0           # dropped by the router-death reaper
+                                   # (age-based; disjoint from dropped)
     occupancy_peak: int = 0        # high-water mark of live request rows
                                    # (whole run incl. warmup; the compact
                                    # step's capacity certificate)

@@ -161,7 +161,14 @@ class FaultSchedule:
     """Time-varying fault state: an ordered list of `(cycle, FaultSet)`
     epochs.  Epoch i's fault set is the FULL fault state in effect from
     `epochs[i][0]` until the next epoch's onset cycle (not a delta), so
-    warm faults are monotone-growing sets whose union history is explicit.
+    the lifecycle history is explicit: an epoch whose population GROWS
+    is wear-out (links dying mid-run), one whose population SHRINKS is a
+    repair (links/routers coming back — wafer rework, lane re-bonding, a
+    rebooted router).  Both directions rebuild the per-epoch routing
+    tables on that epoch's surviving subgraph (`stack_epoch_tables`), and
+    both are certified per epoch by `validate`/the CDG spec pass; repair
+    transitions additionally get an up*/down* phase-restart safety proof
+    (`routing.verify.assert_schedule_deadlock_free`).
 
     The first epoch must start at cycle 0 (a pristine network is the
     single epoch `(0, FaultSet())`; a cold fault set is `cold(faults)`).
@@ -214,6 +221,30 @@ class FaultSchedule:
     @property
     def is_empty(self) -> bool:
         return all(f.is_empty for _, f in self.epochs)
+
+    @property
+    def has_repair(self) -> bool:
+        """True when some epoch transition removes a fault (a dead channel
+        or router comes back).  A transition may grow and shrink at once
+        (one link repaired while another dies); any removal counts."""
+        for (_, a), (_, b) in zip(self.epochs, self.epochs[1:]):
+            if not (set(a.dead_ch) <= set(b.dead_ch)
+                    and set(a.dead_routers) <= set(b.dead_routers)):
+                return True
+        return False
+
+    @property
+    def is_monotone(self) -> bool:
+        """True when the fault population only ever accumulates (classic
+        wear-out — every epoch's set contains its predecessor's)."""
+        return not self.has_repair
+
+    def repaired_at(self, i: int) -> FaultSet:
+        """The faults epoch i REMOVED relative to epoch i-1 (the repair
+        delta; empty for growth-only transitions).  i must be >= 1."""
+        a, b = self.epochs[i - 1][1], self.epochs[i][1]
+        return FaultSet(tuple(set(a.dead_ch) - set(b.dead_ch)),
+                        tuple(set(a.dead_routers) - set(b.dead_routers)))
 
     def epoch_at(self, cycle: int) -> int:
         """Index of the epoch in effect at `cycle` (host-side mirror of

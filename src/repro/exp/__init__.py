@@ -12,17 +12,19 @@ per grid.
 
 CLI: ``python -m repro.exp.run --scenario smoke``.
 """
-from .spec import (ExperimentSpec, FaultSpec, RoutingSpec, SweepAxes,
-                   TopologySpec, TrafficSpec)
+from .spec import (ExperimentSpec, FaultSpec, ReaperSpec, RoutingSpec,
+                   SweepAxes, TopologySpec, TrafficSpec)
 from .registry import (get_scenario, list_scenarios, register_scenario)
 from .runner import (Cell, ExperimentResult, GridResult, cells,
                      clear_caches, run_experiment)
 from .provenance import provenance, spec_hash
 from .roofline import RooflineSpec
+from .fleet import FleetSpec, FleetResult, fleet_inbox, run_fleet
 
 __all__ = [
-    "ExperimentSpec", "FaultSpec", "RoutingSpec", "SweepAxes",
-    "TopologySpec", "TrafficSpec", "RooflineSpec",
+    "ExperimentSpec", "FaultSpec", "ReaperSpec", "RoutingSpec",
+    "SweepAxes", "TopologySpec", "TrafficSpec", "RooflineSpec",
+    "FleetSpec", "FleetResult", "fleet_inbox", "run_fleet",
     "get_scenario", "list_scenarios", "register_scenario",
     "Cell", "ExperimentResult", "GridResult", "cells", "clear_caches",
     "run_experiment", "provenance", "spec_hash",

@@ -14,9 +14,12 @@ import os
 import subprocess
 
 
-def git_revision(repo_dir: str | None = None) -> str:
-    """Current git commit (+ '-dirty' when the tree has local edits);
-    'unknown' outside a git checkout."""
+def git_revision(repo_dir: str | None = None) -> tuple:
+    """`(rev, dirty)`: the current git commit and whether the tree has
+    local edits.  The dirty flag is a separate boolean — not a '-dirty'
+    suffix — so `git_rev` is always a parseable 40-hex revision tools
+    can feed straight back to git.  `('unknown', False)` outside a git
+    checkout."""
     if repo_dir is None:
         repo_dir = os.path.dirname(os.path.dirname(os.path.dirname(
             os.path.dirname(os.path.abspath(__file__)))))
@@ -27,9 +30,9 @@ def git_revision(repo_dir: str | None = None) -> str:
         dirty = subprocess.run(
             ["git", "status", "--porcelain"], cwd=repo_dir, check=True,
             capture_output=True, text=True, timeout=10).stdout.strip()
-        return rev + ("-dirty" if dirty else "")
+        return rev, bool(dirty)
     except Exception:
-        return "unknown"
+        return "unknown", False
 
 
 def spec_hash(spec) -> str:
@@ -42,8 +45,10 @@ def spec_hash(spec) -> str:
 def provenance(spec=None) -> dict:
     """The provenance block benchmarks embed in their BENCH_*.json."""
     import jax
+    rev, dirty = git_revision()
     out = dict(
-        git_rev=git_revision(),
+        git_rev=rev,
+        dirty=dirty,
         jax_version=jax.__version__,
         backend=jax.default_backend(),
         platform=jax.devices()[0].platform,

@@ -204,6 +204,12 @@ class ExperimentResult:
                         delivered_pkts=res.delivered_pkts,
                         generated_pkts=res.generated_pkts,
                         dropped_pkts=res.dropped_pkts,
+                        # exact per-lane max + exact mean (see
+                        # SweepResult.mean_over_seeds) and the reaper's
+                        # cumulative kill count
+                        stranded_pkts=res.stranded_pkts,
+                        stranded_mean=res.stranded_mean,
+                        reaped_pkts=res.reaped_pkts,
                         avg_hops_by_type=res.avg_hops_by_type,
                         compile_count=g.compile_count,
                         placement=g.placement,

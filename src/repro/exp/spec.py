@@ -220,6 +220,36 @@ class TrafficSpec:
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class ReaperSpec:
+    """Age-based router-death reaper policy (docs/faults.md).
+
+    A packet whose destination died mid-run parks on the stranded gauge
+    and holds its buffer slot forever; the reaper DROPS such a parked
+    packet once its age reaches `park_age` cycles (counted to the
+    `reaped` counter, so conservation stays exact:
+    generated == delivered + dropped + reaped + in-flight).  `park_age`
+    0 (the default) disables the reaper — stranding keeps its historical
+    park-forever semantics and the step compiles no reap logic.  The
+    env knob `REPRO_REAP_AGE` supplies a process-wide default when the
+    config leaves the reaper off (`repro.env_int`)."""
+
+    park_age: int = 0
+
+    def __post_init__(self):
+        if self.park_age < 0:
+            raise ValueError(
+                f"park_age must be >= 0 (0 disables the reaper), got "
+                f"{self.park_age}")
+
+    def to_dict(self) -> dict:
+        return dict(park_age=self.park_age)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ReaperSpec":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class RoutingSpec:
     """Routing algorithm + VC scheme + router microarchitecture knobs.
 
@@ -243,8 +273,16 @@ class RoutingSpec:
     # (route-once-per-hop fused step, the perf path; supports channel
     # sharding via REPRO_CHANNEL_SHARDS)
     step_impl: str = "jnp"
+    # router-death reaper policy (park-forever off by default)
+    reaper: ReaperSpec = ReaperSpec()
 
     def __post_init__(self):
+        if isinstance(self.reaper, dict):
+            object.__setattr__(self, "reaper",
+                               ReaperSpec.from_dict(self.reaper))
+        if not isinstance(self.reaper, ReaperSpec):
+            raise ValueError(
+                f"reaper must be a ReaperSpec, got {self.reaper!r}")
         if self.grant_impl not in GRANT_IMPLS:
             raise ValueError(
                 f"unknown grant_impl {self.grant_impl!r}; "
@@ -285,13 +323,17 @@ class RoutingSpec:
             warmup=axes.warmup, measure=axes.measure,
             vc_mode=self.vc_mode, route_mode=self.route_mode,
             ugal_threshold=self.ugal_threshold, seed=axes.seeds[0],
-            grant_impl=self.grant_impl, step_impl=self.step_impl)
+            grant_impl=self.grant_impl, step_impl=self.step_impl,
+            reap_age=self.reaper.park_age)
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        return dataclasses.asdict(self)   # nests reaper as a plain dict
 
     @classmethod
     def from_dict(cls, d: dict) -> "RoutingSpec":
+        d = dict(d)
+        if "reaper" in d:
+            d["reaper"] = ReaperSpec.from_dict(d["reaper"])
         return cls(**d)
 
 
@@ -317,6 +359,13 @@ class FaultSpec:
               then a monotone-growing fault set reaching the full
               population (`frac` / `num` / `num_clusters`) at `ck`, each
               epoch validated routable on top of the previous one.
+    repairs   the REPAIR (shrinking) extension: strictly increasing cycle
+              numbers, all past the last onset, at which the population
+              shrinks again.  Repair j reverts the j-th most recent
+              growth increment (LIFO — last broken, first fixed), so
+              every repair epoch's fault set is one of the already-
+              validated wear-out states; `len(repairs)` up to
+              `len(onsets)` (equal means the wafer fully recovers).
     """
 
     kind: str = "none"
@@ -328,6 +377,7 @@ class FaultSpec:
     seed: int = 0
     per_seed: bool = True
     onsets: tuple = ()
+    repairs: tuple = ()
 
     def __post_init__(self):
         object.__setattr__(self, "types", tuple(self.types))
@@ -348,6 +398,8 @@ class FaultSpec:
             raise ValueError(
                 f"unknown link types {sorted(bad)}; valid: "
                 f"{sorted(LINK_TYPES)}")
+        object.__setattr__(self, "repairs",
+                           tuple(int(c) for c in self.repairs))
         if self.onsets:
             if self.kind == "none":
                 raise ValueError("onsets need a fault kind to schedule "
@@ -360,6 +412,24 @@ class FaultSpec:
                 raise ValueError(
                     f"onset cycles must be strictly increasing: "
                     f"{self.onsets}")
+        if self.repairs:
+            if not self.onsets:
+                raise ValueError(
+                    "repairs revert warm growth increments and need "
+                    "onsets to revert (a cold population has no "
+                    "increment history)")
+            if len(self.repairs) > len(self.onsets):
+                raise ValueError(
+                    f"{len(self.repairs)} repairs would revert more than "
+                    f"the {len(self.onsets)} growth increment(s) sampled")
+            if any(b <= a for a, b in zip(self.repairs, self.repairs[1:])):
+                raise ValueError(
+                    f"repair cycles must be strictly increasing: "
+                    f"{self.repairs}")
+            if self.repairs[0] <= self.onsets[-1]:
+                raise ValueError(
+                    f"repairs must start after the last onset "
+                    f"({self.onsets[-1]}), got {self.repairs}")
 
     @property
     def is_none(self) -> bool:
@@ -367,8 +437,13 @@ class FaultSpec:
 
     @property
     def is_warm(self) -> bool:
-        """True for the schedule form (mid-run fault onset)."""
+        """True for the schedule form (mid-run fault onset/repair)."""
         return bool(self.onsets)
+
+    @property
+    def event_cycles(self) -> tuple:
+        """Every mid-run epoch-swap cycle (onsets then repairs)."""
+        return self.onsets + self.repairs
 
     @property
     def needs_updown(self) -> bool:
@@ -393,6 +468,8 @@ class FaultSpec:
             tag = f"clusters:{self.num_clusters}r{self.radius}"
         if self.onsets:
             tag += "@" + ",".join(str(c) for c in self.onsets)
+        if self.repairs:
+            tag += "~" + ",".join(str(c) for c in self.repairs)
         return tag
 
     def sample(self, net: Network, vc_mode: str, lane_seed: int = 0
@@ -401,7 +478,9 @@ class FaultSpec:
         pristine spec, a cold `FaultSet` without `onsets`, a warm
         `FaultSchedule` with them.  Degraded nets stay routable at every
         epoch by the samplers' greedy validation (each warm increment
-        composes on top of the previous epoch via `base=`)."""
+        composes on top of the previous epoch via `base=`); repair
+        epochs revert increments LIFO, so each shrunken state is one the
+        growth phase already validated."""
         if self.kind == "none":
             return None
         rng = np.random.default_rng(
@@ -409,11 +488,14 @@ class FaultSpec:
         if not self.onsets:
             return self._sample_increment(net, vc_mode, rng, 1, 1, None)
         k = len(self.onsets)
-        epochs = [(0, FaultSet())]
-        cur = None
+        states = [FaultSet()]       # growth history: states[i] after onset i
+        epochs = [(0, states[0])]
         for i, c in enumerate(self.onsets):
-            cur = self._sample_increment(net, vc_mode, rng, i + 1, k, cur)
-            epochs.append((c, cur))
+            states.append(self._sample_increment(net, vc_mode, rng,
+                                                 i + 1, k, states[-1]))
+            epochs.append((c, states[-1]))
+        for j, c in enumerate(self.repairs):
+            epochs.append((c, states[k - 1 - j]))
         return FaultSchedule(tuple(epochs))
 
     def _sample_increment(self, net: Network, vc_mode: str, rng,
@@ -439,6 +521,7 @@ class FaultSpec:
         d = dataclasses.asdict(self)
         d["types"] = list(self.types)
         d["onsets"] = list(self.onsets)
+        d["repairs"] = list(self.repairs)
         return d
 
     @classmethod
@@ -480,12 +563,12 @@ class SweepAxes:
             raise ValueError("need warmup >= 0 and measure >= 1")
         cycles = self.warmup + self.measure
         for f in self.faults:
-            if f.onsets and max(f.onsets) >= cycles:
+            if f.event_cycles and max(f.event_cycles) >= cycles:
                 raise ValueError(
-                    f"fault spec {f.label!r} schedules an onset at cycle "
-                    f"{max(f.onsets)}, past the {cycles}-cycle run "
-                    f"(warmup + measure) — the epoch would never activate "
-                    f"while accounting reports its degradation")
+                    f"fault spec {f.label!r} schedules an epoch swap at "
+                    f"cycle {max(f.event_cycles)}, past the {cycles}-cycle "
+                    f"run (warmup + measure) — the epoch would never "
+                    f"activate while accounting reports its degradation")
 
     @property
     def lanes_per_grid(self) -> int:
